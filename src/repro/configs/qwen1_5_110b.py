@@ -1,0 +1,31 @@
+"""qwen1.5-110b — Qwen1.5 110B [hf:Qwen/Qwen1.5-0.5B; hf].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=49152 vocab=152064, QKV bias.
+Largest dense cell; bf16 optimizer moments + FSDP over the pod axis keep
+per-chip state within HBM at 512 chips.
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b",
+    family="dense",
+    n_layers=80,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=49152,
+    vocab_size=152064,
+    head_dim=128,
+    qkv_bias=True,
+    rope_theta=1e6,
+    act="silu",
+    gated_mlp=True,
+    norm="rms",
+    opt_state_dtype="bfloat16",
+    fsdp_over_pod=True,
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          head_dim=16, d_ff=128, vocab_size=512, remat=False)

@@ -1,0 +1,34 @@
+"""seamless-m4t-medium — encoder-decoder speech/text model
+[arXiv:2308.11596; hf].
+
+12L encoder + 12L decoder, d_model=1024 16H (kv=16) d_ff=4096
+vocab=256206.  The speech frontend is a STUB: input_specs() supplies 512
+precomputed fbank-frame embeddings as encoder input; the decoder is a
+causal LM with per-layer cross-attention (decode shapes exercise the
+decoder + cross-memory path).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,             # decoder layers
+    n_encoder_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=4096,
+    vocab_size=256206,
+    head_dim=64,
+    frontend="audio",
+    frontend_tokens=512,     # fbank frames fed to the encoder
+    act="gelu",
+    gated_mlp=False,
+    norm="layer",
+)
+
+
+def smoke() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, n_encoder_layers=2, d_model=64,
+                          n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                          vocab_size=512, frontend_tokens=8, remat=False)

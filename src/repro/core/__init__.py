@@ -1,0 +1,14 @@
+"""Core library: the paper's contribution as composable JAX/NumPy modules.
+
+  encodings  -- MBE / EN-T / bit-serial bit-weight encodings (exact)
+  bw_ref     -- BW-decomposed GEMM references (Eq. 4-6) + carry-save semantics
+  quant      -- symmetric int8 quantisation + STE (the model-facing path)
+  notation   -- executable fine-grained TPE notation, OPT1..OPT4E schedules
+  sparsity   -- NumPPs statistics (Tables II/III) and T_sync model (Eq. 7/8)
+  hwmodel    -- SMIC-28nm cost model (Tables I/V/VII, Fig. 9)
+  simulate   -- workload-level equal-area simulator (Figs. 11-14)
+"""
+from . import encodings, bw_ref, quant, notation, sparsity, hwmodel, simulate
+
+__all__ = ["encodings", "bw_ref", "quant", "notation", "sparsity",
+           "hwmodel", "simulate"]

@@ -1,0 +1,152 @@
+"""Reference (pure jax.numpy / NumPy) implementations of the paper's
+bit-weight decomposed matrix multiplication (Eq. (1)-(6)) and of the
+carry-save ("half_reduce") accumulation semantics of OPT1.
+
+These are the numerical oracles for the Pallas kernels in repro.kernels and
+for the executable-notation interpreter in repro.core.notation.
+
+Eq. (4):   C[m,n] = sum_k sum_bw SubA[m,k,bw] * B[k,n]
+Eq. (5):   C[m,n] = sum_bw shift(bw) * sum_k map(B[k,n], encode(A[m,k,bw]))
+Eq. (6):   the map() is a one-hot selection (mux) over candidate PPs.
+
+All paths are bit-exact against a plain int32 matmul for int8 operands.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import encodings as enc
+
+__all__ = [
+    "bw_matmul_np",
+    "bw_matmul_jnp",
+    "bw_matmul_onehot_np",
+    "compress_3_2",
+    "compress_4_2",
+    "half_reduce",
+    "carry_save_matmul_np",
+]
+
+
+# ---------------------------------------------------------------------------
+# Eq. (4)/(5): BW-decomposed matmul
+# ---------------------------------------------------------------------------
+
+def bw_matmul_np(a: np.ndarray, b: np.ndarray, encoding: str = "ent",
+                 bits: int = 8) -> np.ndarray:
+    """C = A @ B via the BW decomposition; exact int32 result.
+
+    a: int [M, K], b: int [K, N].  The shift is applied *after* the K
+    reduction (the OPT2 "reduction under the same bit-weight" ordering).
+    """
+    digits = enc.encode_np(a, encoding, bits)          # [M, K, BW]
+    weights = enc.digit_weights(encoding, bits)        # [BW]
+    acc = np.zeros((a.shape[0], b.shape[1]), dtype=np.int64)
+    for bw in range(digits.shape[-1]):
+        pp = digits[..., bw].astype(np.int64) @ b.astype(np.int64)  # [M, N]
+        acc += pp * weights[bw]                        # deferred shift
+    return acc.astype(np.int32)
+
+
+def bw_matmul_jnp(a, b, encoding: str = "ent", bits: int = 8):
+    """jnp version of :func:`bw_matmul_np` (int32 exact)."""
+    digits = enc.encode_jnp(a, encoding, bits)         # [M, K, BW]
+    weights = jnp.asarray(enc.digit_weights(encoding, bits), dtype=jnp.int32)
+    bw_n = digits.shape[-1]
+    acc = jnp.zeros((a.shape[0], b.shape[1]), dtype=jnp.int32)
+    bi = b.astype(jnp.int32)
+    for bw in range(bw_n):
+        pp = digits[..., bw].astype(jnp.int32) @ bi
+        acc = acc + pp * weights[bw]
+    return acc
+
+
+def bw_matmul_onehot_np(a: np.ndarray, b: np.ndarray, encoding: str = "ent",
+                        bits: int = 8) -> np.ndarray:
+    """Eq. (6): the mux-selection form.
+
+    The encoded digit selects one of the candidate partial products
+    {-2B, -B, 0, B, 2B} via a one-hot vector; the selection is expressed as a
+    dot product (enc_vec <> cand_pps), mirroring the CPPG + Mux hardware.
+    Only meaningful for radix-4 encodings (digit set {-2..2}).
+    """
+    assert encoding in ("mbe", "ent")
+    digits = enc.encode_np(a, encoding, bits)                  # [M, K, BW]
+    weights = enc.digit_weights(encoding, bits)
+    bl = b.astype(np.int64)
+    # candidate PPs per (k, n): stack of d*B for d in -2..2  -> [5, K, N]
+    cand = np.stack([d * bl for d in range(-2, 3)], axis=0)
+    onehot = np.eye(5, dtype=np.int64)[digits.astype(np.int64) + 2]  # [M,K,BW,5]
+    acc = np.zeros((a.shape[0], b.shape[1]), dtype=np.int64)
+    for bw in range(digits.shape[-1]):
+        sel = onehot[:, :, bw, :]                              # [M, K, 5]
+        # mux: PP[m,k,n] = sum_d sel[m,k,d] * cand[d,k,n]
+        pp = np.einsum("mkd,dkn->mn", sel, cand)
+        acc += pp * weights[bw]
+    return acc.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# OPT1: carry-save ("half_reduce") accumulation semantics
+# ---------------------------------------------------------------------------
+# A 3:2 compressor (carry-save adder) maps three operands to a (sum, carry)
+# pair such that a+b+c == sum + carry, with no carry *propagation* (each bit
+# position is independent -> delay independent of bit-width; paper Table V).
+# On two's complement machine integers the bitwise identity is
+#     sum   = a ^ b ^ c
+#     carry = ((a&b) | (a&c) | (b&c)) << 1
+# which holds exactly in modular (wrap-around) arithmetic.
+
+def compress_3_2(a, b, c, xp=np):
+    """3:2 compressor on integer arrays: returns (sum, carry), a+b+c == s+c."""
+    s = xp.bitwise_xor(xp.bitwise_xor(a, b), c)
+    cy = xp.left_shift(
+        xp.bitwise_or(xp.bitwise_or(xp.bitwise_and(a, b), xp.bitwise_and(a, c)),
+                      xp.bitwise_and(b, c)),
+        1,
+    )
+    return s, cy
+
+
+def compress_4_2(a, b, c, d, xp=np):
+    """4:2 compressor built from two 3:2 stages: a+b+c+d == s + cy."""
+    s1, c1 = compress_3_2(a, b, c, xp)
+    s2, c2 = compress_3_2(s1, c1, d, xp)
+    return s2, c2
+
+
+def half_reduce(terms, xp=np):
+    """Paper primitive ``half_reduce``: reduce n terms to a redundant
+    (sum, carry) pair using a compressor tree.  sum+carry == sum(terms)."""
+    terms = list(terms)
+    if not terms:
+        raise ValueError("half_reduce needs at least one term")
+    zero = terms[0] * 0
+    s, c = terms[0], zero
+    for t in terms[1:]:
+        s, c = compress_3_2(s, c, t, xp)
+    return s, c
+
+
+def carry_save_matmul_np(a: np.ndarray, b: np.ndarray, encoding: str = "ent",
+                         bits: int = 8) -> np.ndarray:
+    """OPT1 semantics: K-dimension reduction kept in (acc_s, acc_c) redundant
+    form; the single full 'add' happens only after the loop (in the paper this
+    final add lives in the SIMD vector core outside the PE array)."""
+    digits = enc.encode_np(a, encoding, bits).astype(np.int64)   # [M, K, BW]
+    weights = enc.digit_weights(encoding, bits)
+    m_dim, k_dim = a.shape
+    n_dim = b.shape[1]
+    bl = b.astype(np.int64)
+    acc_s = np.zeros((m_dim, n_dim), dtype=np.int64)
+    acc_c = np.zeros((m_dim, n_dim), dtype=np.int64)
+    for k in range(k_dim):
+        # the per-(m,k) product expressed as a sum of shifted PPs
+        pp = np.zeros((m_dim, n_dim), dtype=np.int64)
+        for bw in range(digits.shape[-1]):
+            pp += digits[:, k, bw:bw + 1] * bl[k][None, :] * weights[bw]
+        # half_reduce(acc_s, acc_c, pp) -> redundant accumulation, no carry
+        # propagation inside the loop.
+        acc_s, acc_c = compress_3_2(acc_s, acc_c, pp, np)
+    return (acc_s + acc_c).astype(np.int32)   # the deferred full "add"

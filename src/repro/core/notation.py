@@ -1,0 +1,353 @@
+"""Executable fine-grained TPE notation (paper Sec. III).
+
+The paper's first contribution is a compute-centric notation that exposes the
+bit-weight (BW) dimension of MACs and represents the reduction logic
+explicitly through hardware primitives:
+
+    encode / sparse / map / shift / half_reduce / add / accumulate / sync
+
+This module makes that notation *executable and checkable*:
+
+  * :class:`Schedule` describes where each primitive lives in the loop nest
+    (which loops are spatial vs temporal, whether BW is spatial or temporal,
+    whether the reduction is a full accumulate or a redundant half_reduce,
+    whether sparse skipping of encoded digits is enabled, and whether the
+    encoder is shared across a PE column).
+
+  * :func:`validate` enforces the legality rules derived in Sec. III-B:
+      - ``map`` must remain in the innermost position (non-commutative mux);
+      - ``shift`` may move outside K (it is independent of N and K) but must
+        stay inside/at the BW loop;
+      - ``encode`` is independent of N and may be hoisted above N_P;
+      - ``half_reduce`` must sit at the reduction level it reduces;
+      - a spatial BW loop cannot be reordered outside K without being made
+        temporal first (OPT2's transformation).
+
+  * :func:`execute` interprets a schedule on real integer matrices and
+    returns the exact GEMM result together with cycle/occupancy statistics,
+    so every OPT variant is verified against ``A @ B`` bit-exactly.
+
+  * :func:`component_census` counts the hardware component instances implied
+    by a schedule for a given array geometry -- the input to the area/energy
+    model in :mod:`repro.core.hwmodel`.
+
+The six schedules of the paper are provided: BASELINE (TPU-like parallel
+MAC), OPT1, OPT2, OPT3, OPT4C, OPT4E.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import encodings as enc
+from .bw_ref import compress_3_2
+
+__all__ = [
+    "Schedule", "ArrayGeometry", "SCHEDULES", "validate", "execute",
+    "component_census", "ExecResult",
+]
+
+
+# ---------------------------------------------------------------------------
+# Schedule description
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Placement/ordering choices for the MAC micro-architecture."""
+    name: str
+    # BW handling: "spatial" (parallel PP lanes inside the PE, classic MAC)
+    # or "temporal" (BW iterated in time, OPT2+) -- Sec. IV-B.
+    bw: str = "spatial"
+    # Reduction: "accumulate" (full adder + accumulator inside PE) or
+    # "half_reduce" (redundant carry-save pair, deferred add) -- Sec. IV-A.
+    reduction: str = "accumulate"
+    # Shift placement: "pe" (a shifter per PP lane inside the PE) or "simd"
+    # (single deferred shift outside the array) -- Sec. IV-B.
+    shift_at: str = "pe"
+    # Sparse skipping of zero *encoded digits* (not raw bit-slices) -- Sec. IV-C.
+    sparse: bool = False
+    # Encoder shared per PE column (hoisted above N_P) -- Sec. IV-D.
+    shared_encoder: bool = False
+    # PEs per group sharing one compressor tree + output DFFs (OPT4E).
+    group: int = 1
+    # Operand encoding for PP generation.
+    encoding: str = "ent"
+
+    @property
+    def deferred_add(self) -> bool:
+        return self.reduction == "half_reduce"
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayGeometry:
+    """PE array geometry: M_P columns x N_P rows, K_P unrolled operands."""
+    m_p: int = 32
+    n_p: int = 32
+    k_p: int = 4
+
+
+SCHEDULES: Dict[str, Schedule] = {
+    "baseline": Schedule("baseline"),
+    "opt1": Schedule("opt1", reduction="half_reduce"),
+    "opt2": Schedule("opt2", bw="temporal", reduction="half_reduce",
+                     shift_at="simd"),
+    "opt3": Schedule("opt3", bw="temporal", reduction="half_reduce",
+                     shift_at="simd", sparse=True),
+    "opt4c": Schedule("opt4c", bw="temporal", reduction="half_reduce",
+                      shift_at="simd", sparse=True, shared_encoder=True),
+    "opt4e": Schedule("opt4e", bw="temporal", reduction="half_reduce",
+                      shift_at="simd", sparse=True, shared_encoder=True,
+                      group=4),
+}
+
+
+# ---------------------------------------------------------------------------
+# Legality (Sec. III-B)
+# ---------------------------------------------------------------------------
+
+def validate(s: Schedule) -> List[str]:
+    """Return a list of legality violations (empty == legal)."""
+    errs = []
+    if s.bw not in ("spatial", "temporal"):
+        errs.append(f"bw must be spatial|temporal, got {s.bw}")
+    if s.reduction not in ("accumulate", "half_reduce"):
+        errs.append(f"reduction must be accumulate|half_reduce")
+    if s.shift_at not in ("pe", "simd"):
+        errs.append("shift must live in the PE or the SIMD core")
+    # Deferring the shift to the SIMD core requires every PP accumulated in a
+    # PE to carry the *same* bit-weight, i.e. BW must be a temporal loop
+    # outside K (Sec. IV-B: "keep the shift within the BW loop").
+    if s.shift_at == "simd" and s.bw != "temporal":
+        errs.append("shift can only be deferred if BW is temporalised "
+                    "(a spatial-BW PE mixes bit-weights in one cycle)")
+    # Sparse skipping serialises the encoded digits in time; with a spatial
+    # BW the zero PP lanes still occupy hardware, so skipping needs
+    # temporal BW (Sec. IV-C).
+    if s.sparse and s.bw != "temporal":
+        errs.append("sparse digit skipping requires temporal BW")
+    # The encoder can be hoisted above N_P because encode() is independent of
+    # N (Eq. (6)); but sharing it across the column only removes work if the
+    # PEs consume *encoded* digits serially, i.e. sparse mode.
+    if s.shared_encoder and not s.sparse:
+        errs.append("shared encoder requires the sparse serial PP stream")
+    # Deferring the accumulate's final add is only correct when the in-loop
+    # reduction is associative over the redundant pair -- i.e. half_reduce.
+    if s.group > 1 and not s.sparse:
+        errs.append("PE grouping shares one compressor among serial PP "
+                    "lanes; requires sparse mode")
+    # map() is always innermost by construction in execute(); nothing to check.
+    return errs
+
+
+# ---------------------------------------------------------------------------
+# Execution (exact semantics + cycle statistics)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ExecResult:
+    c: np.ndarray                   # exact GEMM result (int64)
+    cycles: int                     # total array cycles (with sync stalls)
+    busy_cycles: np.ndarray         # per-column busy cycles
+    sync_events: int
+    pp_processed: int               # non-zero PPs actually processed
+    pp_total: int                   # K * BW digit slots
+
+    @property
+    def utilization(self) -> float:
+        return float(self.busy_cycles.mean() / max(self.cycles, 1))
+
+
+def _digit_planes(a: np.ndarray, s: Schedule) -> Tuple[np.ndarray, np.ndarray]:
+    d = enc.encode_np(a, s.encoding)                   # [M, K, BW]
+    w = enc.digit_weights(s.encoding)
+    return d.astype(np.int64), w.astype(np.int64)
+
+
+def execute(s: Schedule, a: np.ndarray, b: np.ndarray,
+            geom: ArrayGeometry = ArrayGeometry(4, 4, 2)) -> ExecResult:
+    """Interpret the schedule on int matrices a [M,K], b [K,N].
+
+    The interpreter mirrors the paper's loop nests (Figs. 5-8): output tiles
+    of M_P x N_P are produced by the PE array; K is consumed K_P operands per
+    cycle (dense) or one non-zero encoded digit per cycle per PE lane
+    (sparse), with column-level synchronisation.
+    """
+    errs = validate(s)
+    if errs:
+        raise ValueError(f"illegal schedule {s.name}: {errs}")
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    digits, weights = _digit_planes(a, s)              # [M,K,BW], [BW]
+    bw_n = digits.shape[-1]
+
+    c = np.zeros((m, n), dtype=np.int64)
+    busy = np.zeros(geom.m_p, dtype=np.int64)
+    total_cycles = 0
+    sync_events = 0
+    pp_proc = 0
+
+    # --- dense schedules: every (k, bw) slot costs a cycle slice -----------
+    if not s.sparse:
+        if s.bw == "spatial":
+            # classic MAC: BW lanes in parallel, one k per cycle per PE.
+            # acc kept either in an accumulator or a redundant pair.
+            for mt0 in range(0, m, geom.m_p):
+                for nt0 in range(0, n, geom.n_p):
+                    ms = slice(mt0, min(mt0 + geom.m_p, m))
+                    ns = slice(nt0, min(nt0 + geom.n_p, n))
+                    acc_s = np.zeros((ms.stop - ms.start, ns.stop - ns.start),
+                                     dtype=np.int64)
+                    acc_c = np.zeros_like(acc_s)
+                    for kk in range(k):
+                        pp = np.zeros_like(acc_s)
+                        for bw in range(bw_n):   # spatial PP lanes
+                            pp += (digits[ms, kk, bw:bw + 1]
+                                   * b[kk][None, ns] * weights[bw])
+                        if s.deferred_add:
+                            acc_s, acc_c = compress_3_2(acc_s, acc_c, pp, np)
+                        else:
+                            acc_s = acc_s + pp     # full add + accumulate
+                    c[ms, ns] = acc_s + acc_c
+                    cyc = k
+                    total_cycles += cyc
+                    busy += cyc
+                    pp_proc += (ms.stop - ms.start) * k * bw_n
+        else:
+            # OPT2: BW temporal outer loop; K split into K_P (spatial) x K_T.
+            for mt0 in range(0, m, geom.m_p):
+                for nt0 in range(0, n, geom.n_p):
+                    ms = slice(mt0, min(mt0 + geom.m_p, m))
+                    ns = slice(nt0, min(nt0 + geom.n_p, n))
+                    out = np.zeros((ms.stop - ms.start, ns.stop - ns.start),
+                                   dtype=np.int64)
+                    for bw in range(bw_n):
+                        acc_s = np.zeros_like(out)
+                        acc_c = np.zeros_like(out)
+                        for kt0 in range(0, k, geom.k_p):
+                            kp = slice(kt0, min(kt0 + geom.k_p, k))
+                            # K_P PPs of identical bit-weight: no shifters.
+                            pp = digits[ms, kp, bw] @ b[kp][:, ns]
+                            acc_s, acc_c = compress_3_2(acc_s, acc_c, pp, np)
+                        # deferred single shift + add in the SIMD core
+                        out += (acc_s + acc_c) * weights[bw]
+                    c[ms, ns] = out
+                    cyc = bw_n * ((k + geom.k_p - 1) // geom.k_p)
+                    total_cycles += cyc
+                    busy += cyc
+                    pp_proc += (ms.stop - ms.start) * k * bw_n
+        return ExecResult(c, total_cycles, busy, sync_events, pp_proc,
+                          m * k * bw_n)
+
+    # --- sparse schedules (OPT3/OPT4): skip zero encoded digits ------------
+    # Columns of the PE array share the multiplicand A (one matrix row per
+    # column); each column serially consumes the non-zero (k, bw) digit
+    # pairs, `group` digits per cycle (OPT4E).  Columns synchronise after
+    # each K_T block (here: after each full K reduction).
+    for mt0 in range(0, m, geom.m_p):
+        rows = range(mt0, min(mt0 + geom.m_p, m))
+        for nt0 in range(0, n, geom.n_p):
+            ns = slice(nt0, min(nt0 + geom.n_p, n))
+            col_cycles = np.zeros(geom.m_p, dtype=np.int64)
+            for ci, mm in enumerate(rows):
+                nz_k, nz_bw = np.nonzero(digits[mm])   # sparse() primitive
+                npp = len(nz_k)
+                pp_proc += npp * 1
+                # serial PP accumulation through a 3-2 compressor
+                acc_s = np.zeros(ns.stop - ns.start, dtype=np.int64)
+                acc_c = np.zeros_like(acc_s)
+                for kk, bw in zip(nz_k, nz_bw):
+                    pp = digits[mm, kk, bw] * b[kk, ns] * weights[bw]
+                    acc_s, acc_c = compress_3_2(acc_s, acc_c, pp, np)
+                c[mm, ns] = acc_s + acc_c
+                col_cycles[ci] = -(-npp // s.group)    # ceil(npp / group)
+            t_sync = int(col_cycles.max()) if len(list(rows)) else 0
+            total_cycles += t_sync                     # sync() barrier
+            busy += col_cycles
+            sync_events += 1
+    return ExecResult(c, total_cycles, busy, sync_events, pp_proc,
+                      m * k * bw_n)
+
+
+# ---------------------------------------------------------------------------
+# Component census (feeds the area/energy model)
+# ---------------------------------------------------------------------------
+
+def component_census(s: Schedule, geom: ArrayGeometry,
+                     acc_bits: int = 32, op_bits: int = 8) -> Dict[str, float]:
+    """Hardware component instances implied by a schedule, per PE array.
+
+    Counts follow Figs. 5-8: e.g. OPT1 removes the per-PE full adder and
+    accumulator in favour of one 4-2 compressor tree plus ~M_P*N_P/K SIMD
+    adders outside the array; OPT4 hoists encoders out of the PEs entirely.
+    Widths are attached so the cost model can price each instance.
+    """
+    n_pe = geom.m_p * geom.n_p
+    bw_n = enc.num_digits(s.encoding)
+    pp_bits = 2 * op_bits               # product width before accumulation
+    census: Dict[str, float] = {}
+
+    def add(name, count, width):
+        census[f"{name}@{width}"] = census.get(f"{name}@{width}", 0) + count
+
+    if s.bw == "spatial":
+        # classic parallel MAC front end: BW encoder+CPPG+mux+shifter lanes.
+        add("encoder", n_pe * bw_n, 3)
+        add("cppg_mux", n_pe * bw_n, op_bits)
+        add("shifter", n_pe * bw_n, pp_bits)
+        if s.reduction == "accumulate":
+            add("compressor", n_pe, pp_bits)            # PP tree only
+            add("full_adder", n_pe, pp_bits)
+            add("accumulator", n_pe, acc_bits)
+            add("dff_out", n_pe, acc_bits)
+        else:                                           # OPT1
+            add("compressor", n_pe, acc_bits)           # tree absorbs acc
+            add("dff_out", n_pe, 2 * acc_bits)          # redundant pair
+            add("simd_adder", max(1, n_pe // max(geom.k_p, 1)), acc_bits)
+        add("dff_in", n_pe, 2 * op_bits)                # A and B operands
+        return census
+
+    # temporal-BW designs: PPs in a PE share one bit-weight -> no shifter.
+    if not s.sparse:                                    # OPT2
+        add("encoder", n_pe * geom.k_p, 3)
+        add("cppg_mux", n_pe * geom.k_p, op_bits)
+        add("compressor", n_pe, pp_bits + 3)            # K_P-input tree
+        add("dff_out", n_pe, 2 * (pp_bits + 3))
+        add("dff_in", n_pe, 2 * op_bits * geom.k_p)     # widened input
+        add("simd_shifter", max(1, n_pe // max(geom.k_p, 1)), acc_bits)
+        add("simd_adder", max(1, n_pe // max(geom.k_p, 1)), acc_bits)
+        return census
+
+    # sparse designs
+    if not s.shared_encoder:                            # OPT3
+        add("encoder", n_pe * geom.k_p, 3)
+        add("sparse_encoder", n_pe, bw_n * geom.k_p)
+        add("cppg_mux", n_pe, op_bits)
+        add("compressor3_2", n_pe, pp_bits)
+        add("dff_in", n_pe, 2 * op_bits * geom.k_p)
+        add("dff_out", n_pe, 2 * pp_bits)
+        add("simd_shifter", max(1, n_pe // max(geom.k_p, 1)), acc_bits)
+        add("simd_adder", max(1, n_pe // max(geom.k_p, 1)), acc_bits)
+        return census
+
+    # OPT4C / OPT4E: encoder + sparse encoder shared per column (M_P of them)
+    add("encoder", geom.m_p * geom.k_p, 3)
+    add("sparse_encoder", geom.m_p, bw_n * geom.k_p)
+    add("cppg_mux", n_pe, op_bits)
+    if s.group == 1:                                    # OPT4C
+        add("compressor3_2", n_pe, pp_bits)
+        add("dff_out", n_pe, 2 * pp_bits)
+        add("dff_in", n_pe, 2 + op_bits)                # sel(2b) + B(8b)
+    else:                                               # OPT4E
+        n_grp = n_pe // s.group
+        add("compressor6_2", n_grp, pp_bits)
+        add("dff_out", n_grp, 2 * pp_bits)              # shared DFFs
+        add("dff_in", n_pe, 2 + op_bits)
+    add("simd_shifter", max(1, n_pe // max(geom.k_p, 1)), acc_bits)
+    add("simd_adder", max(1, n_pe // max(geom.k_p, 1)), acc_bits)
+    return census

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot spot (quantised GEMM).
+
+  quant_gemm -- baseline tiled INT8 GEMM (the parallel-MAC reference)
+  bw_gemm    -- bit-weight decomposed GEMM with digit-plane block skipping
+  ops        -- public jitted wrappers (padding, planning, masks)
+  ref        -- pure-jnp oracles
+"""
+from . import ops, ref  # noqa: F401
+from .ops import bw_gemm, quant_gemm, plan_operand, encode_planes  # noqa: F401

@@ -1,0 +1,69 @@
+"""Pallas kernel for the paper's step-1 'encode' primitive: int8 operands
+-> EN-T radix-4 digit planes, fused with the per-block occupancy mask.
+
+On the TPE this is the (shared) encoder in front of the PE columns
+(OPT4's hoisted encoder); on TPU it is the operand-preparation pass that
+runs once per weight matrix (amortized) or per activation tile (fused
+ahead of bw_gemm).  The kernel is pure VPU bit arithmetic — no MXU — and
+writes BW digit planes plus a per-(plane, block) any-nonzero flag so the
+GEMM kernel can predicate MXU passes without re-reading the digits.
+
+The encoding is branch-free EN-T (sign-magnitude canonical radix-4):
+    m     = |x|;  sign = x < 0 ? -1 : +1
+    t_bw  = ((m >> 2bw) & 3) + carry_bw
+    d_bw  = t==3 ? -1 : (t==4 ? 0 : t);   carry_{bw+1} = t >= 3
+with the carry chain unrolled over the (static) BW=4 planes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["ent_encode"]
+
+_BW = 4  # int8 radix-4
+
+
+def _kernel(x_ref, d_ref, m_ref):
+    x = x_ref[...].astype(jnp.int32)
+    sign = jnp.where(x < 0, -1, 1)
+    m = jnp.abs(x)
+    carry = jnp.zeros_like(m)
+    for bw in range(_BW):
+        t = ((m >> (2 * bw)) & 3) + carry
+        d = jnp.where(t == 3, -1, jnp.where(t == 4, 0, t))
+        carry = (t >= 3).astype(jnp.int32)
+        d = (sign * d).astype(jnp.int8)
+        d_ref[bw, ...] = d
+        m_ref[bw, 0, 0] = jnp.any(d != 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k",
+                                             "interpret"))
+def ent_encode(x, *, block_m: int = 128, block_k: int = 128,
+               interpret: bool = False):
+    """int8 [M, K] -> (digits int8 [BW, M, K], mask bool [BW, M/bm, K/bk]).
+
+    Shapes must divide the blocks (ops.plan_operand pads first).
+    """
+    m, k = x.shape
+    assert m % block_m == 0 and k % block_k == 0, (x.shape, block_m, block_k)
+    grid = (m // block_m, k // block_k)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, block_k), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((_BW, block_m, block_k), lambda i, j: (0, i, j)),
+            pl.BlockSpec((_BW, 1, 1), lambda i, j: (0, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((_BW, m, k), jnp.int8),
+            jax.ShapeDtypeStruct((_BW, m // block_m, k // block_k),
+                                 jnp.bool_),
+        ],
+        interpret=interpret,
+    )(x)

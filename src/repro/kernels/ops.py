@@ -1,0 +1,153 @@
+"""Jitted public wrappers around the Pallas kernels: padding, plane
+encoding, occupancy masks, weight planning (magnitude-ordered row
+permutation) and the quantised-linear entry point used by the models.
+
+On non-TPU backends the wrappers run the kernels in interpret mode (the
+kernel body executes in Python on CPU) so every code path is testable here;
+on TPU the same calls compile to MXU programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encodings as enc
+from . import bw_gemm as _bw
+from . import quant_gemm as _qg
+from . import ref as kref
+
+__all__ = ["PlannedOperand", "encode_planes", "plane_block_mask",
+           "plan_operand", "bw_gemm", "quant_gemm", "plane_density"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def encode_planes(a, encoding: str = "ent"):
+    """int8 A [M, K] -> digit planes int8 [BW, M, K]."""
+    return kref.encode_planes_ref(a, encoding)
+
+
+def plane_block_mask(digits, block_m: int, block_k: int):
+    """bool [BW, M/bm, K/bk]: True where a plane block has any non-zero digit."""
+    bw, m, k = digits.shape
+    d = digits.reshape(bw, m // block_m, block_m, k // block_k, block_k)
+    return (d != 0).any(axis=(2, 4))
+
+
+def plane_density(digits, block_m: int, block_k: int) -> dict:
+    """Fraction of non-skippable blocks per plane (perf introspection)."""
+    mask = np.asarray(plane_block_mask(digits, block_m, block_k))
+    return {f"plane{i}": float(mask[i].mean()) for i in range(mask.shape[0])}
+
+
+@dataclasses.dataclass
+class PlannedOperand:
+    """A pre-encoded multiplicand ready for bw_gemm.
+
+    row_perm sorts rows by high-plane occupancy so that non-zero high-weight
+    digits cluster into few row blocks (turning the paper's element-level PP
+    sparsity into MXU-block sparsity).  inv_perm restores output order.
+    """
+    digits: jax.Array           # int8 [BW, M_pad, K_pad]
+    mask: jax.Array             # bool [BW, M_pad/bm, K_pad/bk]
+    row_perm: np.ndarray        # [M_pad]
+    inv_perm: np.ndarray        # [M_pad]
+    m: int                      # original M
+    k: int
+    block_m: int
+    block_k: int
+    encoding: str
+
+
+def plan_operand(a_int8, encoding: str = "ent", block_m: int = 128,
+                 block_k: int = 256, reorder_rows: bool = True,
+                 encode_impl: str = "ref") -> PlannedOperand:
+    """Encode + (optionally) magnitude-order the multiplicand rows.
+
+    a_int8: int8 [M, K] (e.g. a transposed weight matrix).
+    encode_impl: 'ref' (jnp oracle) or 'kernel' (the fused Pallas EN-T
+    encoder, repro.kernels.encode — interpret mode off-TPU).
+    """
+    a = jnp.asarray(a_int8, jnp.int8)
+    m, k = a.shape
+    a = _pad_to(_pad_to(a, block_m, 0), block_k, 1)
+    if reorder_rows:
+        # rows with any |value| >= 43 need plane 3 (EN-T: 2*(1+4+16)=42 is the
+        # largest 3-plane-representable magnitude); sort rows by their
+        # high-plane digit count so those rows pack into few blocks.
+        d0 = kref.encode_planes_ref(a, encoding)
+        hi = np.asarray((d0[-1] != 0).sum(axis=1) * 1000 +
+                        (d0[-2] != 0).sum(axis=1))
+        row_perm = np.argsort(-hi, kind="stable").astype(np.int32)
+    else:
+        row_perm = np.arange(a.shape[0], dtype=np.int32)
+    inv_perm = np.argsort(row_perm).astype(np.int32)
+    a_sorted = a[row_perm]
+    if encode_impl == "kernel" and encoding == "ent":
+        from . import encode as _enc_kernel
+        digits, mask = _enc_kernel.ent_encode(
+            a_sorted, block_m=block_m, block_k=block_k,
+            interpret=_interpret())
+    else:
+        digits = kref.encode_planes_ref(a_sorted, encoding)
+        mask = plane_block_mask(digits, block_m, block_k)
+    return PlannedOperand(digits, mask, row_perm, inv_perm, m, k,
+                          block_m, block_k, encoding)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret",
+                                             "block_m", "block_k", "radix"))
+def _bw_gemm_padded(planned_digits, mask, b, inv_perm, *, block_n,
+                    interpret, block_m, block_k, radix):
+    out = _bw.bw_gemm(planned_digits, b, mask, block_m=block_m,
+                      block_n=block_n, block_k=block_k, radix=radix,
+                      interpret=interpret)
+    return out[inv_perm]
+
+
+def bw_gemm(planned: PlannedOperand, b, *, block_n: int = 128,
+            interpret: Optional[bool] = None):
+    """C = A @ B with A pre-planned.  b: int8 [K, N] -> int32 [M, N]."""
+    if interpret is None:
+        interpret = _interpret()
+    k, n = b.shape
+    assert k == planned.k, (k, planned.k)
+    b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
+                block_n, 1)
+    out = _bw_gemm_padded(
+        planned.digits, planned.mask, b, jnp.asarray(planned.inv_perm),
+        block_n=block_n, interpret=bool(interpret),
+        block_m=planned.block_m, block_k=planned.block_k,
+        radix=enc.radix(planned.encoding))
+    return out[:planned.m, :n]
+
+
+def quant_gemm(a, b, *, block_m: int = 128, block_n: int = 128,
+               block_k: int = 256, interpret: Optional[bool] = None):
+    """Baseline int8 GEMM (pads to block multiples, slices back)."""
+    if interpret is None:
+        interpret = _interpret()
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    a = _pad_to(_pad_to(jnp.asarray(a, jnp.int8), block_m, 0), block_k, 1)
+    b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), block_k, 0), block_n, 1)
+    out = _qg.quant_gemm(a, b, block_m=block_m, block_n=block_n,
+                         block_k=block_k, interpret=bool(interpret))
+    return out[:m, :n]

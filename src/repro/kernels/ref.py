@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for the Pallas kernels in this package.
+
+Every kernel in repro.kernels must match its oracle bit-exactly (integer
+accumulators) across the shape/dtype sweeps in tests/test_kernels_*.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encodings as enc
+
+__all__ = ["quant_gemm_ref", "bw_gemm_ref", "bw_gemm_masked_ref",
+           "encode_planes_ref"]
+
+
+def quant_gemm_ref(a, b):
+    """int8 x int8 -> int32 GEMM oracle (the parallel-MAC baseline)."""
+    return jax.lax.dot_general(
+        a.astype(jnp.int32), b.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+def encode_planes_ref(a, encoding: str = "ent"):
+    """Encode int8 A [M, K] into digit planes [BW, M, K] (int8, {-2..2})."""
+    d = enc.encode_jnp(a, encoding)           # [M, K, BW]
+    return jnp.moveaxis(d, -1, 0)             # [BW, M, K]
+
+
+def bw_gemm_ref(digits, b, encoding: str = "ent"):
+    """BW-decomposed GEMM oracle: C = sum_bw (digits[bw] @ B) * radix**bw.
+
+    digits: int8 [BW, M, K]; b: int8 [K, N].  Exact int32 result equal to
+    quant_gemm_ref(decode(digits), b).
+    """
+    w = enc.digit_weights(encoding)
+    acc = jnp.zeros((digits.shape[1], b.shape[1]), jnp.int32)
+    for bw in range(digits.shape[0]):
+        pp = jax.lax.dot_general(
+            digits[bw].astype(jnp.int32), b.astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        acc = acc + pp * int(w[bw])
+    return acc
+
+
+def bw_gemm_masked_ref(digits, b, mask, block_m: int, block_k: int,
+                       encoding: str = "ent"):
+    """Oracle for the *block-skipping* kernel: blocks whose mask is False are
+    treated as zero (the kernel skips their MXU work entirely).
+
+    mask: bool [BW, M//block_m, K//block_k].
+    """
+    bwn, m, k = digits.shape
+    mask_full = jnp.repeat(jnp.repeat(mask, block_m, axis=1), block_k, axis=2)
+    masked = jnp.where(mask_full, digits, 0)
+    return bw_gemm_ref(masked, b, encoding)

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax device query.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh", "require_devices"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod 16x16 ('data','model') or 2-pod 2x16x16
+    ('pod','data','model')."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh (elastic restarts pass the recomputed shape)."""
+    return jax.make_mesh(shape, axes)
+
+
+def require_devices(n: int) -> None:
+    have = len(jax.devices())
+    if have < n:
+        raise RuntimeError(
+            f"mesh needs {n} devices but only {have} present. For the "
+            f"dry-run set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} BEFORE importing jax (launch/dryrun.py does this).")

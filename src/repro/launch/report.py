@@ -1,0 +1,80 @@
+"""Render the dry-run / hillclimb JSON records into the EXPERIMENTS.md
+roofline tables.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.report results/dryrun
+    PYTHONPATH=src python -m repro.launch.report results/dryrun --md
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import List
+
+
+def load_records(path: str) -> List[dict]:
+    recs = []
+    files = [path] if path.endswith(".json") else \
+        sorted(glob.glob(os.path.join(path, "*.json")))
+    for f in files:
+        data = json.load(open(f))
+        recs.extend(data if isinstance(data, list) else [data])
+    return recs
+
+
+def one_line(rec: dict, md: bool = False) -> str:
+    sep = " | " if md else "  "
+    lead = "| " if md else ""
+    tail = " |" if md else ""
+    if rec["status"] != "ok":
+        cells = [rec["arch"], rec["shape"], rec.get("mesh", "?"), "SKIP",
+                 rec.get("reason", "")[:46], "", "", "", "", "", ""]
+        return lead + sep.join(str(c) for c in cells) + tail
+    r = rec["roofline"]
+    m = rec["memory"]
+    args_gb = (m["argument_bytes"] or 0) / 2**30
+    tmp_gb = (m["temp_bytes"] or 0) / 2**30
+    cells = [
+        rec["arch"], rec["shape"], rec["mesh"], rec["kind"],
+        f"{r['t_compute_s']:.4f}", f"{r['t_memory_s']:.4f}",
+        f"{r['t_collective_s']:.4f}", r["bottleneck"],
+        f"{r['useful_ratio']:.2f}", f"{100 * r['roofline_fraction']:.2f}%",
+        f"{args_gb:.1f}/{tmp_gb:.1f}",
+    ]
+    return lead + sep.join(str(c) for c in cells) + tail
+
+
+HEADER = ["arch", "shape", "mesh", "kind", "t_comp(s)", "t_mem(s)",
+          "t_coll(s)", "bound", "useful", "roofline", "arg/tmp GiB"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    args = ap.parse_args(argv)
+    recs = load_records(args.path)
+    if args.mesh != "both":
+        recs = [r for r in recs if r.get("mesh", args.mesh) == args.mesh]
+    recs.sort(key=lambda r: (r["shape"], r["arch"], r.get("mesh", "")))
+    if args.md:
+        print("| " + " | ".join(HEADER) + " |")
+        print("|" + "---|" * len(HEADER))
+    else:
+        print("  ".join(HEADER))
+    for rec in recs:
+        print(one_line(rec, args.md))
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    skip = sum(1 for r in recs if r["status"] == "skipped")
+    print(f"\n{ok} ok, {skip} skipped, {len(recs) - ok - skip} failed",
+          file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,168 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Per the assignment:
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+``cost_analysis()`` supplies HLO FLOPs/bytes.  collective_bytes is parsed
+from the optimized HLO text: the summed operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "Roofline", "collective_bytes", "roofline_from_compiled",
+           "model_flops"]
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+HW = {"peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW, "ici_bw": ICI_BW}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.  f32[16,128]{1,0}  or  bf16[8,4096,512]
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                   "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes appearing in a type string
+    (handles tuple types by summing)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output sizes of collective ops in optimized HLO, by op kind.
+
+    HLO lines look like:
+      %ag = bf16[8,512]{1,0} all-gather(%x), replica_groups=...
+    The lhs type is the op's (gathered) output; for a byte-moved metric we
+    use max(output, sum-of-operand) sizes per instruction, which upper-
+    bounds the payload each device injects into the interconnect.
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for op in _COLLECTIVE_OPS:
+            # match ' op(' or ' op-start(' but not fusions mentioning it
+            if f" {op}(" in s or f" {op}-start(" in s:
+                eq = s.split("=", 1)
+                if len(eq) != 2:
+                    continue
+                rhs = eq[1]
+                # output type: between '=' and the op name
+                head, _, tail = rhs.partition(f" {op}")
+                out_bytes = _shape_bytes(head)
+                # operand types appear at the call site inside the parens
+                opnd_bytes = _shape_bytes(tail.split("(", 1)[-1]
+                                          .split("),", 1)[0])
+                out[op] += max(out_bytes, opnd_bytes)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_op: Dict[str, int]
+    chips: int
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops: float = 0.0
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs, both per-chip (cost_analysis reports the
+        per-device SPMD program; calibrated 2*M*N*K per dot on this backend).
+        > 1 means the 6*N*D estimate exceeds compiled compute (e.g. enc-dec
+        archs whose N is embedding-dominated); < 1 flags remat/redundancy."""
+        if not self.flops:
+            return 0.0
+        return (self.model_flops / self.chips) / self.flops
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak compute achievable at the modeled bound:
+        (model-useful compute time) / (dominant term)."""
+        if self.t_bound <= 0:
+            return 0.0
+        t_useful = (self.model_flops / self.chips) / PEAK_FLOPS
+        return t_useful / self.t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.coll_bytes,
+            "coll_by_op": self.coll_by_op, "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def roofline_from_compiled(cost: dict, hlo_text: str, chips: int,
+                           model_fl: float = 0.0) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    cb = float(sum(coll.values()))
+    # cost_analysis flops/bytes are per-device program totals under SPMD
+    t_comp = flops / PEAK_FLOPS
+    t_mem = byts / HBM_BW
+    t_coll = cb / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    return Roofline(flops, byts, cb, coll, chips, t_comp, t_mem, t_coll,
+                    bottleneck, model_fl)
+
+
+def model_flops(cfg, global_batch: int, seq_len: int,
+                kind: str = "train") -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); D = tokens.
+
+    train: fwd+bwd = 6ND.  prefill: 2ND.  decode: 2N per token * batch.
+    """
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * global_batch * seq_len
+    if kind == "prefill":
+        return 2.0 * n * global_batch * seq_len
+    if kind == "decode":
+        return 2.0 * n * global_batch            # one token per sequence
+    raise ValueError(kind)

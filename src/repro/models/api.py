@@ -1,0 +1,136 @@
+"""Unified per-family model API.
+
+Every architecture exposes the same four entry points so the training loop,
+serving loop, and multi-pod dry-run are architecture-agnostic:
+
+    init(key, cfg)                         -> boxed param tree
+    forward(params, batch, cfg)            -> (logits [B,T,V], aux_loss)
+    init_decode(cfg, batch, max_len)       -> boxed decode-state tree
+    decode_step(params, tokens, pos, state, cfg) -> (logits [B,1,V], state)
+
+`batch` is a dict: {"tokens": int32 [B,T], "labels": int32 [B,T]} plus
+"frontend": [B,F,d_model] for vlm/audio archs (precomputed patch/frame
+embeddings per the assignment's modality-stub rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as T
+from . import rwkv6 as R
+from . import hymba as H
+from . import encdec as E
+
+__all__ = ["ModelAPI", "get_api", "loss_fn", "frontend_len"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    family: str
+    init: Callable
+    forward: Callable            # (params, batch, cfg) -> (logits, aux)
+    init_decode: Callable        # (cfg, batch, max_len) -> boxed state
+    decode_step: Callable        # (params, tokens, pos, state, cfg)
+
+
+def frontend_len(cfg) -> int:
+    return cfg.frontend_tokens if cfg.frontend else 0
+
+
+# --- decoder-only transformer families (dense / moe / vlm) -----------------
+
+def _lm_forward(params, batch, cfg):
+    return T.lm_apply(params, batch["tokens"], cfg,
+                      frontend_embeds=batch.get("frontend"))
+
+
+def _lm_init_decode(cfg, batch, max_len):
+    return T.init_caches(cfg, batch, max_len, jnp.dtype(cfg.dtype))
+
+
+# --- rwkv -------------------------------------------------------------------
+
+def _rwkv_forward(params, batch, cfg):
+    return R.rwkv_lm_apply(params, batch["tokens"], cfg)
+
+
+def _rwkv_init_decode(cfg, batch, max_len):
+    del max_len  # O(1) recurrent state
+    return R.stacked_rwkv_state(cfg, batch)
+
+
+# --- hymba ------------------------------------------------------------------
+
+def _hymba_forward(params, batch, cfg):
+    return H.hymba_lm_apply(params, batch["tokens"], cfg)
+
+
+def _hymba_init_decode(cfg, batch, max_len):
+    del max_len  # rolling-window cache, O(window)
+    return H.init_hymba_caches(cfg, batch, jnp.dtype(cfg.dtype))
+
+
+# --- encoder-decoder ---------------------------------------------------------
+
+def _encdec_forward(params, batch, cfg):
+    return E.encdec_apply(params, batch["tokens"], cfg,
+                          frontend_embeds=batch["frontend"])
+
+
+def _encdec_init_decode(cfg, batch, max_len):
+    return E.init_encdec_caches(cfg, batch, max_len, cfg.frontend_tokens,
+                                jnp.dtype(cfg.dtype))
+
+
+_FAMILIES: Dict[str, ModelAPI] = {}
+for fam in ("dense", "moe", "vlm"):
+    _FAMILIES[fam] = ModelAPI(fam, T.lm_init, _lm_forward, _lm_init_decode,
+                              T.lm_decode_step)
+_FAMILIES["rwkv"] = ModelAPI("rwkv", R.rwkv_lm_init, _rwkv_forward,
+                             _rwkv_init_decode, R.rwkv_lm_decode_step)
+_FAMILIES["hybrid"] = ModelAPI("hybrid", H.hymba_lm_init, _hymba_forward,
+                               _hymba_init_decode, H.hymba_lm_decode_step)
+_FAMILIES["encdec"] = ModelAPI("encdec", E.encdec_init, _encdec_forward,
+                               _encdec_init_decode, E.encdec_decode_step)
+
+
+def get_api(cfg) -> ModelAPI:
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r} "
+                         f"(have {sorted(_FAMILIES)})") from None
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch, cfg, api: Optional[ModelAPI] = None):
+    """Next-token cross entropy (fp32 logits), masking any modality prefix.
+
+    Returns (loss, metrics dict).  `labels` are already shifted by the data
+    pipeline (labels[t] = tokens[t+1]); positions with label < 0 are masked.
+    """
+    api = api or get_api(cfg)
+    logits, aux = api.forward(params, batch, cfg)
+    labels = batch["labels"]
+    f = frontend_len(cfg) if cfg.family == "vlm" else 0
+    mask = (labels >= 0)
+    if f:
+        prefix = jnp.arange(labels.shape[1])[None, :] >= f
+        mask = mask & prefix
+    labels = jnp.maximum(labels, 0)
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    loss = nll.sum() / denom
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": denom.astype(jnp.float32)}

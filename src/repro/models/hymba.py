@@ -1,0 +1,269 @@
+"""Hymba (arXiv:2411.13676): hybrid-head blocks where attention heads and a
+selective-SSM branch process the same input in parallel, outputs fused.
+
+Adaptations recorded in DESIGN.md SSArch-applicability:
+  * attention uses a sliding window (cfg.attn_window) for every layer (the
+    published model keeps 3 global-attention layers; the window makes the
+    arch sub-quadratic end-to-end, which the long_500k cell requires);
+  * meta tokens (128 learned prefix tokens) are included;
+  * decode keeps a rolling-window KV cache (ring buffer) + SSM state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import Boxed, box, constrain
+from . import layers as L
+from . import attention as A
+from . import ssm as S
+from .transformer import norm_init, norm_apply, mlp_init, mlp_apply, \
+    stack_layer_params
+
+__all__ = ["hymba_lm_init", "hymba_lm_apply", "hymba_lm_decode_step",
+           "init_hymba_caches", "HYMBA_WINDOW", "N_META"]
+
+HYMBA_WINDOW = 2048
+N_META = 128
+
+
+def block_init(key, cfg, param_dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": norm_init(cfg, param_dtype),
+        "attn": A.attn_init(k1, cfg, param_dtype),
+        "ssm": S.ssm_init(k2, cfg, param_dtype),
+        "beta_attn": box(jnp.ones((cfg.d_model,), param_dtype),
+                         ("embed_nofsdp",)),
+        "beta_ssm": box(jnp.ones((cfg.d_model,), param_dtype),
+                        ("embed_nofsdp",)),
+        "ln2": norm_init(cfg, param_dtype),
+        "mlp": mlp_init(k3, cfg, param_dtype),
+    }
+
+
+def _windowed(q, k, v, window: int, positions):
+    """Dense attention with causal + sliding-window mask (train/prefill for
+    moderate T; prefill_32k+ uses the chunked path)."""
+    b, t, h, d = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(d)
+    qi = positions[:, None, :, None]
+    ki = positions[:, None, None, :]
+    mask = (ki <= qi) & (ki > qi - window)
+    scores = jnp.where(mask, scores, A.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def _windowed_chunked(q, k, v, window: int, chunk: int):
+    """Sliding-window attention computed over kv chunks within the window.
+
+    For each q chunk only the kv chunks intersecting [q_start-window, q_end]
+    are touched: cost O(T * window), independent of T^2.
+    """
+    b, t, h, d = q.shape
+    n_chunks = t // chunk
+    win_chunks = window // chunk + 1
+    qb = q.reshape(b, n_chunks, chunk, h, d)
+    kb = k.reshape(b, n_chunks, chunk, h, d)
+    vb = v.reshape(b, n_chunks, chunk, h, d)
+    scale = 1.0 / np.sqrt(d)
+
+    def q_block(qi, qblk):
+        def kv_step(carry, off):
+            acc, m, l = carry
+            ki_idx = qi - off                       # off in [0, win_chunks)
+            valid_chunk = ki_idx >= 0
+            ki_safe = jnp.maximum(ki_idx, 0)
+            kblk = jax.lax.dynamic_index_in_dim(kb, ki_safe, 1, False)
+            vblk = jax.lax.dynamic_index_in_dim(vb, ki_safe, 1, False)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            qpos = qi * chunk + jnp.arange(chunk)[:, None]
+            kpos = ki_safe * chunk + jnp.arange(chunk)[None, :]
+            mask = (kpos <= qpos) & (kpos > qpos - window) & valid_chunk
+            s = jnp.where(mask, s, A.NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, h, chunk, d), jnp.float32)
+        m0 = jnp.full((b, h, chunk), A.NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(win_chunks))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 1, 2)
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.arange(n_chunks), jnp.moveaxis(qb, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, t, h, d).astype(q.dtype)
+
+
+def _attn_branch(p, x, cfg, positions, dtype):
+    b, t, _ = x.shape
+    hd = cfg.head_dim
+    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_planes)
+    k = L.dense_apply(p["wk"], x, dtype, cfg.quant_planes)
+    v = L.dense_apply(p["wv"], x, dtype, cfg.quant_planes)
+    q = q.reshape(b, t, cfg.n_heads, hd)
+    k = k.reshape(b, t, cfg.n_kv_heads, hd)
+    v = v.reshape(b, t, cfg.n_kv_heads, hd)
+    q, k = L.rope(q, k, positions, hd, cfg.rope_theta)
+    k = A._repeat_kv(k, cfg.n_heads)
+    v = A._repeat_kv(v, cfg.n_heads)
+    if t > cfg.attn_chunk and t % cfg.attn_chunk == 0:
+        out = _windowed_chunked(q, k, v, HYMBA_WINDOW, cfg.attn_chunk)
+    else:
+        out = _windowed(q, k, v, HYMBA_WINDOW, positions)
+    out = out.reshape(b, t, cfg.n_heads * hd)
+    return L.dense_apply(p["wo"], out, dtype, cfg.quant_planes), (k, v)
+
+
+def block_apply(p, x, cfg, positions, ssm_state, dtype=jnp.bfloat16):
+    h = norm_apply(cfg, p["ln1"], x)
+    a_out, _ = _attn_branch(p["attn"], h, cfg, positions, dtype)
+    s_out, new_ssm = S.ssm_apply(p["ssm"], h, cfg, ssm_state, dtype)
+    fused = 0.5 * (a_out * p["beta_attn"].astype(dtype)
+                   + s_out * p["beta_ssm"].astype(dtype))
+    x = x + fused
+    x = x + mlp_apply(p["mlp"], norm_apply(cfg, p["ln2"], x), cfg, dtype)
+    return x, new_ssm
+
+
+def hymba_lm_init(key, cfg, param_dtype=None):
+    param_dtype = param_dtype or jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                              param_dtype),
+        "meta": box(L.truncated_normal(ks[3], (N_META, cfg.d_model), 1.0,
+                                       param_dtype), (None, "embed_nofsdp")),
+        "blocks": stack_layer_params(
+            ks[1], cfg.n_layers, lambda k: block_init(k, cfg, param_dtype)),
+        "final_norm": norm_init(cfg, param_dtype),
+        "lm_head": L.dense_init(ks[2], cfg.d_model, cfg.padded_vocab,
+                                ("embed", "vocab"), param_dtype=param_dtype),
+    }
+
+
+def hymba_lm_apply(params, tokens, cfg, with_meta: bool = True):
+    dtype = jnp.dtype(cfg.dtype)
+    b, t = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    n_meta = 0
+    if with_meta:
+        meta = jnp.broadcast_to(params["meta"].astype(dtype)[None],
+                                (b, N_META, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+        n_meta = N_META
+    tt = t + n_meta
+    positions = jnp.broadcast_to(jnp.arange(tt)[None], (b, tt))
+    from repro.parallel.sharding import unbox
+    ssm0 = unbox(_stacked_ssm(cfg, b))
+
+    def body(carry, scanned):
+        h = carry
+        layer_params, st = scanned
+        h, st_new = block_apply(layer_params, h, cfg, positions, st, dtype)
+        return h, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, (params["blocks"], ssm0),
+                        unroll=cfg.scan_unroll)
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = L.dense_apply(params["lm_head"], x[:, n_meta:], dtype,
+                           cfg.quant_planes)
+    logits = constrain(logits, "batch", "seq_inner", "vocab")
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def _stacked_ssm(cfg, batch):
+    one = S.init_ssm_state(cfg, batch)
+    return jax.tree.map(
+        lambda bx: Boxed(jnp.broadcast_to(bx.value[None], (cfg.n_layers,)
+                                          + bx.value.shape).copy(),
+                         ("layers",) + tuple(bx.axes)),
+        one, is_leaf=lambda x: isinstance(x, Boxed))
+
+
+def init_hymba_caches(cfg, batch: int, dtype=jnp.bfloat16):
+    """Rolling-window KV cache (+ positions ring) and SSM state per layer."""
+    hd = cfg.head_dim
+    w = HYMBA_WINDOW
+    kv = {
+        "k": jnp.zeros((cfg.n_layers, batch, w, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, w, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((cfg.n_layers, batch, w), -1, jnp.int32),
+    }
+    kv_axes = {"k": ("layers", "batch", None, "kv_heads", "head_dim"),
+               "v": ("layers", "batch", None, "kv_heads", "head_dim"),
+               "pos": ("layers", "batch", None)}
+    boxed_kv = {k: Boxed(v, kv_axes[k]) for k, v in kv.items()}
+    return {"kv": boxed_kv, "ssm": _stacked_ssm(cfg, batch)}
+
+
+def _decode_attn(p, x, cfg, ck, cv, cpos, pos, dtype):
+    """x: [B,1,d]; ring-buffer cache of width W."""
+    b = x.shape[0]
+    hd = cfg.head_dim
+    w = ck.shape[1]
+    positions = pos[:, None]
+    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_planes) \
+        .reshape(b, 1, cfg.n_heads, hd)
+    k = L.dense_apply(p["wk"], x, dtype, cfg.quant_planes) \
+        .reshape(b, 1, cfg.n_kv_heads, hd)
+    v = L.dense_apply(p["wv"], x, dtype, cfg.quant_planes) \
+        .reshape(b, 1, cfg.n_kv_heads, hd)
+    q, k = L.rope(q, k, positions, hd, cfg.rope_theta)
+    slot = pos % w
+    bidx = jnp.arange(b)
+    ck = ck.at[bidx, slot].set(k[:, 0])
+    cv = cv.at[bidx, slot].set(v[:, 0])
+    cpos = cpos.at[bidx, slot].set(pos)
+    kk = A._repeat_kv(ck, cfg.n_heads)
+    vv = A._repeat_kv(cv, cfg.n_heads)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    valid = (cpos[:, None, None, :] >= 0) & \
+        (cpos[:, None, None, :] <= pos[:, None, None, None]) & \
+        (cpos[:, None, None, :] > pos[:, None, None, None] - HYMBA_WINDOW)
+    scores = jnp.where(valid, scores, A.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv).reshape(b, 1,
+                                                           cfg.n_heads * hd)
+    return L.dense_apply(p["wo"], out, dtype, cfg.quant_planes), ck, cv, cpos
+
+
+def hymba_lm_decode_step(params, tokens, pos, caches, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_apply(params["embed"], tokens, dtype)
+
+    def body(h, scanned):
+        layer_params, kv, ssm_st = scanned
+        hn = norm_apply(cfg, layer_params["ln1"], h)
+        a_out, ck, cv, cpos = _decode_attn(layer_params["attn"], hn, cfg,
+                                           kv["k"], kv["v"], kv["pos"],
+                                           pos, dtype)
+        s_out, ssm_new = S.ssm_apply(layer_params["ssm"], hn, cfg, ssm_st,
+                                     dtype)
+        fused = 0.5 * (a_out * layer_params["beta_attn"].astype(dtype)
+                       + s_out * layer_params["beta_ssm"].astype(dtype))
+        h = h + fused
+        h = h + mlp_apply(layer_params["mlp"],
+                          norm_apply(cfg, layer_params["ln2"], h), cfg, dtype)
+        return h, ({"k": ck, "v": cv, "pos": cpos}, ssm_new)
+
+    x, (kv_new, ssm_new) = jax.lax.scan(
+        body, x, (params["blocks"], caches["kv"], caches["ssm"]),
+        unroll=cfg.scan_unroll)
+    x = norm_apply(cfg, params["final_norm"], x)
+    logits = L.dense_apply(params["lm_head"], x, dtype, cfg.quant_planes)
+    return logits, {"kv": kv_new, "ssm": ssm_new}

@@ -1,0 +1,209 @@
+"""Shared neural-net building blocks (pure functional JAX).
+
+Every init_* returns a pytree of sharding.Boxed leaves (value + logical
+axes); apply functions consume the unboxed value tree.  Compute runs in
+cfg.dtype (bf16 by default), norms and softmax in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import Boxed, box, constrain
+from repro.core import quant as quantlib
+from repro.core import bw_ref
+
+__all__ = [
+    "dense_init", "dense_apply", "rmsnorm_init", "rmsnorm_apply",
+    "layernorm_init", "layernorm_apply", "embed_init", "embed_apply",
+    "rope", "activation", "QuantState",
+]
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    stddev = scale / np.sqrt(max(shape[0], 1))
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) \
+        .astype(dtype) * stddev
+
+
+# ---------------------------------------------------------------------------
+# Dense / projection layers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, axes: Tuple[str, str],
+               bias: bool = False, param_dtype=jnp.float32, scale: float = 1.0):
+    p = {"w": box(truncated_normal(key, (d_in, d_out), scale, param_dtype),
+                  axes)}
+    if bias:
+        p["b"] = box(jnp.zeros((d_out,), param_dtype), (axes[1],))
+    return p
+
+
+def dense_apply(p, x, dtype=jnp.bfloat16, quant_planes: int = 0):
+    """y = x @ w (+ b).
+
+    quant_planes > 0 routes through the paper's BW-decomposed quantised
+    matmul semantics (exact int8 digit-plane GEMM, per-tensor act scale and
+    per-channel weight scale), with a straight-through gradient.  On TPU the
+    integer GEMM is the Pallas bw_gemm kernel; the jnp path here is its
+    bit-exact oracle and keeps the same plane-bounded quantisation grid.
+    """
+    w = p["w"]
+    if quant_planes:
+        y = _bw_quant_matmul(x, w, quant_planes, dtype)
+    else:
+        y = jax.lax.dot_general(x.astype(dtype), w.astype(dtype),
+                                (((x.ndim - 1,), (0,)), ((), ())))
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+import functools
+
+# Implementation selector for the quantized path:
+#   "planes" -- bit-exact EN-T digit-plane GEMM (the Pallas kernel's jnp
+#               oracle; 4 int8 dots).  Default; used by tests/training.
+#   "int8"   -- single int8 dot_general with the same plane-bounded
+#               quantization grid: the cost the fused TPU bw_gemm kernel
+#               pays *before* plane skipping.  Used by the dry-run so
+#               cost_analysis reflects the kernelized technique instead of
+#               the 4-dot oracle.
+QUANT_IMPL = "planes"
+
+
+@functools.lru_cache(maxsize=None)
+def _make_bw_quant_matmul(planes: int, dtype_name: str, impl_kind: str):
+    """custom_vjp quantized matmul specialized on (planes, dtype):
+    exact EN-T digit-plane int GEMM forward, straight-through backward."""
+    out_dtype = jnp.dtype(dtype_name)
+
+    def impl(x, w):
+        qx, sx = quantlib.quantize_to_planes(x.astype(jnp.float32), planes)
+        qw, sw = quantlib.quantize_to_planes(w.astype(jnp.float32), planes,
+                                             axis=0)
+        x2 = qx.reshape(-1, qx.shape[-1])
+        if impl_kind == "int8":
+            acc = jax.lax.dot_general(
+                x2.astype(jnp.int8), qw,
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        else:
+            acc = bw_ref.bw_matmul_jnp(x2, qw)  # exact digit-plane int GEMM
+        acc = acc.reshape(*qx.shape[:-1], qw.shape[-1])
+        return (acc.astype(jnp.float32) * (sx * sw)).astype(out_dtype)
+
+    @jax.custom_vjp
+    def f(x, w):
+        return impl(x, w)
+
+    def fwd(x, w):
+        return impl(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        gf = g.astype(jnp.float32)
+        xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+        dx = (gf.reshape(-1, gf.shape[-1]) @ w.astype(jnp.float32).T
+              ).reshape(x.shape).astype(x.dtype)
+        dw = (xf.T @ gf.reshape(-1, gf.shape[-1])).astype(w.dtype)
+        return dx, dw
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _bw_quant_matmul(x, w, planes, dtype):
+    return _make_bw_quant_matmul(int(planes), jnp.dtype(dtype).name,
+                                 QUANT_IMPL)(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, param_dtype=jnp.float32):
+    return {"scale": box(jnp.ones((d,), param_dtype), ("embed_nofsdp",))}
+
+
+def rmsnorm_apply(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_init(d: int, param_dtype=jnp.float32):
+    return {"scale": box(jnp.ones((d,), param_dtype), ("embed_nofsdp",)),
+            "bias": box(jnp.zeros((d,), param_dtype), ("embed_nofsdp",))}
+
+
+def layernorm_apply(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, param_dtype=jnp.float32):
+    return {"table": box(
+        truncated_normal(key, (vocab, d), scale=float(np.sqrt(d)),
+                         dtype=param_dtype),
+        ("vocab", "embed_nofsdp"))}
+
+
+def embed_apply(p, tokens, dtype=jnp.bfloat16):
+    out = jnp.take(p["table"].astype(dtype), tokens, axis=0)
+    return constrain(out, "batch", "seq", None)
+
+
+def embed_logits(p, x, dtype=jnp.bfloat16):
+    """Tied decode head: x [.., d] @ table.T -> [.., vocab]."""
+    logits = jax.lax.dot_general(
+        x.astype(dtype), p["table"].astype(dtype),
+        (((x.ndim - 1,), (1,)), ((), ())))
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE + activations
+# ---------------------------------------------------------------------------
+
+def rope(q, k, positions, head_dim: int, theta: float = 1e4):
+    """Rotary embeddings.  q,k: [B, T, H, D]; positions: [B, T] int32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,T,half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+
+    def rot(x):
+        x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+        return jnp.concatenate([x1 * cos - x2 * sin,
+                                x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    return rot(q), rot(k)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":          # Nemotron-4: squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+@dataclasses.dataclass
+class QuantState:
+    planes: int = 0

@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with capacity-bounded scatter dispatch.
+
+Top-k routing, Switch-style load-balancing auxiliary loss, and an
+O(tokens * d) scatter/gather dispatch (no [tokens, E, C] one-hot einsum).
+Experts are sharded over the 'model' mesh axis (expert parallelism) or,
+for few-expert configs like Grok-1 (8e), over d_ff (tensor parallelism) --
+cfg.moe_shard selects.
+
+Distributed dispatch (cfg.moe_dispatch_groups, DESIGN.md §6 / EXPERIMENTS
+§Perf): with the default single group, the dispatch scatter's indices are
+global, so under pjit the partitioner must all-gather the token and
+dispatch buffers across the data axis (~0.5 TB/layer moved for Grok-1).
+Setting moe_dispatch_groups = DP-shard count splits tokens into
+data-aligned groups, each with its own LOCAL capacity slots: scatter,
+expert GEMMs, and combine all become shard-local (an all-to-all-free
+2D (data x expert/mlp) MoE — the pure-GSPMD equivalent of the
+DeepSpeed/MaxText local dispatch).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import box, constrain
+from . import layers as L
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg, param_dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    exp_axis = "expert" if cfg.moe_shard == "expert" else None
+    mlp_axis = "mlp" if cfg.moe_shard == "mlp" else None
+    # FSDP the d_model dim of expert weights in BOTH shard modes: for
+    # moe_shard='mlp' this 2D-shards each expert (data x model) — without
+    # it the per-layer fp32 dW all-reduce dominates the step (§Perf HC1).
+    emb_axis = "embed"
+
+    def w(k, shape, axes):
+        return box(L.truncated_normal(k, shape, 1.0, param_dtype)
+                   / np.sqrt(shape[1]), axes)
+
+    p = {
+        "router": {"w": box(L.truncated_normal(ks[0], (d, e), 1.0,
+                                               param_dtype), ("embed_nofsdp",
+                                                              None))},
+        "w_up": w(ks[1], (e, d, f), (exp_axis, emb_axis, mlp_axis)),
+        "w_down": w(ks[2], (e, f, d), (exp_axis, mlp_axis, emb_axis)),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = w(ks[3], (e, d, f), (exp_axis, emb_axis, mlp_axis))
+    return p
+
+
+def _dispatch(xf, eidx, gate, e: int, k: int, cap: int, dtype):
+    """Tokens [T,d] + routing [T,k] -> (buf [e,cap,d], dest, keep, wgt)."""
+    t, d = xf.shape
+    flat_e = eidx.reshape(-1)                                 # [T*k]
+    tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts                      # exclusive
+    ranks_sorted = jnp.arange(tk) - starts[flat_e[order]]
+    ranks = jnp.zeros((tk,), jnp.int32).at[order].set(
+        ranks_sorted.astype(jnp.int32))
+    keep = ranks < cap                                        # dropped beyond C
+    tok_idx = jnp.arange(tk) // k
+    dest = jnp.where(keep, flat_e * cap + ranks, e * cap)     # dump slot
+    buf = jnp.zeros((e * cap + 1, d), dtype)
+    buf = buf.at[dest].set(xf[tok_idx].astype(dtype), mode="drop")
+    wgt = jnp.where(keep, gate.reshape(-1), 0.0).astype(dtype)
+    return buf[:e * cap].reshape(e, cap, d), dest, wgt
+
+
+def _combine(out, dest, wgt, n_tok: int, k: int, dtype):
+    """Expert outputs [e,cap,d] -> token outputs [T,d]."""
+    e_cap = out.shape[0] * out.shape[1]
+    out_flat = out.reshape(e_cap, -1)
+    vals = jnp.take(out_flat, jnp.minimum(dest, e_cap - 1), axis=0)
+    tok_idx = jnp.arange(dest.shape[0]) // k
+    return jnp.zeros((n_tok, out.shape[-1]), dtype).at[tok_idx].add(
+        vals * wgt[:, None])
+
+
+def moe_apply(p, x, cfg, dtype=jnp.bfloat16):
+    """x: [B, T, d] -> (y [B, T, d], aux_loss scalar)."""
+    b, t, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    g = max(int(getattr(cfg, "moe_dispatch_groups", 1)), 1)
+    xf = x.reshape(-1, d)
+    n_tok = xf.shape[0]
+    assert n_tok % g == 0, (n_tok, g)
+    cap = int(np.ceil(n_tok / g * k / e * cfg.capacity_factor))
+
+    logits = (xf.astype(jnp.float32)
+              @ p["router"]["w"].astype(jnp.float32))        # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)                      # [T, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch): E * sum_e f_e * P_e -------------
+    me = probs.mean(axis=0)                                   # mean prob/expert
+    one_hot_top1 = jax.nn.one_hot(eidx[:, 0], e, dtype=jnp.float32)
+    ce = one_hot_top1.mean(axis=0)                            # dispatch frac
+    aux = cfg.router_aux_coef * e * jnp.sum(me * ce)
+
+    # with moe_shard='mlp' the expert dim stays replicated (d_ff is the
+    # sharded axis); naming it 'expert' would double-map the mesh axis.
+    exp_ax = "expert" if cfg.moe_shard == "expert" else None
+    mlp_ax = "mlp" if cfg.moe_shard == "mlp" else None
+    act = L.activation(cfg.act)
+
+    if g == 1:
+        buf, dest, wgt = _dispatch(xf, eidx, gate, e, k, cap, dtype)
+        buf = constrain(buf, exp_ax, "capacity", None)
+        up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dtype))
+        if cfg.gated_mlp:
+            gt = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dtype))
+            h = act(gt) * up
+        else:
+            h = act(up)
+        h = constrain(h, exp_ax, "capacity", mlp_ax)
+        out = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dtype))
+        out = constrain(out, exp_ax, "capacity", None)
+        y = _combine(out, dest, wgt, n_tok, k, dtype)
+        return y.reshape(b, t, d), aux
+
+    # ---- local (per-DP-shard) dispatch: groups aligned with the data axis -
+    tg = n_tok // g
+    xg = xf.reshape(g, tg, d)
+    eg = eidx.reshape(g, tg, k)
+    gg = gate.reshape(g, tg, k)
+    buf, dest, wgt = jax.vmap(
+        lambda xi, ei, gi: _dispatch(xi, ei, gi, e, k, cap, dtype))(
+        xg, eg, gg)                                           # [g,e,cap,d]
+    buf = constrain(buf, "batch", exp_ax, "capacity", None)
+    up = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dtype))
+    if cfg.gated_mlp:
+        gt = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dtype))
+        h = act(gt) * up
+    else:
+        h = act(up)
+    h = constrain(h, "batch", exp_ax, "capacity", mlp_ax)
+    out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dtype))
+    out = constrain(out, "batch", exp_ax, "capacity", None)
+    y = jax.vmap(lambda oi, di, wi: _combine(oi, di, wi, tg, k, dtype))(
+        out, dest, wgt)                                       # [g,tg,d]
+    return y.reshape(b, t, d), aux

@@ -1,0 +1,251 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay, plus squared-ReLU channel mixing.
+
+Recurrence (per head, state S in R^{hd x hd}):
+    y_t   = r_t . (diag(u) k_t^T v_t + S_t)
+    S_t+1 = diag(w_t) S_t + k_t^T v_t
+with w_t = exp(-exp(w0 + lora_w(ddlerp(x_t, x_{t-1}))))  (data-dependent).
+
+Sub-quadratic: O(T) scan for train/prefill, O(1) state update for decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import Boxed, box, constrain
+from . import layers as L
+
+__all__ = ["rwkv_init", "rwkv_apply", "rwkv_decode_step", "init_rwkv_state",
+           "rwkv_lm_init", "rwkv_lm_apply", "rwkv_lm_decode_step"]
+
+_LORA_MIX = 32
+_LORA_W = 64
+_N_MIX = 5  # w, k, v, r, g
+
+
+def _heads(cfg):
+    hs = cfg.rwkv_head_size
+    return cfg.d_model // hs, hs
+
+
+def timemix_init(key, cfg, param_dtype=jnp.float32):
+    d = cfg.d_model
+    n_h, hs = _heads(cfg)
+    ks = jax.random.split(key, 12)
+
+    def dense(k, din, dout, axes):
+        return L.dense_init(k, din, dout, axes, param_dtype=param_dtype)
+
+    return {
+        "mu_x": box(jnp.zeros((d,), param_dtype), ("embed_nofsdp",)),
+        "mu_base": box(jnp.zeros((_N_MIX, d), param_dtype),
+                       (None, "embed_nofsdp")),
+        "mix_w1": dense(ks[0], d, _N_MIX * _LORA_MIX, ("embed", None)),
+        "mix_w2": box(L.truncated_normal(ks[1], (_N_MIX, _LORA_MIX, d), 1.0,
+                                         param_dtype), (None, None, "embed_nofsdp")),
+        "w0": box(jnp.zeros((d,), param_dtype) - 0.5, ("embed_nofsdp",)),
+        "w_lora1": dense(ks[2], d, _LORA_W, ("embed", None)),
+        "w_lora2": dense(ks[3], _LORA_W, d, (None, "embed_nofsdp")),
+        # head-count dims (40) do not divide a 16-way model axis; keep the
+        # tiny u/state tensors replicated (the big projections shard on
+        # their flat d_model-multiples instead).
+        "u": box(jnp.zeros((n_h, hs), param_dtype), (None, None)),
+        "wr": dense(ks[4], d, d, ("embed", "heads")),
+        "wk": dense(ks[5], d, d, ("embed", "heads")),
+        "wv": dense(ks[6], d, d, ("embed", "heads")),
+        "wg": dense(ks[7], d, d, ("embed", "heads")),
+        "wo": dense(ks[8], d, d, ("heads", "embed")),
+        "ln_x_scale": box(jnp.ones((d,), param_dtype), ("embed_nofsdp",)),
+        "ln_x_bias": box(jnp.zeros((d,), param_dtype), ("embed_nofsdp",)),
+    }
+
+
+def _ddlerp(p, x, x_prev, dtype):
+    """Data-dependent token-shift interpolation -> the 5 mixed inputs."""
+    sx = x_prev - x                                    # [B,T,d]
+    base = x + sx * p["mu_x"].astype(dtype)
+    lo = jnp.tanh(L.dense_apply(p["mix_w1"], base, dtype))
+    lo = lo.reshape(*lo.shape[:-1], _N_MIX, _LORA_MIX)
+    mix = jnp.einsum("btnr,nrd->btnd", lo, p["mix_w2"].astype(dtype))
+    mu = p["mu_base"].astype(dtype)[None, None] + mix  # [B,T,5,d]
+    return x[:, :, None, :] + sx[:, :, None, :] * mu   # [B,T,5,d]
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """r,k,v,w: [B,T,H,hs]; u: [H,hs]; state: [B,H,hs,hs] -> (y, state)."""
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # [B,H,hs]
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)     # outer product
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       s + u[None, :, :, None] * kv)
+        s = w_t[..., None] * s + kv
+        return s, y
+
+    rs, ks, vs, ws = (jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, (rs, ks, vs, ws))
+    return jnp.moveaxis(ys, 0, 1), state               # [B,T,H,hs]
+
+
+def timemix_apply(p, x, cfg, x_prev_last, state, dtype=jnp.bfloat16):
+    """x: [B,T,d]; x_prev_last: [B,d] (token before x[:,0]); state: wkv."""
+    b, t, d = x.shape
+    n_h, hs = _heads(cfg)
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1]], axis=1)
+    mixed = _ddlerp(p, x.astype(jnp.float32), x_prev.astype(jnp.float32),
+                    jnp.float32)
+    xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(_N_MIX)]
+    r = L.dense_apply(p["wr"], xr.astype(dtype), dtype, cfg.quant_planes)
+    k = L.dense_apply(p["wk"], xk.astype(dtype), dtype, cfg.quant_planes)
+    v = L.dense_apply(p["wv"], xv.astype(dtype), dtype, cfg.quant_planes)
+    g = jax.nn.silu(L.dense_apply(p["wg"], xg.astype(dtype), dtype,
+                                  cfg.quant_planes))
+    # data-dependent decay, computed in fp32 for stability
+    wlo = jnp.tanh(L.dense_apply(p["w_lora1"], xw, jnp.float32))
+    wln = p["w0"].astype(jnp.float32) + \
+        L.dense_apply(p["w_lora2"], wlo, jnp.float32)
+    w = jnp.exp(-jnp.exp(wln))                          # (0, 1)
+
+    def split_heads(z):
+        return z.reshape(b, t, n_h, hs)
+    r, k, v, w = map(split_heads, (r.astype(jnp.float32),
+                                   k.astype(jnp.float32),
+                                   v.astype(jnp.float32), w))
+    r = constrain(r, "batch", "seq", None, None)
+    y, state = _wkv_scan(r, k, v, w, p["u"].astype(jnp.float32), state)
+    # per-head group norm
+    mu = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = y.reshape(b, t, d) * p["ln_x_scale"].astype(jnp.float32) + \
+        p["ln_x_bias"].astype(jnp.float32)
+    y = (y.astype(dtype) * g)
+    out = L.dense_apply(p["wo"], y, dtype, cfg.quant_planes)
+    return out, x[:, -1], state
+
+
+def chanmix_init(key, cfg, param_dtype=jnp.float32):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": box(jnp.full((d,), 0.5, param_dtype), ("embed_nofsdp",)),
+        "mu_r": box(jnp.full((d,), 0.5, param_dtype), ("embed_nofsdp",)),
+        "wk": L.dense_init(ks[0], d, f, ("embed", "mlp"),
+                           param_dtype=param_dtype),
+        "wv": L.dense_init(ks[1], f, d, ("mlp", "embed"),
+                           param_dtype=param_dtype),
+        "wr": L.dense_init(ks[2], d, d, ("embed", "embed_nofsdp"),
+                           param_dtype=param_dtype),
+    }
+
+
+def chanmix_apply(p, x, cfg, x_prev_last, dtype=jnp.bfloat16):
+    x_prev = jnp.concatenate([x_prev_last[:, None, :], x[:, :-1]], axis=1)
+    mu_k = p["mu_k"].astype(dtype)
+    mu_r = p["mu_r"].astype(dtype)
+    xk = x + (x_prev - x) * mu_k
+    xr = x + (x_prev - x) * mu_r
+    k = L.dense_apply(p["wk"], xk, dtype, cfg.quant_planes)
+    k = jnp.square(jax.nn.relu(k))
+    k = constrain(k, "batch", "seq_inner", "mlp")
+    kv = L.dense_apply(p["wv"], k, dtype, cfg.quant_planes)
+    return jax.nn.sigmoid(L.dense_apply(p["wr"], xr, dtype,
+                                        cfg.quant_planes)) * kv, x[:, -1]
+
+
+def rwkv_init(key, cfg, param_dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": L.layernorm_init(cfg.d_model, param_dtype),
+            "tm": timemix_init(k1, cfg, param_dtype),
+            "ln2": L.layernorm_init(cfg.d_model, param_dtype),
+            "cm": chanmix_init(k2, cfg, param_dtype)}
+
+
+def rwkv_apply(p, x, cfg, state, dtype=jnp.bfloat16):
+    """One block over a full sequence.  state: {'shift_tm','shift_cm','wkv'}"""
+    h, shift_tm, wkv = timemix_apply(
+        p["tm"], L.layernorm_apply(p["ln1"], x), cfg, state["shift_tm"],
+        state["wkv"], dtype)
+    x = x + h
+    h, shift_cm = chanmix_apply(p["cm"], L.layernorm_apply(p["ln2"], x), cfg,
+                                state["shift_cm"], dtype)
+    return x + h, {"shift_tm": shift_tm, "shift_cm": shift_cm, "wkv": wkv}
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32):
+    n_h, hs = _heads(cfg)
+    d = cfg.d_model
+    return {
+        "shift_tm": box(jnp.zeros((batch, d), jnp.bfloat16),
+                        ("batch", None)),
+        "shift_cm": box(jnp.zeros((batch, d), jnp.bfloat16),
+                        ("batch", None)),
+        "wkv": box(jnp.zeros((batch, n_h, hs, hs), dtype),
+                   ("batch", None, None, None)),
+    }
+
+
+# --------------------------- full LM ---------------------------------------
+
+def rwkv_lm_init(key, cfg, param_dtype=None):
+    param_dtype = param_dtype or jnp.dtype(cfg.param_dtype)
+    from .transformer import stack_layer_params
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": L.embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                              param_dtype),
+        "ln_in": L.layernorm_init(cfg.d_model, param_dtype),
+        "blocks": stack_layer_params(
+            ks[1], cfg.n_layers, lambda k: rwkv_init(k, cfg, param_dtype)),
+        "ln_out": L.layernorm_init(cfg.d_model, param_dtype),
+        "head": L.dense_init(ks[2], cfg.d_model, cfg.padded_vocab,
+                             ("embed", "vocab"), param_dtype=param_dtype),
+    }
+
+
+def _stacked_state(cfg, batch):
+    one = init_rwkv_state(cfg, batch)
+    return jax.tree.map(
+        lambda b: Boxed(jnp.broadcast_to(b.value[None], (cfg.n_layers,)
+                                         + b.value.shape).copy(),
+                        ("layers",) + tuple(b.axes)),
+        one, is_leaf=lambda x: isinstance(x, Boxed))
+
+
+def stacked_rwkv_state(cfg, batch):
+    """Public: per-layer stacked recurrent state (boxed)."""
+    return _stacked_state(cfg, batch)
+
+
+def rwkv_lm_apply(params, tokens, cfg, state=None, return_state=False):
+    dtype = jnp.dtype(cfg.dtype)
+    b, t = tokens.shape
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    x = L.layernorm_apply(params["ln_in"], x)
+    if state is None:
+        from repro.parallel.sharding import unbox
+        state = unbox(_stacked_state(cfg, b))
+
+    def body(h, scanned):
+        layer_params, st = scanned
+        h, st = rwkv_apply(layer_params, h, cfg, st, dtype)
+        return h, st
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, new_state = jax.lax.scan(body_fn, x, (params["blocks"], state),
+                                unroll=cfg.scan_unroll)
+    x = L.layernorm_apply(params["ln_out"], x)
+    logits = L.dense_apply(params["head"], x, dtype, cfg.quant_planes)
+    logits = constrain(logits, "batch", "seq_inner", "vocab")
+    if return_state:
+        return logits, new_state
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def rwkv_lm_decode_step(params, tokens, pos, state, cfg):
+    """Single-token decode: state carries shift + wkv; O(1) in context len."""
+    logits, new_state = rwkv_lm_apply(params, tokens, cfg, state,
+                                      return_state=True)
+    return logits, new_state

@@ -1,0 +1,113 @@
+"""Selective state-space (Mamba-style) sequence mixer used by the Hymba
+hybrid heads.  O(T) scan for train/prefill, O(1) recurrent decode.
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t        (per channel)
+    y_t = C_t . h_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import box, constrain
+from . import layers as L
+
+__all__ = ["ssm_init", "ssm_apply", "ssm_decode_step", "init_ssm_state"]
+
+
+def _d_inner(cfg):
+    return cfg.ssm_expand * cfg.d_model
+
+
+def ssm_init(key, cfg, param_dtype=jnp.float32):
+    d, di, n = cfg.d_model, _d_inner(cfg), cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * di, ("embed", "mlp"),
+                                param_dtype=param_dtype),
+        "conv_w": box(L.truncated_normal(ks[1], (cfg.ssm_conv, di), 4.0,
+                                         param_dtype), (None, "mlp")),
+        "x_to_dt": L.dense_init(ks[2], di, dt_rank, ("mlp", None),
+                                param_dtype=param_dtype),
+        "dt_proj": L.dense_init(ks[3], dt_rank, di, (None, "mlp"), bias=True,
+                                param_dtype=param_dtype),
+        "x_to_bc": L.dense_init(ks[4], di, 2 * n, ("mlp", None),
+                                param_dtype=param_dtype),
+        "a_log": box(jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=param_dtype), (di, n)).copy()),
+            ("mlp", "state")),
+        "d_skip": box(jnp.ones((di,), param_dtype), ("mlp",)),
+        "out_proj": L.dense_init(ks[5], di, d, ("mlp", "embed"),
+                                 param_dtype=param_dtype),
+    }
+
+
+def _causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv over time.  x: [B,T,C]; w: [K,C].
+
+    conv_state: [B, K-1, C] previous inputs (decode) or None (zeros)."""
+    k = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(k))
+    return out, xp[:, -(k - 1):]
+
+
+def _selective_scan(xs, dt, bmat, cmat, a, state):
+    """xs,dt: [B,T,di]; bmat,cmat: [B,T,n]; a: [di,n]; state: [B,di,n]."""
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * a[None])              # [B,di,n]
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (xs, dt, bmat, cmat))
+    state, ys = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def init_ssm_state(cfg, batch: int):
+    di, n = _d_inner(cfg), cfg.ssm_state
+    return {
+        "h": box(jnp.zeros((batch, di, n), jnp.float32),
+                 ("batch", "mlp", "state")),
+        "conv": box(jnp.zeros((batch, cfg.ssm_conv - 1, di), jnp.bfloat16),
+                    ("batch", None, "mlp")),
+    }
+
+
+def ssm_apply(p, x, cfg, state=None, dtype=jnp.bfloat16):
+    """x: [B,T,d] -> (y [B,T,d], new_state).  state None -> zeros."""
+    b, t, _ = x.shape
+    di, n = _d_inner(cfg), cfg.ssm_state
+    if state is None:
+        from repro.parallel.sharding import unbox
+        state = unbox(init_ssm_state(cfg, b))
+    xz = L.dense_apply(p["in_proj"], x, dtype, cfg.quant_planes)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, "batch", "seq_inner", "mlp")
+    xs, conv_state = _causal_conv(xs, p["conv_w"].astype(dtype),
+                                  state["conv"].astype(dtype))
+    xs = jax.nn.silu(xs).astype(jnp.float32)
+    dt = L.dense_apply(p["dt_proj"],
+                       L.dense_apply(p["x_to_dt"], xs, jnp.float32),
+                       jnp.float32)
+    dt = jax.nn.softplus(dt)
+    bc = L.dense_apply(p["x_to_bc"], xs, jnp.float32)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, h = _selective_scan(xs, dt, bmat, cmat, a, state["h"])
+    y = y + xs * p["d_skip"].astype(jnp.float32)[None, None]
+    y = (y.astype(dtype) * jax.nn.silu(z))
+    out = L.dense_apply(p["out_proj"], y, dtype, cfg.quant_planes)
+    return out, {"h": h, "conv": conv_state.astype(jnp.bfloat16)}
+
+
+def ssm_decode_step(p, x, cfg, state, dtype=jnp.bfloat16):
+    return ssm_apply(p, x, cfg, state, dtype)

@@ -1,0 +1,167 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical tensor axes to
+mesh axes, plus boxed parameters that carry their logical axes through init.
+
+Logical axes used by the models:
+  batch       -- data-parallel batch        -> ('pod','data') / ('data',)
+  seq         -- sequence                   -> None (or 'data' for SP)
+  embed       -- d_model features           -> 'data' when FSDP else None
+  heads       -- attention query heads      -> 'model'  (uneven OK: GSPMD pads)
+  kv_heads    -- attention kv heads         -> 'model' if n_kv >= tp else None
+  head_dim    -- per-head features          -> None
+  mlp         -- FFN hidden                 -> 'model'
+  vocab       -- vocabulary                 -> 'model'
+  expert      -- MoE experts                -> 'model' (or None if ff-sharded)
+  capacity    -- MoE capacity slots         -> None
+  state       -- SSM/RWKV state             -> None
+  layers      -- stacked scan layers        -> None
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "AxisRules", "default_rules", "mesh_context", "current_mesh_rules",
+    "constrain", "logical_to_spec", "Boxed", "box", "unbox", "boxed_axes",
+    "named_sharding_tree", "param_shardings",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Mapping logical axis name -> mesh axis (str), tuple of axes, or None."""
+    table: Tuple[Tuple[str, Any], ...]
+
+    def resolve(self, name: Optional[str]):
+        if name is None:
+            return None
+        for k, v in self.table:
+            if k == name:
+                return v
+        raise KeyError(f"no sharding rule for logical axis {name!r}")
+
+
+def default_rules(multi_pod: bool = False, fsdp: bool = True,
+                  fsdp_over_pod: bool = False,
+                  shard_kv_heads: bool = True,
+                  shard_experts: bool = True,
+                  seq_axis: Optional[str] = None,
+                  shard_batch: bool = True,
+                  capacity_axis: Optional[str] = None,
+                  kv_seq_axis: Optional[str] = None) -> AxisRules:
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    batch_axes = dp_axes if shard_batch else None
+    if fsdp:
+        fsdp_axes = dp_axes if (fsdp_over_pod and multi_pod) else ("data",)
+    else:
+        fsdp_axes = None
+    return AxisRules(tuple({
+        "batch": batch_axes,
+        "seq": seq_axis,
+        # inside TP-sharded ops (heads/mlp/vocab live on 'model') the seq dim
+        # must drop its sharding (Megatron SP: shard residual stream only)
+        "seq_inner": None,
+        "embed": fsdp_axes,
+        "embed_nofsdp": None,
+        "heads": "model",
+        "kv_heads": "model" if shard_kv_heads else None,
+        "head_dim": None,
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model" if shard_experts else None,
+        "capacity": capacity_axis,
+        "kv_seq": kv_seq_axis,    # KV-cache sequence dim (decode serving)
+        "state": None,
+        "layers": None,
+        "frames": None,
+    }.items()))
+
+
+_ctx = threading.local()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: AxisRules):
+    prev = getattr(_ctx, "mr", None)
+    _ctx.mr = (mesh, rules)
+    try:
+        with mesh:
+            yield
+    finally:
+        _ctx.mr = prev
+
+
+def current_mesh_rules():
+    return getattr(_ctx, "mr", None)
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...],
+                    rules: AxisRules) -> PartitionSpec:
+    return PartitionSpec(*[rules.resolve(a) for a in axes])
+
+
+def constrain(x, *axes: Optional[str]):
+    """with_sharding_constraint by logical axis names.  No-op outside a
+    mesh_context (single-device smoke tests)."""
+    mr = current_mesh_rules()
+    if mr is None:
+        return x
+    mesh, rules = mr
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = logical_to_spec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Boxed parameters: value + logical axes travel together through init.
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Boxed:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def box(value, axes) -> Boxed:
+    assert len(axes) == value.ndim if hasattr(value, "ndim") else True
+    return Boxed(value, tuple(axes))
+
+
+def _is_boxed(x):
+    return isinstance(x, Boxed)
+
+
+def unbox(tree):
+    """Strip the boxes -> plain array pytree (what apply/optimizer consume)."""
+    return jax.tree.map(lambda b: b.value, tree, is_leaf=_is_boxed)
+
+
+def boxed_axes(tree):
+    """Parallel tree of logical-axes tuples."""
+    return jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_boxed)
+
+
+def named_sharding_tree(axes_tree, mesh: Mesh, rules: AxisRules):
+    """Logical axes tree -> NamedSharding tree (for jit in_shardings)."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, logical_to_spec(axes, rules)),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def param_shardings(abstract_boxed, mesh: Mesh, rules: AxisRules):
+    """eval_shape'd boxed param tree -> NamedSharding tree."""
+    return named_sharding_tree(boxed_axes(abstract_boxed), mesh, rules)

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, data pipeline, checkpointing, gradient
+compression, fault tolerance, and the pjit step builders."""

@@ -1,0 +1,99 @@
+"""Fault tolerance: heartbeat/straggler monitoring and elastic policy.
+
+At 1000+ nodes the failure modes the launcher must survive are (a) a host
+dying (checkpoint/restart handles state), (b) a host running slow
+(straggler), (c) a pod disappearing (elastic re-mesh).  This module holds
+the host-side control logic; it is hardware-agnostic and fully unit-tested.
+
+* :class:`HeartbeatMonitor` — per-step wall-time records per worker; a
+  worker is flagged a straggler when its trailing-window median exceeds
+  ``threshold`` x the fleet median, and dead when it misses
+  ``miss_limit`` heartbeats.
+* :class:`ElasticPolicy` — given the surviving pod count, recompute the
+  mesh shape and the per-pod batch slice.  The data pipeline is
+  deterministic in (seed, step), so a re-sharded restart resumes the
+  exact token stream; the checkpoint manifest's mesh fingerprint is
+  validated by restore_checkpoint.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+import time
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HeartbeatMonitor", "ElasticPolicy", "StragglerReport"]
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    step: int
+    stragglers: List[str]
+    dead: List[str]
+    fleet_median_s: float
+    worker_medians: Dict[str, float]
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: List[str], window: int = 16,
+                 threshold: float = 1.5, miss_limit: int = 3):
+        self.workers = list(workers)
+        self.window = window
+        self.threshold = threshold
+        self.miss_limit = miss_limit
+        self._times: Dict[str, collections.deque] = {
+            w: collections.deque(maxlen=window) for w in self.workers}
+        self._last_step: Dict[str, int] = {w: -1 for w in self.workers}
+        self._step = -1
+
+    def record(self, worker: str, step: int, duration_s: float) -> None:
+        self._times[worker].append(duration_s)
+        self._last_step[worker] = step
+        self._step = max(self._step, step)
+
+    def report(self) -> StragglerReport:
+        medians = {w: (statistics.median(t) if t else float("inf"))
+                   for w, t in self._times.items()}
+        finite = [m for m in medians.values() if m != float("inf")]
+        fleet = statistics.median(finite) if finite else float("inf")
+        stragglers = [w for w, m in medians.items()
+                      if m != float("inf") and fleet > 0
+                      and m > self.threshold * fleet]
+        dead = [w for w in self.workers
+                if self._step - self._last_step[w] >= self.miss_limit]
+        return StragglerReport(self._step, stragglers, dead, fleet, medians)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPolicy:
+    """Mesh/batch recomputation for a changed pod count."""
+    data_per_pod: int = 16
+    model: int = 16
+
+    def mesh_shape(self, n_pods: int) -> Tuple[int, ...]:
+        if n_pods < 1:
+            raise ValueError("no surviving pods")
+        if n_pods == 1:
+            return (self.data_per_pod, self.model)
+        return (n_pods, self.data_per_pod, self.model)
+
+    def axis_names(self, n_pods: int) -> Tuple[str, ...]:
+        return (("data", "model") if n_pods == 1
+                else ("pod", "data", "model"))
+
+    def rebalance_batch(self, global_batch: int, n_pods: int) -> int:
+        """Largest per-step batch <= global_batch divisible by the new DP
+        extent (keeps lowered shapes legal after the re-mesh)."""
+        dp = self.data_per_pod * max(n_pods, 1)
+        if global_batch < dp:
+            return global_batch       # replicated batch, still legal
+        return (global_batch // dp) * dp
+
+    def plan(self, n_pods: int, global_batch: int) -> dict:
+        return {
+            "mesh_shape": self.mesh_shape(n_pods),
+            "axis_names": self.axis_names(n_pods),
+            "global_batch": self.rebalance_batch(global_batch, n_pods),
+            "action": "recompile+restore_latest_checkpoint",
+        }

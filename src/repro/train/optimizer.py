@@ -1,0 +1,119 @@
+"""AdamW optimizer + LR schedules (pure JAX, no optax dependency).
+
+Supports:
+  * cosine and WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395)
+    schedules;
+  * global-norm gradient clipping;
+  * decoupled weight decay with a mask (no decay on norms/embeddings'
+    scale vectors — any leaf with ndim < 2);
+  * reduced-precision moments (bf16) for the 100B+ configs
+    (``cfg.opt_state_dtype``), with fp32 math at the update site.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "OptState", "lr_schedule", "init_opt_state",
+           "adamw_update", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"       # 'cosine' | 'wsd' | 'constant'
+    wsd_decay_frac: float = 0.1    # last 10% of steps decay (WSD)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def lr_schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """LR at `step` (fp32 scalar).  Branch-free (dry-run friendly)."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    floor = cfg.min_lr_ratio
+    if cfg.schedule == "cosine":
+        decay = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "wsd":
+        # stable at peak until the final decay_frac window, then linear decay
+        start = 1.0 - cfg.wsd_decay_frac
+        d = jnp.clip((frac - start) / jnp.maximum(cfg.wsd_decay_frac, 1e-9),
+                     0.0, 1.0)
+        decay = floor + (1 - floor) * (1.0 - d)
+    elif cfg.schedule == "constant":
+        decay = jnp.asarray(1.0, jnp.float32)
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.peak_lr * warm * decay
+
+
+def init_opt_state(params, cfg: OptConfig) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return OptState(step=jnp.zeros((), jnp.int32),
+                    mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _decay_mask(params):
+    """Decay only matrices (ndim >= 2); skip norm scales/biases."""
+    return jax.tree.map(lambda p: float(p.ndim >= 2), params)
+
+
+def adamw_update(params, grads, state: OptState, cfg: OptConfig):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+    mask = _decay_mask(params)
+
+    def upd(p, g, m, v, wd_on):
+        gf = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * wd_on * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * delta
+        return new_p.astype(p.dtype), mf.astype(mdt), vf.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state.mu, state.nu, mask)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return (new_params, OptState(step, new_mu, new_nu),
+            {"grad_norm": gnorm, "lr": lr})

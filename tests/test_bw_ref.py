@@ -1,0 +1,77 @@
+"""Carry-save semantics + BW-decomposed matmul oracles."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import bw_ref, encodings as enc
+
+
+@given(hst.lists(hst.integers(-2**40, 2**40), min_size=3, max_size=3))
+@settings(max_examples=200)
+def test_compress_3_2_identity(vals):
+    a, b, c = (np.asarray([v], dtype=np.int64) for v in vals)
+    s, cy = bw_ref.compress_3_2(a, b, c)
+    assert (s + cy == a + b + c).all()
+
+
+@given(hst.lists(hst.integers(-2**40, 2**40), min_size=4, max_size=4))
+@settings(max_examples=100)
+def test_compress_4_2_identity(vals):
+    a, b, c, d = (np.asarray([v], dtype=np.int64) for v in vals)
+    s, cy = bw_ref.compress_4_2(a, b, c, d)
+    assert (s + cy == a + b + c + d).all()
+
+
+@given(hst.lists(hst.integers(-2**20, 2**20), min_size=1, max_size=9))
+@settings(max_examples=100)
+def test_half_reduce(vals):
+    terms = [np.asarray([v], dtype=np.int64) for v in vals]
+    s, c = bw_ref.half_reduce(terms)
+    assert (s + c == sum(vals)).all()
+
+
+@pytest.mark.parametrize("encoding", ["mbe", "ent", "bitserial"])
+def test_bw_matmul_exact(encoding, rng):
+    a = rng.integers(-128, 128, size=(13, 31)).astype(np.int64)
+    b = rng.integers(-128, 128, size=(31, 7)).astype(np.int64)
+    np.testing.assert_array_equal(bw_ref.bw_matmul_np(a, b, encoding),
+                                  (a @ b).astype(np.int32))
+
+
+def test_bw_matmul_jnp_matches(rng):
+    import jax.numpy as jnp
+    a = rng.integers(-128, 128, size=(8, 16)).astype(np.int8)
+    b = rng.integers(-128, 128, size=(16, 8)).astype(np.int8)
+    out = np.asarray(bw_ref.bw_matmul_jnp(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(out, (a.astype(np.int64)
+                                        @ b.astype(np.int64)).astype(np.int32))
+
+
+@pytest.mark.parametrize("encoding", ["mbe", "ent"])
+def test_onehot_mux_form(encoding, rng):
+    """Eq. (6): mux-selection (CPPG + one-hot dot) equals plain matmul."""
+    a = rng.integers(-128, 128, size=(6, 10)).astype(np.int64)
+    b = rng.integers(-128, 128, size=(10, 5)).astype(np.int64)
+    np.testing.assert_array_equal(
+        bw_ref.bw_matmul_onehot_np(a, b, encoding),
+        (a @ b).astype(np.int32))
+
+
+def test_carry_save_matmul(rng):
+    """OPT1 semantics: redundant (sum, carry) K-reduction, one deferred add."""
+    a = rng.integers(-128, 128, size=(9, 33)).astype(np.int64)
+    b = rng.integers(-128, 128, size=(33, 6)).astype(np.int64)
+    np.testing.assert_array_equal(bw_ref.carry_save_matmul_np(a, b),
+                                  (a @ b).astype(np.int32))
+
+
+@given(seed=hst.integers(0, 2**31 - 1), m=hst.integers(1, 6),
+       k=hst.integers(1, 24), n=hst.integers(1, 6))
+@settings(max_examples=40, deadline=None)
+def test_bw_matmul_property(seed, m, k, n):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(-128, 128, size=(m, k)).astype(np.int64)
+    b = rng.integers(-128, 128, size=(k, n)).astype(np.int64)
+    for e in ("ent", "mbe", "bitserial"):
+        np.testing.assert_array_equal(bw_ref.bw_matmul_np(a, b, e),
+                                      (a @ b).astype(np.int32))

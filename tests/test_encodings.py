@@ -1,0 +1,84 @@
+"""Encodings: exhaustive int8 correctness + the paper's Table II / Fig. 3."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import encodings as enc
+
+ALL_INT8 = np.arange(-128, 128)
+
+
+@pytest.mark.parametrize("encoding", enc.ENCODINGS)
+def test_roundtrip_exhaustive_int8(encoding):
+    d = enc.encode_np(ALL_INT8, encoding)
+    assert (enc.decode_np(d, encoding) == ALL_INT8).all()
+
+
+@pytest.mark.parametrize("encoding,bits", [("mbe", 12), ("ent", 12),
+                                           ("bitserial", 12),
+                                           ("mbe", 16), ("ent", 16)])
+def test_roundtrip_wider(encoding, bits):
+    lo, hi = -(1 << (bits - 1)), (1 << (bits - 1))
+    v = np.arange(lo, hi, 7)
+    d = enc.encode_np(v, encoding, bits)
+    assert (enc.decode_np(d, encoding, bits) == v).all()
+
+
+@given(hst.integers(min_value=-(1 << 15), max_value=(1 << 15) - 1))
+@settings(max_examples=200)
+def test_roundtrip_property_int16(x):
+    for encoding in ("mbe", "ent", "bitserial"):
+        d = enc.encode_np(np.asarray([x]), encoding, bits=16)
+        assert enc.decode_np(d, encoding, bits=16)[0] == x
+
+
+def test_digit_ranges():
+    for encoding in ("mbe", "ent"):
+        d = enc.encode_np(ALL_INT8, encoding)
+        assert d.min() >= -2 and d.max() <= 2, encoding
+    d = enc.encode_np(ALL_INT8, "bitserial")
+    assert d.min() >= -1 and d.max() <= 1
+
+
+def test_figure3_examples():
+    """Paper Fig. 3: 91 -> {1,2,-1,-1}; 124 -> {2,0,-1,0} (MSB first)."""
+    assert enc.encode_np(91, "ent").tolist()[::-1] == [1, 2, -1, -1]
+    assert enc.encode_np(124, "ent").tolist()[::-1] == [2, 0, -1, 0]
+
+
+def test_table2_census():
+    """Paper Table II: NumPPs histogram over INT8."""
+    mbe = np.bincount(enc.num_pps_np(ALL_INT8, "mbe"), minlength=5)
+    ent = np.bincount(enc.num_pps_np(ALL_INT8, "ent"), minlength=5)
+    bs = np.bincount(enc.num_pps_np(ALL_INT8, "bitserial"), minlength=9)
+    assert mbe[:5].tolist() == [1, 12, 54, 108, 81]
+    assert ent[:5].tolist() == [1, 15, 60, 108, 72]
+    # bit-serial rows are bucketed {8,7},{6,5},4,{3,2},{1,0} in the paper
+    assert (bs[8] + bs[7], bs[6] + bs[5], bs[4], bs[3] + bs[2],
+            bs[1] + bs[0]) == (9, 84, 70, 84, 9)
+
+
+def test_table2_shares():
+    """Paper Sec. II-C: <=3 PPs share — MBE 68.4%, EN-T 71.9%, serial 36.3%."""
+    def share(e):
+        return float((enc.num_pps_np(ALL_INT8, e) <= 3).mean())
+    assert abs(share("mbe") - 0.684) < 0.002
+    assert abs(share("ent") - 0.719) < 0.002
+    n = enc.num_pps_np(ALL_INT8, "bitserial")
+    assert abs(float((n <= 3).mean()) - 0.363) < 0.002
+
+
+def test_jnp_matches_np():
+    import jax.numpy as jnp
+    for encoding in ("mbe", "ent", "bitserial"):
+        d_np = enc.encode_np(ALL_INT8, encoding)
+        d_j = np.asarray(enc.encode_jnp(jnp.asarray(ALL_INT8, jnp.int8),
+                                        encoding))
+        assert (d_np == d_j).all(), encoding
+
+
+def test_ent_consecutive_ones_skipped():
+    """QII: EN-T encodes runs of 1s into fewer digits than bit-serial."""
+    x = np.asarray([0b01111100])  # 124: five 1-bits
+    assert enc.num_pps_np(x, "bitserial")[0] == 5
+    assert enc.num_pps_np(x, "ent")[0] == 2   # {2,0,-1,0}

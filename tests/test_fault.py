@@ -1,0 +1,84 @@
+"""Fault tolerance: heartbeat/straggler monitor + elastic policy."""
+import pytest
+
+from repro.train import fault
+
+
+def test_straggler_detection():
+    mon = fault.HeartbeatMonitor(["a", "b", "c", "d"], window=4,
+                                 threshold=1.5)
+    for step in range(4):
+        for w in "abc":
+            mon.record(w, step, 1.0)
+        mon.record("d", step, 2.0)          # 2x slower
+    rep = mon.report()
+    assert rep.stragglers == ["d"]
+    assert rep.dead == []
+    assert rep.fleet_median_s == pytest.approx(1.0)
+
+
+def test_dead_worker_detection():
+    mon = fault.HeartbeatMonitor(["a", "b"], miss_limit=3)
+    for step in range(5):
+        mon.record("a", step, 1.0)
+    mon.record("b", 0, 1.0)                 # b silent since step 0
+    rep = mon.report()
+    assert "b" in rep.dead
+    assert "a" not in rep.dead
+
+
+def test_no_false_positives_uniform_fleet():
+    mon = fault.HeartbeatMonitor([f"w{i}" for i in range(16)])
+    for step in range(8):
+        for i in range(16):
+            mon.record(f"w{i}", step, 1.0 + 0.01 * i)
+    rep = mon.report()
+    assert rep.stragglers == [] and rep.dead == []
+
+
+def test_elastic_mesh_shapes():
+    pol = fault.ElasticPolicy(data_per_pod=16, model=16)
+    assert pol.mesh_shape(2) == (2, 16, 16)
+    assert pol.axis_names(2) == ("pod", "data", "model")
+    assert pol.mesh_shape(1) == (16, 16)
+    assert pol.axis_names(1) == ("data", "model")
+    with pytest.raises(ValueError):
+        pol.mesh_shape(0)
+
+
+def test_elastic_batch_rebalance():
+    pol = fault.ElasticPolicy(data_per_pod=16, model=16)
+    # 2 pods -> dp=32: 256 stays; losing a pod -> dp=16: 256 still divides
+    assert pol.rebalance_batch(256, 2) == 256
+    assert pol.rebalance_batch(256, 1) == 256
+    # odd batch trimmed to the largest divisible size
+    assert pol.rebalance_batch(250, 2) == 224
+    # batch smaller than dp extent -> replicated, unchanged
+    assert pol.rebalance_batch(1, 2) == 1
+
+
+def test_elastic_plan_roundtrip():
+    pol = fault.ElasticPolicy()
+    plan = pol.plan(n_pods=1, global_batch=250)
+    assert plan["mesh_shape"] == (16, 16)
+    assert plan["global_batch"] == 240
+    assert "restore" in plan["action"]
+
+
+def test_elastic_restart_integration(tmp_path):
+    """Simulated pod loss: checkpoint, 'lose a pod' (halve the batch per
+    the elastic plan), restore and keep training — loss stays finite and
+    the restored step counter continues."""
+    import numpy as np
+    from repro.launch.train import train
+
+    kw = dict(smoke=True, seq_len=16, log_every=100, seed=11,
+              schedule="constant")
+    train("minicpm-2b", steps=4, global_batch=8,
+          ckpt_dir=str(tmp_path), ckpt_every=4, **kw)
+    pol = fault.ElasticPolicy(data_per_pod=1, model=1)
+    new_batch = pol.rebalance_batch(8, 1)
+    out = train("minicpm-2b", steps=8, global_batch=new_batch,
+                ckpt_dir=str(tmp_path), resume=True, **kw)
+    assert np.isfinite(out["final_loss"])
+    assert len(out["losses"]) == 4          # resumed from step 4, ran 4 more

@@ -1,0 +1,228 @@
+"""Per-arch smoke tests (assignment requirement): reduced same-family
+configs, one forward/train step on CPU, output shapes + no NaNs; plus
+decode-vs-forward consistency for the cache/state paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_config
+from repro.models.api import get_api, loss_fn
+from repro.parallel.sharding import unbox
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, t=16, seed=1):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, cfg.vocab_size, size=(b, t + 1)).astype(np.int32)
+    out = {"tokens": jnp.asarray(toks[:, :-1]),
+           "labels": jnp.asarray(toks[:, 1:])}
+    if cfg.frontend:
+        out["frontend"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_tokens, cfg.d_model))
+            .astype(np.float32) * 0.02)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    api = get_api(cfg)
+    params = unbox(api.init(KEY, cfg))
+    batch = _batch(cfg)
+    logits, aux = api.forward(params, batch, cfg)
+    b, t = batch["tokens"].shape
+    assert logits.shape == (b, t, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step_no_nans(arch):
+    from repro.train import optimizer as opt, steps as st
+    cfg = get_config(arch, smoke=True)
+    ocfg = opt.OptConfig(peak_lr=1e-3, total_steps=10, warmup_steps=2)
+    state = st.init_train_state(KEY, cfg, ocfg)
+    step = jax.jit(st.make_train_step(cfg, ocfg))
+    state, metrics = step(state, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    for leaf in jax.tree.leaves(state.params):
+        assert np.isfinite(np.asarray(leaf, dtype=np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    api = get_api(cfg)
+    params = unbox(api.init(KEY, cfg))
+    b, max_len = 2, 24
+    state = unbox(api.init_decode(cfg, b, max_len))
+    toks = jnp.full((b, 1), 5, jnp.int32)
+    for i in range(3):
+        pos = jnp.full((b,), i, jnp.int32)
+        logits, state = api.decode_step(params, toks, pos, state, cfg)
+        assert logits.shape == (b, 1, cfg.padded_vocab)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_transformer_prefill_decode_consistency():
+    """Teacher-forced decode over the KV cache must match the parallel
+    forward logits position-by-position (dense transformer family)."""
+    cfg = get_config("minicpm-2b", smoke=True).replace(remat=False)
+    api = get_api(cfg)
+    params = unbox(api.init(KEY, cfg))
+    b, t = 2, 8
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)), jnp.int32)
+    full_logits, _ = api.forward(params, {"tokens": toks}, cfg)
+    state = unbox(api.init_decode(cfg, b, t))
+    got = []
+    for i in range(t):
+        li, state = api.decode_step(params, toks[:, i:i + 1],
+                                    jnp.full((b,), i, jnp.int32), state, cfg)
+        got.append(np.asarray(li[:, 0], np.float32))
+    got = np.stack(got, axis=1)
+    want = np.asarray(full_logits, np.float32)
+    np.testing.assert_allclose(got, want, rtol=0.05, atol=0.05)
+
+
+def test_rwkv_scan_decode_consistency():
+    """RWKV full-sequence scan vs token-by-token recurrent state."""
+    cfg = get_config("rwkv6-3b", smoke=True)
+    api = get_api(cfg)
+    params = unbox(api.init(KEY, cfg))
+    b, t = 2, 8
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, t)), jnp.int32)
+    full_logits, _ = api.forward(params, {"tokens": toks}, cfg)
+    state = unbox(api.init_decode(cfg, b, t))
+    got = []
+    for i in range(t):
+        li, state = api.decode_step(params, toks[:, i:i + 1],
+                                    jnp.full((b,), i, jnp.int32), state, cfg)
+        got.append(np.asarray(li[:, 0], np.float32))
+    got = np.stack(got, axis=1)
+    np.testing.assert_allclose(got, np.asarray(full_logits, np.float32),
+                               rtol=0.05, atol=0.05)
+
+
+def test_moe_routing_respects_capacity():
+    from repro.models import moe as M
+    cfg = get_config("olmoe-1b-7b", smoke=True).replace(capacity_factor=0.5)
+    params = unbox(M.moe_init(KEY, cfg))
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (2, 16, cfg.d_model)).astype(np.float32))
+    y, aux = M.moe_apply(params, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y, np.float32)).all()
+    assert float(aux) >= 0.0
+
+
+def test_moe_aux_loss_balanced_vs_collapsed():
+    """A uniform router must beat a collapsed one on the aux loss."""
+    from repro.models import moe as M
+    cfg = get_config("olmoe-1b-7b", smoke=True)
+    params = unbox(M.moe_init(KEY, cfg))
+    x = jnp.asarray(np.random.default_rng(3).standard_normal(
+        (2, 32, cfg.d_model)).astype(np.float32))
+    _, aux_rand = M.moe_apply(params, x, cfg)
+    collapsed = jax.tree.map(lambda p: p, params)
+    collapsed["router"]["w"] = collapsed["router"]["w"] * 0.0 + \
+        jnp.eye(cfg.d_model, cfg.n_experts) * 100.0
+    _, aux_coll = M.moe_apply(collapsed, x, cfg)
+    assert float(aux_coll) > float(aux_rand)
+
+
+def test_moe_dispatch_combine_property():
+    """Property: with ample capacity, the dispatch->combine round trip of
+    an identity 'expert' reproduces sum-of-gates times the input."""
+    from hypothesis import given, settings, strategies as hst
+    from repro.models import moe as M
+
+    @given(seed=hst.integers(0, 2**31 - 1), t=hst.integers(2, 12),
+           k=hst.integers(1, 3))
+    @settings(max_examples=15, deadline=None)
+    def run(seed, t, k):
+        rng = np.random.default_rng(seed)
+        e, d, cap = 4, 8, t * k   # capacity >= all slots: nothing drops
+        xf = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+        eidx = jnp.asarray(rng.integers(0, e, (t, k)), jnp.int32)
+        gate = jnp.asarray(rng.random((t, k)).astype(np.float32))
+        buf, dest, wgt = M._dispatch(xf, eidx, gate, e, k, cap, jnp.float32)
+        y = M._combine(buf.reshape(e, cap, d), dest, wgt, t, k, jnp.float32)
+        want = np.asarray(xf) * np.asarray(gate.sum(-1))[:, None]
+        np.testing.assert_allclose(np.asarray(y), want, rtol=2e-4, atol=2e-4)
+
+    run()
+
+
+def test_moe_local_dispatch_equivalence():
+    """With capacity ample enough that nothing drops, DP-shard-local
+    dispatch (moe_dispatch_groups>1) must equal global dispatch exactly."""
+    from repro.models import moe as M
+    cfg = get_config("olmoe-1b-7b", smoke=True).replace(capacity_factor=8.0)
+    params = unbox(M.moe_init(KEY, cfg))
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (2, 16, cfg.d_model)).astype(np.float32))
+    y1, a1 = M.moe_apply(params, x, cfg.replace(moe_dispatch_groups=1))
+    y2, a2 = M.moe_apply(params, x, cfg.replace(moe_dispatch_groups=4))
+    np.testing.assert_array_equal(np.asarray(y1, np.float32),
+                                  np.asarray(y2, np.float32))
+    assert float(a1) == float(a2)
+
+
+def test_vlm_frontend_changes_prefix_logits_only_causally():
+    cfg = get_config("phi-3-vision-4.2b", smoke=True)
+    api = get_api(cfg)
+    params = unbox(api.init(KEY, cfg))
+    batch = _batch(cfg, b=1, t=12)
+    l1, _ = api.forward(params, batch, cfg)
+    batch2 = dict(batch, frontend=batch["frontend"] + 1.0)
+    l2, _ = api.forward(params, batch2, cfg)
+    # frontend occupies the first F positions; all logits may differ but
+    # they must differ SOMEWHERE (the stub is wired in)
+    assert not np.allclose(np.asarray(l1, np.float32),
+                           np.asarray(l2, np.float32))
+
+
+def test_encdec_cross_attention_sees_encoder():
+    cfg = get_config("seamless-m4t-medium", smoke=True)
+    api = get_api(cfg)
+    params = unbox(api.init(KEY, cfg))
+    batch = _batch(cfg, b=1, t=8)
+    l1, _ = api.forward(params, batch, cfg)
+    batch2 = dict(batch, frontend=batch["frontend"] * 3.0 + 0.5)
+    l2, _ = api.forward(params, batch2, cfg)
+    assert not np.allclose(np.asarray(l1, np.float32),
+                           np.asarray(l2, np.float32))
+
+
+def test_hymba_window_decode_runs_past_window():
+    from repro.models import hymba as H
+    cfg = get_config("hymba-1.5b", smoke=True)
+    api = get_api(cfg)
+    params = unbox(api.init(KEY, cfg))
+    b = 1
+    state = unbox(api.init_decode(cfg, b, 1 << 19))
+    toks = jnp.full((b, 1), 3, jnp.int32)
+    # stepping far past the rolling window must stay finite (ring buffer)
+    for i in [0, 1, 2, H.HYMBA_WINDOW + 5]:
+        logits, state = api.decode_step(params, toks,
+                                        jnp.full((b,), i, jnp.int32),
+                                        state, cfg)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_quant_planes_path_trains():
+    """The paper's BW-decomposed int8 linear path is differentiable (STE)."""
+    from repro.train import optimizer as opt, steps as st
+    cfg = get_config("minicpm-2b", smoke=True).replace(quant_planes=3)
+    ocfg = opt.OptConfig(peak_lr=1e-3, total_steps=5, warmup_steps=1)
+    state = st.init_train_state(KEY, cfg, ocfg)
+    step = jax.jit(st.make_train_step(cfg, ocfg))
+    batch = _batch(cfg)
+    s1, m1 = step(state, batch)
+    assert np.isfinite(float(m1["loss"]))
+    assert float(m1["grad_norm"]) > 0.0

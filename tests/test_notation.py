@@ -1,0 +1,107 @@
+"""Executable notation: legality rules + bit-exact schedule execution."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import notation as nt
+
+
+@pytest.mark.parametrize("name", list(nt.SCHEDULES))
+def test_published_schedules_legal(name):
+    assert nt.validate(nt.SCHEDULES[name]) == []
+
+
+def test_illegal_deferred_shift():
+    s = nt.Schedule("bad", bw="spatial", shift_at="simd")
+    assert any("deferred" in e or "temporal" in e for e in nt.validate(s))
+
+
+def test_illegal_sparse_spatial_bw():
+    s = nt.Schedule("bad", bw="spatial", sparse=True)
+    assert nt.validate(s)
+
+
+def test_illegal_shared_encoder_dense():
+    s = nt.Schedule("bad", bw="temporal", reduction="half_reduce",
+                    shift_at="simd", sparse=False, shared_encoder=True)
+    assert nt.validate(s)
+
+
+def _rand(shape, rng, lo=-128, hi=128):
+    return rng.integers(lo, hi, size=shape).astype(np.int64)
+
+
+@pytest.mark.parametrize("name", list(nt.SCHEDULES))
+def test_execute_exact(name, rng):
+    a = _rand((12, 20), rng)
+    b = _rand((20, 9), rng)
+    res = nt.execute(nt.SCHEDULES[name], a, b)
+    np.testing.assert_array_equal(res.c, a @ b)
+
+
+@given(m=hst.integers(1, 9), k=hst.integers(1, 17), n=hst.integers(1, 7),
+       seed=hst.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_execute_exact_property(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand((m, k), rng)
+    b = _rand((k, n), rng)
+    for name in ("baseline", "opt1", "opt2", "opt3", "opt4e"):
+        res = nt.execute(nt.SCHEDULES[name], a, b)
+        np.testing.assert_array_equal(res.c, a @ b, err_msg=name)
+
+
+def test_sparse_cycles_beat_dense(rng):
+    """OPT3 serial cycles ~ non-zero PPs < dense BW*K slots for normal data."""
+    from repro.core.sparsity import quantize_normal_matrix
+    a = quantize_normal_matrix(1.0, (16, 64), seed=1)
+    b = _rand((64, 8), rng)
+    geom = nt.ArrayGeometry(16, 8, 2)
+    dense = nt.execute(nt.SCHEDULES["opt2"], a, b, geom)
+    sparse = nt.execute(nt.SCHEDULES["opt3"], a, b, geom)
+    assert sparse.c.tolist() == dense.c.tolist()
+    assert sparse.pp_processed < sparse.pp_total * 0.75   # ~2.24/4 density
+    # OPT4E groups 4 PP lanes per cycle
+    grouped = nt.execute(nt.SCHEDULES["opt4e"], a, b, geom)
+    assert grouped.cycles <= -(-sparse.cycles // 2)
+
+
+def test_utilization_bounds(rng):
+    a = _rand((8, 32), rng)
+    b = _rand((32, 4), rng)
+    res = nt.execute(nt.SCHEDULES["opt3"], a, b, nt.ArrayGeometry(8, 4, 2))
+    assert 0.0 < res.utilization <= 1.0
+    assert res.sync_events >= 1
+
+
+def test_census_opt1_removes_accumulator():
+    g = nt.ArrayGeometry(32, 32, 4)
+    base = nt.component_census(nt.SCHEDULES["baseline"], g)
+    opt1 = nt.component_census(nt.SCHEDULES["opt1"], g)
+    assert any(k.startswith("accumulator") for k in base)
+    assert not any(k.startswith("accumulator") for k in opt1)
+    assert not any(k.startswith("full_adder") for k in opt1)
+    # deferred adds happen in a smaller SIMD pool outside the array
+    simd = [v for k, v in opt1.items() if k.startswith("simd_adder")]
+    assert simd and simd[0] <= g.m_p * g.n_p / g.k_p + 1
+
+
+def test_census_opt2_removes_shifters():
+    g = nt.ArrayGeometry(32, 32, 4)
+    opt1 = nt.component_census(nt.SCHEDULES["opt1"], g)
+    opt2 = nt.component_census(nt.SCHEDULES["opt2"], g)
+    assert any(k.startswith("shifter") for k in opt1)
+    assert not any(k.startswith("shifter@") for k in opt2)
+
+
+def test_census_opt4_shares_encoders():
+    g = nt.ArrayGeometry(32, 32, 4)
+    opt3 = nt.component_census(nt.SCHEDULES["opt3"], g)
+    opt4 = nt.component_census(nt.SCHEDULES["opt4c"], g)
+    enc3 = sum(v for k, v in opt3.items() if k.startswith("encoder"))
+    enc4 = sum(v for k, v in opt4.items() if k.startswith("encoder"))
+    assert enc4 == enc3 / g.n_p     # hoisted above N_P: one per column
+    # OPT4E: one 6-2 compressor per 4-PE group
+    opt4e = nt.component_census(nt.SCHEDULES["opt4e"], g)
+    c62 = [v for k, v in opt4e.items() if k.startswith("compressor6_2")]
+    assert c62 and c62[0] == g.m_p * g.n_p / 4

@@ -1,0 +1,112 @@
+"""Logical-axis sharding rules + boxed params + roofline/dryrun unit logic."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding as sh
+from repro.launch import roofline as rl
+
+
+def test_rules_resolution_single_pod():
+    r = sh.default_rules(multi_pod=False)
+    assert r.resolve("batch") == ("data",)
+    assert r.resolve("heads") == "model"
+    assert r.resolve("embed") == ("data",)          # FSDP
+    assert r.resolve(None) is None
+    with pytest.raises(KeyError):
+        r.resolve("nonexistent")
+
+
+def test_rules_resolution_multi_pod():
+    r = sh.default_rules(multi_pod=True, fsdp_over_pod=True)
+    assert r.resolve("batch") == ("pod", "data")
+    assert r.resolve("embed") == ("pod", "data")
+    r2 = sh.default_rules(multi_pod=True, fsdp_over_pod=False)
+    assert r2.resolve("embed") == ("data",)
+
+
+def test_logical_to_spec():
+    r = sh.default_rules()
+    spec = sh.logical_to_spec(("batch", None, "mlp"), r)
+    assert spec == P(("data",), None, "model")
+
+
+def test_boxed_tree_utilities():
+    tree = {"w": sh.box(jnp.zeros((2, 3)), ("embed", "mlp")),
+            "b": sh.box(jnp.zeros((3,)), ("mlp",))}
+    vals = sh.unbox(tree)
+    assert vals["w"].shape == (2, 3)
+    axes = sh.boxed_axes(tree)
+    assert axes["w"] == ("embed", "mlp")
+    # boxes are pytrees: tree.map over values preserves axes
+    doubled = jax.tree.map(lambda b: sh.Boxed(b.value * 2, b.axes), tree,
+                           is_leaf=lambda x: isinstance(x, sh.Boxed))
+    assert doubled["w"].axes == ("embed", "mlp")
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((2, 3))
+    y = sh.constrain(x, "batch", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------- roofline unit ----------------------------------
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = bf16[8,512]{1,0} parameter(0)
+  %ag = bf16[128,512]{1,0} all-gather(bf16[8,512]{1,0} %p0), dimensions={0}
+  %ar = f32[64]{0} all-reduce(f32[64]{0} %x), to_apply=%sum
+  %rs = f32[16]{0} reduce-scatter(f32[256]{0} %y), to_apply=%sum
+  %a2a = (f32[4,4]{1,0}) all-to-all(f32[4,4]{1,0} %q), dimensions={0}
+  %cp = u32[2]{0} collective-permute(u32[2]{0} %z), source_target_pairs={{0,1}}
+  %dot = f32[8,8]{1,0} dot(f32[8,8]{1,0} %a, f32[8,8]{1,0} %b)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = rl.collective_bytes(HLO_SAMPLE)
+    assert out["all-gather"] == 128 * 512 * 2        # gathered output
+    assert out["all-reduce"] == 64 * 4
+    assert out["reduce-scatter"] == 256 * 4          # pre-scatter operand
+    assert out["all-to-all"] == 16 * 4
+    assert out["collective-permute"] == 2 * 4
+    # the plain dot must not be counted
+    total = 128 * 512 * 2 + 256 + 1024 + 64 + 8
+    assert sum(out.values()) == total
+
+
+def test_collective_bytes_ignores_unknown_dtypes():
+    assert sum(rl.collective_bytes("%t = token[] all-reduce(%x)").values()) \
+        == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    r = rl.roofline_from_compiled(
+        {"flops": 197e12, "bytes accessed": 819e9 / 2}, "", chips=4,
+        model_fl=4 * 197e12)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(0.5)
+    assert r.bottleneck == "compute"
+    assert r.useful_ratio == pytest.approx(1.0)
+    assert r.roofline_fraction == pytest.approx(1.0)
+
+
+def test_model_flops_kinds():
+    from repro.configs.registry import get_config
+    cfg = get_config("minicpm-2b")
+    n = cfg.active_param_count()
+    assert rl.model_flops(cfg, 4, 128, "train") == 6.0 * n * 512
+    assert rl.model_flops(cfg, 4, 128, "prefill") == 2.0 * n * 512
+    assert rl.model_flops(cfg, 4, 128, "decode") == 2.0 * n * 4
+
+
+def test_moe_active_params_below_total():
+    from repro.configs.registry import get_config
+    cfg = get_config("olmoe-1b-7b")
+    assert cfg.active_param_count() < cfg.param_count() / 3
+    dense = get_config("minicpm-2b")
+    assert dense.active_param_count() == dense.param_count()

@@ -1,0 +1,70 @@
+"""Workload simulator: Figs. 11-14 claims."""
+import numpy as np
+import pytest
+
+from repro.core import simulate as sim
+
+
+def test_fig14_throughput_points():
+    """Fig. 14: equal-area 3xOPT4C / OPT4E vs parallel MAC.
+
+    Best case (1 PP): 3xOPT4C hits >2x a MAC; worst case (4 PPs) >= 0.5x;
+    at the average 2.27 PPs a single OPT4C is close to 1 MAC (~1.8 GOPS)."""
+    rows = {r["num_pps"]: r for r in sim.fig14_throughput(freq_ghz=2.0)}
+    assert rows[1]["speedup_3x_opt4c"] >= 2.0
+    assert rows[4]["speedup_3x_opt4c"] >= 0.5
+    one_opt4c_gops = rows[2.27]["3x_opt4c_gops"] / 3
+    assert 1.5 <= one_opt4c_gops <= 2.1          # paper: ~1.8 GOPS
+    assert rows[2.27]["speedup_3x_opt4c"] >= 2.4  # paper: ~2.7x
+    assert rows[2.27]["speedup_opt4e"] >= 3.2     # paper: ~3.6x
+
+
+@pytest.mark.parametrize("wl,lo,hi", [
+    ("gpt2", 1.7, 2.6),        # paper: 2.16
+    ("vit", 1.6, 2.5),         # paper: 2.02
+    ("mobilevit", 1.4, 2.4),   # paper: 1.89
+])
+def test_workload_speedups(wl, lo, hi):
+    out = sim.simulate_workload(wl, "opt4e", "tpu")
+    assert lo <= out["speedup_equal_area"] <= hi, out
+    # Energy: with Table VII *peak* power as the only anchor, OPT4E sits at
+    # parity with the dense MAC array (8.1 vs 8.05 TOPS/W) — the paper's
+    # Fig. 13 savings (1.2-2.2x) come from activity-dependent power it does
+    # not tabulate.  We assert parity-or-better here and record the
+    # deviation in EXPERIMENTS.md §Paper claims.
+    assert out["energy_ratio"] > 0.9
+
+
+def test_mobilenet_dw_vs_pw_utilization():
+    """Fig. 11B: small-K depthwise layers utilize columns worse than
+    large-K pointwise layers."""
+    out = sim.simulate_workload("mobilenetv3", "opt4e", "tpu")
+    per = {s.name: s for s in out["per_layer"]}
+    dw = per["mnv3.dw3x3"]
+    pw = per["mnv3.pw_project"]
+    assert dw.busy_avg < pw.busy_avg
+    assert pw.busy_avg > 0.8
+
+
+def test_higher_k_improves_utilization():
+    """Discussion: larger reduction dims shrink the T_sync variance."""
+    a = sim.simulate_layer(sim.WorkloadLayer("k64", 64, 64), sim.ARRAYS["opt4e"])
+    b = sim.simulate_layer(sim.WorkloadLayer("k1k", 64, 1024),
+                           sim.ARRAYS["opt4e"])
+    assert b.busy_avg >= a.busy_avg
+
+
+def test_parallel_mac_unaffected_by_pps():
+    dense = sim.simulate_layer(sim.WorkloadLayer("x", 64, 128),
+                               sim.ARRAYS["tpu"])
+    assert dense.busy_avg == 1.0 and dense.idle_ratio == 0.0
+
+
+def test_serial_cycle_accounting(rng):
+    """Serial column cycles == max over columns of ceil(NumPPs/group)."""
+    w = rng.integers(-128, 128, size=(32, 16)).astype(np.int64)
+    from repro.core import encodings as enc
+    st = sim.simulate_layer(sim.WorkloadLayer("x", 32, 16), sim.ARRAYS["opt3"],
+                            weights=w)
+    npp = (enc.encode_np(w, "ent") != 0).sum(-1).sum(-1)
+    assert st.cycles == int(npp.max())

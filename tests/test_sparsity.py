@@ -1,0 +1,66 @@
+"""Sparsity statistics: Table III + Eq. (7)/(8) synchronization model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as hst
+
+from repro.core import sparsity as sp
+
+
+def test_table3_ent_mbe():
+    """Paper Table III: EN-T 2.22-2.27, MBE 2.41-2.46 — scale-invariant."""
+    ent = sp.table3_row("ent")
+    mbe = sp.table3_row("mbe")
+    assert all(2.15 <= v <= 2.35 for v in ent), ent
+    assert all(2.35 <= v <= 2.55 for v in mbe), mbe
+    # near-constant across sigma (symmetric quantization is scale-free)
+    assert max(ent) - min(ent) < 0.05
+    assert max(mbe) - min(mbe) < 0.05
+
+
+def test_table3_bitserial():
+    bs_c = sp.table3_row("bitserial")       # paper: 3.98-3.99
+    bs_m = sp.table3_row("bitserial_sm")    # paper: 3.52-3.53
+    assert all(3.9 <= v <= 4.1 for v in bs_c), bs_c
+    assert all(3.4 <= v <= 3.65 for v in bs_m), bs_m
+
+
+def test_resnet18_worked_example():
+    """Sec. IV-C: K=576, s=0.38, M_P=32 -> E[T_sync]~=381, saving 33.84%."""
+    ex = sp.resnet18_example()
+    assert abs(ex["expected_tsync"] - 381) < 2.0
+    assert abs(ex["saving"] - 0.3384) < 0.005
+
+
+def test_tsync_cdf_is_cdf():
+    f = sp.tsync_cdf(64, 0.4, 8)
+    assert f.shape == (65,)
+    assert (np.diff(f) >= -1e-12).all()
+    assert abs(f[-1] - 1.0) < 1e-9
+
+
+@given(k=hst.integers(8, 256), s=hst.floats(0.05, 0.9),
+       m_p=hst.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_expected_tsync_bounds(k, s, m_p):
+    e = sp.expected_tsync(k, s, m_p)
+    assert 0.0 <= e <= k + 1e-9
+    # more columns -> larger max -> larger E[T_sync]
+    e1 = sp.expected_tsync(k, s, 1)
+    assert e >= e1 - 1e-9
+
+
+def test_tsync_monotone_in_sparsity():
+    es = [sp.expected_tsync(576, s, 32) for s in (0.1, 0.3, 0.5, 0.7)]
+    assert es == sorted(es, reverse=True)
+
+
+def test_encoded_zero_fraction_matches_numpps():
+    x = sp.quantize_normal_matrix(1.0, (256, 256), seed=3)
+    s = sp.encoded_zero_digit_fraction(x, "ent")
+    avg = sp.avg_num_pps(x, "ent")
+    assert abs((1 - s) * 4 - avg) < 1e-9   # 4 digit slots for int8 radix-4
+
+
+def test_census_totals():
+    c = sp.numpp_census("ent")
+    assert sum(c.values()) == 256
