@@ -1,9 +1,13 @@
 """Pallas TPU kernels for the paper's compute hot spot (quantised GEMM).
 
-  quant_gemm -- baseline tiled INT8 GEMM (the parallel-MAC reference)
-  bw_gemm    -- bit-weight decomposed GEMM with digit-plane block skipping
-  ops        -- public jitted wrappers (padding, planning, masks)
-  ref        -- pure-jnp oracles
+  quant_gemm      -- baseline tiled INT8 GEMM (the parallel-MAC reference)
+  bw_gemm         -- bit-weight decomposed GEMM with digit-plane block skipping
+  bw_gemm_fused   -- bw_gemm + in-kernel dequant/bias/activation epilogue
+  ops             -- public jitted wrappers (padding, planning cache, masks,
+                     per-shape block selection, the quantized-dense dispatch)
+  ref             -- pure-jnp oracles
 """
 from . import ops, ref  # noqa: F401
-from .ops import bw_gemm, quant_gemm, plan_operand, encode_planes  # noqa: F401
+from .ops import (bw_gemm, quant_gemm, plan_operand, encode_planes,  # noqa: F401
+                  bw_gemm_fused, quant_gemm_fused, quantized_dense,
+                  plan_params, planned_dense_apply, select_block_sizes)

@@ -28,8 +28,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bw_gemm"]
+__all__ = ["bw_gemm", "bw_gemm_fused", "EPILOGUE_ACTIVATIONS"]
+
+# Activations the fused epilogue can apply on the dequantised accumulator.
+# Single source of truth: repro.models.layers.activation resolves names
+# from this mapping too.
+EPILOGUE_ACTIVATIONS = {
+    None: lambda x: x,
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
 
 
 def _kernel(mask_ref, d_ref, b_ref, o_ref, *, n_planes: int, radix: int):
@@ -82,3 +93,92 @@ def bw_gemm(digits, b, mask, *, block_m: int = 128, block_n: int = 128,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
         interpret=interpret,
     )(mask, digits, b)
+
+
+def _fused_kernel(mask_ref, d_ref, b_ref, scale_ref, bias_ref, o_ref,
+                  acc_ref, *, n_planes: int, radix: int, k_steps: int,
+                  activation, has_bias: bool):
+    """bw_gemm with the dequant epilogue folded in.
+
+    The int32 accumulator lives in a VMEM scratch block revisited across the
+    K grid; only the final float result is written to the output in HBM, so
+    the accumulator never round-trips through HBM.  On the last K step the
+    epilogue applies scale (act scale x per-channel weight scale), optional
+    bias, and optional activation -- all on the register/VMEM-resident block.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+    b = b_ref[...].astype(jnp.int32)
+    for bw in range(n_planes):          # unrolled: BW is small and static
+        weight = radix ** bw
+
+        @pl.when(mask_ref[bw, 0, 0])
+        def _plane(bw=bw, weight=weight):
+            d = d_ref[bw].astype(jnp.int32)
+            pp = jax.lax.dot_general(
+                d, b, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+            acc_ref[...] += pp * weight
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _epilogue():
+        y = acc_ref[...].astype(jnp.float32) * scale_ref[...]
+        if has_bias:
+            y = y + bias_ref[...]
+        y = EPILOGUE_ACTIVATIONS[activation](y)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "block_k", "radix", "interpret", "activation",
+    "epilogue_axis", "out_dtype"))
+def bw_gemm_fused(digits, b, mask, scale, bias=None, *, block_m: int = 128,
+                  block_n: int = 128, block_k: int = 256, radix: int = 4,
+                  interpret: bool = False, activation=None,
+                  epilogue_axis: str = "m", out_dtype=jnp.float32):
+    """C = act((sum_bw (digits[bw] @ B) * radix**bw) * scale + bias).
+
+    digits: int8 [BW, M, K] encoded planes of the multiplicand.
+    b:      int8 [K, N].
+    mask:   bool [BW, M//block_m, K//block_k] plane-block occupancy.
+    scale:  f32 [M, 1] (epilogue_axis='m', per-row: weight channels on M as
+            in the planned-weight layout) or [1, N] (epilogue_axis='n').
+    bias:   optional f32, same shape rules as scale.
+    """
+    bw_n, m, k = digits.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert mask.shape == (bw_n, m // block_m, k // block_k), (
+        mask.shape, (bw_n, m // block_m, k // block_k))
+    assert epilogue_axis in ("m", "n")
+    assert activation in EPILOGUE_ACTIVATIONS, activation
+    if epilogue_axis == "m":
+        assert scale.shape == (m, 1), scale.shape
+        vec_spec = pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0))
+    else:
+        assert scale.shape == (1, n), scale.shape
+        vec_spec = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
+    has_bias = bias is not None
+    if not has_bias:                    # placeholder so arity is static
+        bias = jnp.zeros_like(scale)
+    grid = (m // block_m, n // block_n, k // block_k)
+    kernel = functools.partial(_fused_kernel, n_planes=bw_n, radix=radix,
+                               k_steps=grid[2], activation=activation,
+                               has_bias=has_bias)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bw_n, 1, 1), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((bw_n, block_m, block_k), lambda i, j, kk: (0, i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            vec_spec,
+            vec_spec,
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.dtype(out_dtype)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(mask, digits, b, scale.astype(jnp.float32), bias.astype(jnp.float32))

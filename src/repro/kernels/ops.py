@@ -10,6 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
+import weakref
 from typing import Optional
 
 import jax
@@ -17,12 +19,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import encodings as enc
+from repro.core import quant as quantlib
 from . import bw_gemm as _bw
 from . import quant_gemm as _qg
 from . import ref as kref
 
 __all__ = ["PlannedOperand", "encode_planes", "plane_block_mask",
-           "plan_operand", "bw_gemm", "quant_gemm", "plane_density"]
+           "plan_operand", "bw_gemm", "quant_gemm", "plane_density",
+           "select_block_sizes", "bw_gemm_fused", "quant_gemm_fused",
+           "plan_for", "plan_cache_stats", "plan_cache_clear",
+           "quantized_dense", "plan_dense_weight", "planned_dense_apply",
+           "plan_params"]
 
 
 def _interpret() -> bool:
@@ -38,9 +45,34 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-def encode_planes(a, encoding: str = "ent"):
+def encode_planes(a, encoding: str = "ent", bits: int = 8):
     """int8 A [M, K] -> digit planes int8 [BW, M, K]."""
-    return kref.encode_planes_ref(a, encoding)
+    return kref.encode_planes_ref(a, encoding, bits)
+
+
+# ---------------------------------------------------------------------------
+# Per-shape block-size selection
+# ---------------------------------------------------------------------------
+# Dispatch table for the kernel execution path: first row whose minimum
+# (M, K, N) thresholds are all met wins.  Bigger blocks amortise grid
+# overhead and raise MXU occupancy on large GEMMs; 128 is the MXU-aligned
+# floor.  Later autotuning PRs refine this table in place -- the seam every
+# caller goes through is select_block_sizes().
+_BLOCK_TABLE = (
+    # (min_m, min_k, min_n)  ->  (block_m, block_k, block_n)
+    ((512, 2048, 512), (256, 512, 256)),
+    ((256, 1024, 256), (256, 512, 128)),
+    ((128, 512, 128), (128, 256, 128)),
+    ((0, 0, 0), (128, 128, 128)),
+)
+
+
+def select_block_sizes(m: int, k: int, n: int):
+    """(block_m, block_k, block_n) for a logical [M, K] x [K, N] GEMM."""
+    for (mn_m, mn_k, mn_n), blocks in _BLOCK_TABLE:
+        if m >= mn_m and k >= mn_k and n >= mn_n:
+            return blocks
+    return _BLOCK_TABLE[-1][1]
 
 
 def plane_block_mask(digits, block_m: int, block_k: int):
@@ -77,7 +109,7 @@ class PlannedOperand:
 
 def plan_operand(a_int8, encoding: str = "ent", block_m: int = 128,
                  block_k: int = 256, reorder_rows: bool = True,
-                 encode_impl: str = "ref") -> PlannedOperand:
+                 encode_impl: str = "ref", bits: int = 8) -> PlannedOperand:
     """Encode + (optionally) magnitude-order the multiplicand rows.
 
     a_int8: int8 [M, K] (e.g. a transposed weight matrix).
@@ -90,22 +122,25 @@ def plan_operand(a_int8, encoding: str = "ent", block_m: int = 128,
     if reorder_rows:
         # rows with any |value| >= 43 need plane 3 (EN-T: 2*(1+4+16)=42 is the
         # largest 3-plane-representable magnitude); sort rows by their
-        # high-plane digit count so those rows pack into few blocks.
-        d0 = kref.encode_planes_ref(a, encoding)
-        hi = np.asarray((d0[-1] != 0).sum(axis=1) * 1000 +
-                        (d0[-2] != 0).sum(axis=1))
+        # high-plane digit count so those rows pack into few blocks.  Score
+        # over the top min(2, BW) planes: narrow encodings (e.g. 2-bit
+        # operands have a single radix-4 plane) must not index past plane 0.
+        d0 = kref.encode_planes_ref(a, encoding, bits)
+        hi = np.zeros(a.shape[0], dtype=np.int64)
+        for p in range(min(2, d0.shape[0])):
+            hi = hi * 1000 + np.asarray((d0[-(p + 1)] != 0).sum(axis=1))
         row_perm = np.argsort(-hi, kind="stable").astype(np.int32)
     else:
         row_perm = np.arange(a.shape[0], dtype=np.int32)
     inv_perm = np.argsort(row_perm).astype(np.int32)
     a_sorted = a[row_perm]
-    if encode_impl == "kernel" and encoding == "ent":
+    if encode_impl == "kernel" and encoding == "ent" and bits == 8:
         from . import encode as _enc_kernel
         digits, mask = _enc_kernel.ent_encode(
             a_sorted, block_m=block_m, block_k=block_k,
             interpret=_interpret())
     else:
-        digits = kref.encode_planes_ref(a_sorted, encoding)
+        digits = kref.encode_planes_ref(a_sorted, encoding, bits)
         mask = plane_block_mask(digits, block_m, block_k)
     return PlannedOperand(digits, mask, row_perm, inv_perm, m, k,
                           block_m, block_k, encoding)
@@ -151,3 +186,310 @@ def quant_gemm(a, b, *, block_m: int = 128, block_n: int = 128,
     out = _qg.quant_gemm(a, b, block_m=block_m, block_n=block_n,
                          block_k=block_k, interpret=bool(interpret))
     return out[:m, :n]
+
+
+def bw_gemm_fused(planned: PlannedOperand, b, scale, bias=None, *,
+                  activation=None, block_n: int = 128,
+                  out_dtype=jnp.float32, interpret: Optional[bool] = None):
+    """C = act((A @ B)_int * scale + bias) with A pre-planned.
+
+    b: int8 [K, N].  scale/bias: per-row vectors of length M (the planned
+    operand's original row order -- permutation into planned order and the
+    padding are handled here).  Returns float [M, N].
+    """
+    if interpret is None:
+        interpret = _interpret()
+    k, n = b.shape
+    assert k == planned.k, (k, planned.k)
+    m_pad = planned.digits.shape[1]
+    row_perm = jnp.asarray(planned.row_perm)
+    scale_rows = _channel_rows(scale, planned.m, m_pad, row_perm)
+    bias_rows = None
+    if bias is not None:
+        bias_rows = _channel_rows(bias, planned.m, m_pad, row_perm)
+    b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
+                block_n, 1)
+    out = _bw.bw_gemm_fused(
+        planned.digits, b, planned.mask, scale_rows, bias_rows,
+        block_m=planned.block_m, block_n=block_n, block_k=planned.block_k,
+        radix=enc.radix(planned.encoding), interpret=bool(interpret),
+        activation=activation, epilogue_axis="m", out_dtype=out_dtype)
+    return out[jnp.asarray(planned.inv_perm)][:planned.m, :n]
+
+
+def quant_gemm_fused(a, b, scale, bias=None, *, activation=None,
+                     block_m: int = 128, block_n: int = 128,
+                     block_k: int = 256, out_dtype=jnp.float32,
+                     interpret: Optional[bool] = None):
+    """Baseline int8 GEMM + fused dequant epilogue (pads, slices back).
+
+    scale/bias: per-output-channel vectors of length N (epilogue axis 'n').
+    """
+    if interpret is None:
+        interpret = _interpret()
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    a = _pad_to(_pad_to(jnp.asarray(a, jnp.int8), block_m, 0), block_k, 1)
+    b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), block_k, 0), block_n, 1)
+    scale = _pad_to(jnp.asarray(scale, jnp.float32).reshape(1, n), block_n, 1)
+    if bias is not None:
+        bias = _pad_to(jnp.asarray(bias, jnp.float32).reshape(1, n),
+                       block_n, 1)
+    out = _qg.quant_gemm_fused(
+        a, b, scale, bias, block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=bool(interpret), activation=activation, epilogue_axis="n",
+        out_dtype=out_dtype)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Weight-planning cache: plan once per parameter, reuse every call
+# ---------------------------------------------------------------------------
+# jax.Arrays are immutable, so identity is a sound cache key while the array
+# is alive; a weakref finalizer evicts the entry when the buffer dies so a
+# recycled id() can never alias a stale plan.  Mutable numpy inputs fall back
+# to a content fingerprint.  This is the EN-T move of pushing encoding out of
+# the inner loop: serving pays the encode + permutation + occupancy-mask cost
+# once per weight, not once per matmul.
+
+class _PlanCache:
+    MAX_ENTRIES = 256     # FIFO cap: content-keyed (numpy) entries have no
+                          # weakref eviction and would otherwise grow forever
+
+    def __init__(self):
+        self._entries = {}
+        self.hits = 0
+        self.misses = 0
+
+    def _key(self, w, params):
+        if isinstance(w, np.ndarray):
+            digest = hashlib.blake2b(np.ascontiguousarray(w).tobytes(),
+                                     digest_size=16).hexdigest()
+            return ("hash", w.shape, str(w.dtype), digest) + params, None
+        return ("id", id(w)) + params, w
+
+    def lookup(self, w, params, build):
+        key, anchor = self._key(w, params)
+        hit = self._entries.get(key)
+        if hit is not None:
+            self.hits += 1
+            return hit[0]
+        self.misses += 1
+        value = build()
+        finalizer = None
+        if anchor is not None:
+            try:
+                finalizer = weakref.ref(
+                    anchor, lambda _ref, k=key: self._entries.pop(k, None))
+            except TypeError:
+                # id-keyed but not weakref-able: caching would risk a
+                # recycled id() aliasing a stale plan -- don't cache
+                return value
+        while len(self._entries) >= self.MAX_ENTRIES:
+            self._entries.pop(next(iter(self._entries)))
+        self._entries[key] = (value, finalizer)
+        return value
+
+    def clear(self):
+        self._entries.clear()
+        self.hits = self.misses = 0
+
+    def stats(self):
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses}
+
+
+_PLAN_CACHE = _PlanCache()
+
+
+def plan_cache_stats() -> dict:
+    return _PLAN_CACHE.stats()
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+
+
+def plan_for(w, planes: int, encoding: str = "ent",
+             block_m: Optional[int] = None, block_k: Optional[int] = None):
+    """Quantize + plan a dense weight for the kernel path, with caching.
+
+    w: float [K, N] (d_in, d_out).  Returns (PlannedOperand of W^T with
+    [N, K] layout -- output channels as kernel rows -- and the per-channel
+    weight scale sw of shape [1, N]).
+    """
+    if isinstance(w, jax.core.Tracer):
+        raise TypeError(
+            "plan_for needs concrete weights (planning is a one-time eager "
+            "step); under tracing use the jnp oracle path instead")
+    k, n = w.shape
+    if block_m is None or block_k is None:
+        sel_m, sel_k, _ = select_block_sizes(n, k, 128)
+        block_m = block_m or sel_m
+        block_k = block_k or sel_k
+    params = (int(planes), encoding, int(block_m), int(block_k), k, n)
+
+    def build():
+        qw, sw = quantlib.quantize_to_planes(
+            jnp.asarray(w).astype(jnp.float32), planes, axis=0)
+        planned = plan_operand(qw.T, encoding=encoding, block_m=block_m,
+                               block_k=block_k)
+        return planned, jnp.asarray(sw, jnp.float32)
+
+    return _PLAN_CACHE.lookup(w, params, build)
+
+
+def _channel_rows(vec, n: int, m_pad: int, row_perm) -> jax.Array:
+    """[N] per-channel vector -> [M_pad, 1] rows in planned (permuted) order."""
+    full = jnp.zeros((m_pad,), jnp.float32).at[:n].set(
+        jnp.asarray(vec, jnp.float32).reshape(-1))
+    return full[row_perm].reshape(-1, 1)
+
+
+def plan_dense_weight(w, planes: int, encoding: str = "ent",
+                      use_cache: bool = True) -> dict:
+    """Quantize + plan a dense weight into a pure-array plan record.
+
+    The record is a pytree of arrays only (digit planes, occupancy mask,
+    channel permutations, permuted weight scales), so it can be attached to
+    a model's param tree, sliced by jax.lax.scan over stacked layers, and
+    fed to the fused kernel *under tracing* -- the planning itself happens
+    here, eagerly, once per weight.
+
+    Radix-4 encodings only: the record carries arrays, not the encoding
+    name, and planned_dense_apply reconstructs block geometry (but not the
+    radix) from shapes -- a radix-2 plan would decode silently wrong.
+    """
+    if enc.radix(encoding) != 4:
+        raise ValueError(
+            f"plan_dense_weight supports radix-4 encodings (ent/mbe); "
+            f"got {encoding!r}")
+    if use_cache:
+        planned, sw = plan_for(w, planes, encoding=encoding)
+    else:
+        k, n = w.shape
+        block_m, block_k, _ = select_block_sizes(n, k, 128)
+        qw, sw = quantlib.quantize_to_planes(
+            jnp.asarray(w).astype(jnp.float32), planes, axis=0)
+        planned = plan_operand(qw.T, encoding=encoding, block_m=block_m,
+                               block_k=block_k)
+        sw = jnp.asarray(sw, jnp.float32)
+    n = w.shape[1]
+    m_pad = planned.digits.shape[1]
+    row_perm = jnp.asarray(planned.row_perm)
+    return {
+        "digits": planned.digits,                     # int8 [BW, M_pad, K_pad]
+        "mask": planned.mask,                         # bool [BW, M/bm, K/bk]
+        "row_perm": row_perm,                         # int32 [M_pad]
+        "inv_perm": jnp.asarray(planned.inv_perm),    # int32 [M_pad]
+        "sw_rows": _channel_rows(sw.reshape(-1), n, m_pad, row_perm),
+    }
+
+
+def planned_dense_apply(plan: dict, x, planes: int, n_out: int, *, bias=None,
+                        activation=None, out_dtype=jnp.float32,
+                        block_n: Optional[int] = None,
+                        interpret: Optional[bool] = None):
+    """y = act((x @ w)_int * s_x * s_w + bias) through the fused kernel.
+
+    plan: record from plan_dense_weight (possibly a scan-sliced layer of a
+    stacked plan).  Activations are quantized per-tensor at call time; the
+    dequant (per-channel weight scale x per-tensor act scale), bias add and
+    activation run in the kernel epilogue on the VMEM-resident accumulator.
+    Traceable end to end: safe inside jit / scan (block sizes come from
+    static array shapes).
+    """
+    if interpret is None:
+        interpret = _interpret()
+    digits, mask = plan["digits"], plan["mask"]
+    bw_n, m_pad, k_pad = digits.shape
+    block_m = m_pad // mask.shape[1]
+    block_k = k_pad // mask.shape[2]
+    k = x.shape[-1]
+    lead = x.shape[:-1]
+    qx, sx = quantlib.quantize_to_planes(
+        jnp.asarray(x).astype(jnp.float32), planes)
+    x2 = qx.reshape(-1, k)
+    batch = x2.shape[0]
+    if block_n is None:
+        block_n = select_block_sizes(n_out, k, batch)[2]
+    scale_rows = plan["sw_rows"] * sx
+    bias_rows = None
+    if bias is not None:
+        bias_rows = _channel_rows(bias, n_out, m_pad, plan["row_perm"])
+    bt = _pad_to(_pad_to(x2.T, block_k, 0), block_n, 1)
+    out = _bw.bw_gemm_fused(
+        digits, bt, mask, scale_rows, bias_rows,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        radix=4, interpret=bool(interpret), activation=activation,
+        epilogue_axis="m", out_dtype=jnp.float32)
+    y = out[plan["inv_perm"]][:n_out, :batch].T
+    return y.reshape(*lead, n_out).astype(out_dtype)
+
+
+def quantized_dense(x, w, planes: int, *, bias=None, activation=None,
+                    out_dtype=jnp.float32, encoding: str = "ent",
+                    block_n: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    """Eager kernel-path dense: plan (cached per parameter) + fused GEMM.
+
+    x: [..., K] float.  w: [K, N] float (concrete).  bias: optional [N].
+    Under tracing use plan_params + planned_dense_apply instead (the model
+    layer routes this automatically).
+    """
+    plan = plan_dense_weight(w, planes, encoding=encoding)
+    return planned_dense_apply(plan, x, planes, w.shape[1], bias=bias,
+                               activation=activation, out_dtype=out_dtype,
+                               block_n=block_n, interpret=interpret)
+
+
+# Param-dict names whose "w" never flows through the quantized dense path
+# (raw matmuls / unquantized projections) -- planning them would carry dead
+# digit-plane arrays (~4x the weight bytes) through the serve step.
+_NO_PLAN_KEYS = frozenset({
+    "router", "frontend_proj",                      # raw matmul / unquantized
+    "mix_w1", "mix_w2", "w_lora1", "w_lora2",       # rwkv6 mixing loras
+    "dt_proj", "x_to_dt", "x_to_bc",                # ssm fp32 projections
+})
+
+
+def plan_params(params, planes: int, encoding: str = "ent",
+                should_plan=None):
+    """Attach a 'w_plan' record next to every dense weight in a param tree.
+
+    2-D weights get a single plan; 3-D weights (layer-stacked for scan) get
+    per-layer plans stacked on axis 0 so jax.lax.scan slices them alongside
+    the weights.  Returns (new_params, planned_count).  The original tree is
+    not mutated; non-dict leaves and non-dense weights pass through.
+
+    should_plan: optional (path_tuple, w) -> bool to narrow which weights
+    get plans.  The default plans every dense "w" except dicts named in
+    _NO_PLAN_KEYS (known raw-matmul consumers like the MoE router).
+    """
+    count = 0
+    if should_plan is None:
+        def should_plan(path, _w):
+            return not (path and path[-1] in _NO_PLAN_KEYS)
+
+    def walk(node, path):
+        nonlocal count
+        if not isinstance(node, dict):
+            return node
+        out = {k: walk(v, path + (k,)) for k, v in node.items()}
+        w = node.get("w")
+        ndim = getattr(w, "ndim", 0)
+        if ndim not in (2, 3) or not should_plan(path, w):
+            return out
+        if ndim == 2:
+            out["w_plan"] = plan_dense_weight(w, planes, encoding)
+            count += 1
+        else:                  # [L, K, N] stacked for the layer scan
+            plans = [plan_dense_weight(w[i], planes, encoding,
+                                       use_cache=False)
+                     for i in range(w.shape[0])]
+            out["w_plan"] = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
+            count += w.shape[0]
+        return out
+
+    return walk(params, ()), count

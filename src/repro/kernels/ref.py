@@ -22,9 +22,9 @@ def quant_gemm_ref(a, b):
         (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
 
 
-def encode_planes_ref(a, encoding: str = "ent"):
-    """Encode int8 A [M, K] into digit planes [BW, M, K] (int8, {-2..2})."""
-    d = enc.encode_jnp(a, encoding)           # [M, K, BW]
+def encode_planes_ref(a, encoding: str = "ent", bits: int = 8):
+    """Encode int A [M, K] into digit planes [BW, M, K] (int8, {-2..2})."""
+    d = enc.encode_jnp(a, encoding, bits)     # [M, K, BW]
     return jnp.moveaxis(d, -1, 0)             # [BW, M, K]
 
 

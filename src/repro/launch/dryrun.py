@@ -131,6 +131,8 @@ def _compile_step(cfg, shape, mesh, rules, multi_pod: bool,
 def _cost_tuple(compiled) -> dict:
     """(flops, bytes, collective-bytes, coll-by-op) of a compiled module."""
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):      # older jaxlib: list of one dict
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     coll = rl.collective_bytes(hlo)
     return {"flops": float(cost.get("flops", 0.0)),
@@ -169,17 +171,20 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                fsdp: Optional[bool] = None,
                moe_groups: int = 0,
                param_dtype: Optional[str] = None,
-               skip_cost_variants: bool = False):
+               skip_cost_variants: bool = False,
+               quant_impl: str = "pallas"):
     """Lower + compile one cell (+ cost variants).  Returns
     (record dict, lowered, compiled)."""
     cfg = get_config(arch)
     overrides = {}
     if quant_planes:
         overrides["quant_planes"] = quant_planes
-        # cost-representative impl: one int8 dot per linear (what the fused
-        # bw_gemm kernel costs before plane skipping), not the 4-dot oracle
+        # the kernel execution path: under tracing "pallas" lowers each
+        # linear to one int8 dot (what the fused bw_gemm kernel costs before
+        # plane skipping), so cost_analysis reflects the kernelized
+        # technique instead of the 4-dot oracle
         from repro.models import layers as _layers
-        _layers.QUANT_IMPL = "int8"
+        _layers.set_quant_impl(quant_impl)
     if remat is not None:
         overrides["remat"] = remat
     if fsdp is not None:
@@ -258,6 +263,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         "status": "ok", "kind": kind, "chips": chips,
         "seq_len": shape.seq_len, "global_batch": shape.global_batch,
         "quant_planes": quant_planes,
+        "quant_impl": quant_impl if quant_planes else None,
         "seq_axis": seq_axis,
         "capacity_axis": capacity_axis,
         "kv_seq_axis": kv_seq_axis,
@@ -327,6 +333,10 @@ def main(argv=None) -> int:
     ap.add_argument("--quant-planes", type=int, default=0,
                     help="enable the paper's BW-decomposed int8 path with "
                          "this many EN-T digit planes")
+    ap.add_argument("--quant-impl", default="pallas",
+                    choices=("planes", "int8", "pallas"),
+                    help="quantized matmul impl to lower (pallas = the "
+                         "kernel path's cost-representative lowering)")
     ap.add_argument("--seq-axis", default=None,
                     help="mesh axis for sequence parallelism (e.g. 'model')")
     ap.add_argument("--capacity-axis", default=None,
@@ -352,7 +362,8 @@ def main(argv=None) -> int:
     if not (args.arch and args.shape):
         ap.error("--arch and --shape required (or --all)")
     recs = run_cell(args.arch, args.shape, args.mesh,
-                    quant_planes=args.quant_planes, seq_axis=args.seq_axis,
+                    quant_planes=args.quant_planes,
+                    quant_impl=args.quant_impl, seq_axis=args.seq_axis,
                     capacity_axis=args.capacity_axis,
                     kv_seq_axis=args.kv_seq_axis,
                     fsdp=False if args.no_fsdp else None,
@@ -384,7 +395,8 @@ def _run_all(args) -> int:
                    "--arch", arch, "--shape", shape_name,
                    "--mesh", args.mesh, "--out", out]
             if args.quant_planes:
-                cmd += ["--quant-planes", str(args.quant_planes)]
+                cmd += ["--quant-planes", str(args.quant_planes),
+                        "--quant-impl", args.quant_impl]
             print(f"[dryrun] {' '.join(cmd[3:])}", flush=True)
             r = subprocess.run(cmd)
             if r.returncode != 0:

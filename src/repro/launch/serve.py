@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS, get_config
+from repro.models import layers as L
 from repro.models.api import get_api
 from repro.parallel.sharding import unbox
 from repro.train.steps import make_serve_step
@@ -41,15 +42,42 @@ class Request:
 
 
 class ServeEngine:
-    """Fixed-batch continuous-batching engine over the decode state."""
+    """Fixed-batch continuous-batching engine over the decode state.
 
-    def __init__(self, cfg, batch: int, max_len: int, seed: int = 0):
+    quant: optional layers.QuantState.  With impl == "pallas" the engine
+    serves through the kernel execution path: every dense weight is
+    pre-planned once at init (encode -> digit planes -> occupancy mask ->
+    magnitude-ordered channel permutation) and the plan records are
+    attached to the param tree, so the jit'd serve step scans/slices them
+    like any other parameter and each quantized matmul executes the fused
+    Pallas bw_gemm (interpret mode off-TPU) instead of the jnp oracle.
+    """
+
+    def __init__(self, cfg, batch: int, max_len: int, seed: int = 0,
+                 quant: Optional[L.QuantState] = None):
+        self.quant = quant or L.QuantState(planes=cfg.quant_planes,
+                                           impl=L.QUANT_IMPL)
+        if self.quant.planes:
+            cfg = cfg.replace(quant_planes=self.quant.planes)
         self.cfg = cfg
         self.api = get_api(cfg)
         self.batch = batch
         self.max_len = max_len
         self.params = unbox(self.api.init(jax.random.PRNGKey(seed), cfg))
         self.state = unbox(self.api.init_decode(cfg, batch, max_len))
+        self._kernel_path = bool(self.quant.planes) and \
+            self.quant.impl == "pallas"
+        if self._kernel_path:
+            # one-time planning step: encode every dense weight into digit
+            # planes + occupancy mask + channel permutation and attach the
+            # plan records to the param tree.  The jit'd serve step then
+            # scans/slices them like any other parameter and every quantized
+            # matmul executes the fused Pallas kernel.
+            from repro.kernels import ops
+            self.params, planned = ops.plan_params(self.params,
+                                                   self.quant.planes)
+            self.quant.plan_stats = {"planned_weights": planned,
+                                     **ops.plan_cache_stats()}
         self.step = jax.jit(make_serve_step(cfg))
         self.slots: List[Optional[Request]] = [None] * batch
         self.pos = np.zeros(batch, np.int32)
@@ -89,21 +117,35 @@ class ServeEngine:
         return finished
 
     def run(self, requests: List[Request]) -> dict:
+        # the step traces against the global impl selector on its first
+        # call; activate for the duration of the run and restore after so
+        # engines don't leak their impl into unrelated code in the process
+        prev_impl = L.QUANT_IMPL
+        self.quant.activate()
         queue = deque(requests)
         done: List[Request] = []
         t0 = time.time()
-        while queue or any(s is not None for s in self.slots):
-            self._admit(queue)
-            nxt, self.state = self.step(
-                self.params, jnp.asarray(self.cur),
-                jnp.asarray(self.pos), self.state)
-            done.extend(self._advance(np.asarray(nxt)))
-            self.steps += 1
+        try:
+            while queue or any(s is not None for s in self.slots):
+                self._admit(queue)
+                nxt, self.state = self.step(
+                    self.params, jnp.asarray(self.cur),
+                    jnp.asarray(self.pos), self.state)
+                done.extend(self._advance(np.asarray(nxt)))
+                self.steps += 1
+        finally:
+            L.set_quant_impl(prev_impl)
         dt = time.time() - t0
         gen = sum(len(r.out) for r in done)
-        return {"requests": len(done), "generated_tokens": gen,
-                "engine_steps": self.steps, "wall_s": round(dt, 2),
-                "tok_per_s": round(gen / max(dt, 1e-9), 1)}
+        stats = {"requests": len(done), "generated_tokens": gen,
+                 "engine_steps": self.steps, "wall_s": round(dt, 2),
+                 "tok_per_s": round(gen / max(dt, 1e-9), 1),
+                 "quant_planes": self.quant.planes,
+                 "quant_impl": self.quant.impl}
+        if self._kernel_path:
+            from repro.kernels import ops
+            stats["plan_cache"] = ops.plan_cache_stats()
+        return stats
 
 
 def main(argv=None) -> int:
@@ -115,6 +157,12 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quant-planes", type=int, default=0,
+                    help="serve through the BW-decomposed int8 path with "
+                         "this many EN-T digit planes")
+    ap.add_argument("--quant-impl", choices=L.QUANT_IMPLS, default="pallas",
+                    help="quantized matmul implementation (pallas = the "
+                         "fused kernel execution path)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -122,8 +170,10 @@ def main(argv=None) -> int:
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     args.prompt_len).tolist(),
                     args.max_tokens) for i in range(args.requests)]
+    quant = L.QuantState(planes=args.quant_planes, impl=args.quant_impl) \
+        if args.quant_planes else None
     eng = ServeEngine(cfg, args.batch,
-                      args.prompt_len + args.max_tokens + 1)
+                      args.prompt_len + args.max_tokens + 1, quant=quant)
     stats = eng.run(reqs)
     print(stats)
     assert stats["requests"] == args.requests

@@ -20,7 +20,7 @@ from repro.core import bw_ref
 __all__ = [
     "dense_init", "dense_apply", "rmsnorm_init", "rmsnorm_apply",
     "layernorm_init", "layernorm_apply", "embed_init", "embed_apply",
-    "rope", "activation", "QuantState",
+    "rope", "activation", "QuantState", "set_quant_impl", "QUANT_IMPLS",
 ]
 
 
@@ -43,24 +43,51 @@ def dense_init(key, d_in: int, d_out: int, axes: Tuple[str, str],
     return p
 
 
-def dense_apply(p, x, dtype=jnp.bfloat16, quant_planes: int = 0):
-    """y = x @ w (+ b).
+def dense_apply(p, x, dtype=jnp.bfloat16, quant_planes: int = 0,
+                activation: Optional[str] = None):
+    """y = act(x @ w (+ b)).
 
     quant_planes > 0 routes through the paper's BW-decomposed quantised
     matmul semantics (exact int8 digit-plane GEMM, per-tensor act scale and
-    per-channel weight scale), with a straight-through gradient.  On TPU the
-    integer GEMM is the Pallas bw_gemm kernel; the jnp path here is its
-    bit-exact oracle and keeps the same plane-bounded quantisation grid.
+    per-channel weight scale), with a straight-through gradient.  With
+    QUANT_IMPL == "pallas" and concrete operands (serving / eager forward)
+    the integer GEMM is the Pallas bw_gemm kernel with the dequant + bias +
+    activation epilogue fused in; under tracing (jit'd train/serve steps)
+    it falls back bit-exactly to the jnp oracle on the same plane-bounded
+    quantisation grid.
+
+    activation: optional epilogue activation name (see layers.activation).
+    None keeps the historical behaviour of returning the linear output.
     """
     w = p["w"]
+    b = p.get("b")
     if quant_planes:
+        if QUANT_IMPL == "pallas" and "w_plan" in p:
+            # pre-planned weights (ops.plan_params): fully traceable --
+            # the fused kernel runs inside jit'd serve steps and scans
+            from repro.kernels import ops as kops
+            return kops.planned_dense_apply(
+                p["w_plan"], x, quant_planes, w.shape[-1], bias=b,
+                activation=activation, out_dtype=dtype)
+        if QUANT_IMPL == "pallas" and not _is_traced(x, w):
+            from repro.kernels import ops as kops
+            return kops.quantized_dense(
+                x, w, quant_planes, bias=b, activation=activation,
+                out_dtype=dtype)
         y = _bw_quant_matmul(x, w, quant_planes, dtype)
     else:
         y = jax.lax.dot_general(x.astype(dtype), w.astype(dtype),
                                 (((x.ndim - 1,), (0,)), ((), ())))
-    if "b" in p:
-        y = y + p["b"].astype(dtype)
+    if b is not None:
+        y = y + b.astype(dtype)
+    if activation is not None:
+        from repro.kernels.bw_gemm import EPILOGUE_ACTIVATIONS
+        y = EPILOGUE_ACTIVATIONS[activation](y)
     return y
+
+
+def _is_traced(*arrays) -> bool:
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
 
 
 import functools
@@ -70,10 +97,25 @@ import functools
 #               oracle; 4 int8 dots).  Default; used by tests/training.
 #   "int8"   -- single int8 dot_general with the same plane-bounded
 #               quantization grid: the cost the fused TPU bw_gemm kernel
-#               pays *before* plane skipping.  Used by the dry-run so
-#               cost_analysis reflects the kernelized technique instead of
-#               the 4-dot oracle.
+#               pays *before* plane skipping.
+#   "pallas" -- the kernel execution path: pre-planned weights (cached
+#               digit planes + occupancy mask + channel permutation) fed to
+#               the fused bw_gemm kernel with the dequant/bias/activation
+#               epilogue in-kernel.  Eager calls (serving, benchmarks) run
+#               the real kernel; traced calls (jit'd steps, the dry-run)
+#               lower to the single int8 dot -- the kernel's pre-skipping
+#               cost model, bit-identical to the planes oracle in the int
+#               accumulator.
 QUANT_IMPL = "planes"
+QUANT_IMPLS = ("planes", "int8", "pallas")
+
+
+def set_quant_impl(kind: str) -> None:
+    """Select the quantized-matmul implementation globally."""
+    global QUANT_IMPL
+    if kind not in QUANT_IMPLS:
+        raise ValueError(f"unknown quant impl {kind!r}; one of {QUANT_IMPLS}")
+    QUANT_IMPL = kind
 
 
 @functools.lru_cache(maxsize=None)
@@ -87,7 +129,10 @@ def _make_bw_quant_matmul(planes: int, dtype_name: str, impl_kind: str):
         qw, sw = quantlib.quantize_to_planes(w.astype(jnp.float32), planes,
                                              axis=0)
         x2 = qx.reshape(-1, qx.shape[-1])
-        if impl_kind == "int8":
+        if impl_kind in ("int8", "pallas"):
+            # "pallas" reaches here only under tracing (eager calls take the
+            # kernel path in dense_apply): one int8 dot is the kernel's
+            # cost-representative, bit-exact lowering.
             acc = jax.lax.dot_general(
                 x2.astype(jnp.int8), qw,
                 (((1,), (0,)), ((), ())),
@@ -195,15 +240,27 @@ def rope(q, k, positions, head_dim: int, theta: float = 1e4):
 
 
 def activation(name: str):
-    if name == "silu":
-        return jax.nn.silu
-    if name == "gelu":
-        return jax.nn.gelu
-    if name == "relu2":          # Nemotron-4: squared ReLU
-        return lambda x: jnp.square(jax.nn.relu(x))
-    raise ValueError(name)
+    # single source of truth shared with the kernels' fused epilogue, so a
+    # new activation is automatically available in both places
+    from repro.kernels.bw_gemm import EPILOGUE_ACTIVATIONS
+    if name is None or name not in EPILOGUE_ACTIVATIONS:
+        raise ValueError(name)
+    return EPILOGUE_ACTIVATIONS[name]
 
 
 @dataclasses.dataclass
 class QuantState:
+    """Quantized-execution state threaded through launchers/engines.
+
+    planes selects the EN-T digit-plane budget (0 = bf16 path); impl picks
+    the quantized-matmul implementation (see QUANT_IMPLS).  plan_stats is
+    filled by engines that pre-plan weights through the kernel path so
+    callers can verify the kernel (not the oracle) served the traffic.
+    """
     planes: int = 0
+    impl: str = "planes"
+    plan_stats: Optional[dict] = None
+
+    def activate(self) -> "QuantState":
+        set_quant_impl(self.impl)
+        return self

@@ -48,12 +48,15 @@ def mlp_init(key, cfg, param_dtype=jnp.float32):
 
 def mlp_apply(p, x, cfg, dtype=jnp.bfloat16):
     act = L.activation(cfg.act)
-    up = L.dense_apply(p["up"], x, dtype, cfg.quant_planes)
     if cfg.gated_mlp:
+        up = L.dense_apply(p["up"], x, dtype, cfg.quant_planes)
         g = L.dense_apply(p["gate"], x, dtype, cfg.quant_planes)
         h = act(g) * up
     else:
-        h = act(up)
+        # activation folded into the dense epilogue (fused in-kernel on the
+        # pallas quantized path; identical math on the other impls)
+        h = L.dense_apply(p["up"], x, dtype, cfg.quant_planes,
+                          activation=cfg.act)
     h = constrain(h, "batch", "seq_inner", "mlp")
     return L.dense_apply(p["down"], h, dtype, cfg.quant_planes)
 

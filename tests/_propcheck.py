@@ -1,0 +1,154 @@
+"""Deterministic stand-in for `hypothesis` so the suite collects offline.
+
+The real library cannot be installed in network-less environments, yet six
+test modules use property-based tests as the correctness oracle for the
+paper's bit-weight decomposition.  This module provides the tiny subset of
+the hypothesis surface those tests use (`given`, `settings`,
+`strategies.integers/floats/lists`) backed by seeded example generation:
+every test draws the same example sequence on every run (seeded from the
+test's qualified name), so failures are reproducible, and the first drawn
+examples are the strategy bounds themselves so edge cases are always hit.
+
+Usage in test modules:
+
+    try:
+        from hypothesis import given, settings, strategies as hst
+    except ImportError:                     # offline: deterministic fallback
+        from _propcheck import given, settings, strategies as hst
+
+When the real hypothesis is installed it wins, including shrinking and its
+example database; this fallback only guarantees coverage, determinism and
+collection.
+"""
+from __future__ import annotations
+
+import functools
+import hashlib
+import inspect
+import itertools
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class Strategy:
+    """A generator of example values: edge cases first, then random draws."""
+
+    def __init__(self, draw, edges=()):
+        self._draw = draw
+        self.edges = tuple(edges)
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class _Strategies:
+    """The `hypothesis.strategies` subset used by this repo's tests."""
+
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        lo = -(2 ** 63) if min_value is None else int(min_value)
+        hi = (2 ** 63) - 1 if max_value is None else int(max_value)
+        edges = sorted({lo, hi, *(v for v in (0, 1, -1) if lo <= v <= hi)})
+        # np.integers is half-open and limited to int64; draw via python ints
+        span = hi - lo + 1
+
+        def draw(rng):
+            return lo + int(rng.integers(0, min(span, 2 ** 62)))
+        return Strategy(draw, edges)
+
+    @staticmethod
+    def floats(min_value=None, max_value=None, **_kw):
+        lo = -1e308 if min_value is None else float(min_value)
+        hi = 1e308 if max_value is None else float(max_value)
+
+        def draw(rng):
+            return float(lo + (hi - lo) * rng.random())
+        return Strategy(draw, (lo, hi, (lo + hi) / 2.0))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elements.example(rng) for _ in range(size)]
+        edge_lists = []
+        for size in {min_size, max_size}:
+            for e in elements.edges[:2] or (None,):
+                if e is not None:
+                    edge_lists.append([e] * size)
+        return Strategy(draw, edge_lists)
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Attach run settings to the test; composes with @given either side."""
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def _edge_examples(args_strats, kw_strats):
+    """Cartesian-ish sweep of strategy edge values (bounded)."""
+    pools = [s.edges or (None,) for s in args_strats] + \
+            [s.edges or (None,) for s in kw_strats.values()]
+    combos = itertools.islice(itertools.product(*pools), 32)
+    for combo in combos:
+        if any(c is None for c in combo):
+            continue
+        yield (combo[:len(args_strats)],
+               dict(zip(kw_strats, combo[len(args_strats):])))
+
+
+def given(*args_strats, **kw_strats):
+    """Run the test over seeded random examples (plus the strategy edges)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*fixture_args, **fixture_kw):
+            max_examples = getattr(
+                wrapper, "_propcheck_max_examples",
+                getattr(fn, "_propcheck_max_examples",
+                        _DEFAULT_MAX_EXAMPLES))
+            seed = int.from_bytes(
+                hashlib.blake2b(fn.__qualname__.encode(),
+                                digest_size=8).digest(), "big")
+            rng = np.random.default_rng(seed)
+            n_run = 0
+            for a, kw in _edge_examples(args_strats, kw_strats):
+                if n_run >= max_examples:
+                    break
+                _run_one(fn, fixture_args, fixture_kw, a, kw)
+                n_run += 1
+            while n_run < max_examples:
+                a = tuple(s.example(rng) for s in args_strats)
+                kw = {k: s.example(rng) for k, s in kw_strats.items()}
+                _run_one(fn, fixture_args, fixture_kw, a, kw)
+                n_run += 1
+        # keep the settings mark discoverable if @settings is applied above
+        wrapper._propcheck_inner = fn
+        # pytest must see only the *fixture* params: drop the strategy-filled
+        # ones from the reported signature (kwargs by name, positionals from
+        # the right, matching hypothesis' argument mapping).
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        params = [p for p in sig.parameters.values()
+                  if p.name not in kw_strats]
+        if args_strats:
+            params = params[:-len(args_strats)]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        return wrapper
+    return deco
+
+
+def _run_one(fn, fixture_args, fixture_kw, example_args, example_kw):
+    try:
+        fn(*fixture_args, *example_args, **fixture_kw, **example_kw)
+    except Exception as e:                       # pragma: no cover - reporting
+        raise AssertionError(
+            f"propcheck falsified {fn.__qualname__} with "
+            f"args={example_args} kwargs={example_kw}") from e

@@ -24,6 +24,7 @@ def _setup():
     return cfg, api, params, frames, toks
 
 
+@pytest.mark.slow
 def test_decode_matches_forward_teacher_forced():
     """Decoder KV-cache + precomputed cross-K/V must reproduce the parallel
     forward logits position-by-position."""

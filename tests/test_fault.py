@@ -65,6 +65,7 @@ def test_elastic_plan_roundtrip():
     assert "restore" in plan["action"]
 
 
+@pytest.mark.slow
 def test_elastic_restart_integration(tmp_path):
     """Simulated pod loss: checkpoint, 'lose a pod' (halve the batch per
     the elastic plan), restore and keep training — loss stays finite and

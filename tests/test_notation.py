@@ -1,7 +1,10 @@
 """Executable notation: legality rules + bit-exact schedule execution."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:    # offline: deterministic fallback (tests/_propcheck)
+    from _propcheck import given, settings, strategies as hst
 
 from repro.core import notation as nt
 

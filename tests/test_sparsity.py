@@ -1,7 +1,10 @@
 """Sparsity statistics: Table III + Eq. (7)/(8) synchronization model."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:    # offline: deterministic fallback (tests/_propcheck)
+    from _propcheck import given, settings, strategies as hst
 
 from repro.core import sparsity as sp
 

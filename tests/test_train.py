@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as hst
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:    # offline: deterministic fallback (tests/_propcheck)
+    from _propcheck import given, settings, strategies as hst
 
 from repro.train import checkpoint as ck
 from repro.train import compress as comp
