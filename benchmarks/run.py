@@ -226,7 +226,7 @@ def model_quantized_forward_kernel():
     pallas_call(s) and reproduce the jnp-oracle engine token-for-token."""
     import numpy as np
     from repro.configs.registry import get_config
-    from repro.models import layers as L
+    from repro.engine import QuantSpec
     from repro.launch.serve import ServeEngine, Request
 
     cfg = get_config("minicpm-2b", smoke=True)
@@ -235,13 +235,12 @@ def model_quantized_forward_kernel():
 
     def serve(impl):
         reqs = [Request(i, list(p), 5) for i, p in enumerate(prompts)]
-        eng = ServeEngine(cfg.replace(quant_planes=3), 2, 16,
-                          quant=L.QuantState(planes=3, impl=impl))
-        stats = eng.run(reqs)       # run() restores the global impl
+        eng = ServeEngine(cfg, 2, 16, quant=QuantSpec(planes=3, impl=impl))
+        stats = eng.run(reqs)   # each engine's step closes over its spec
         return stats, [r.out for r in reqs], eng
 
     s_ref, toks_ref, _ = serve("planes")
-    s_ker, toks_ker, eng = serve("pallas")
+    s_ker, toks_ker, eng = serve("pallas_fused")
     return {"tokens_match_oracle": toks_ref == toks_ker,
             "planned_weights": eng.quant.plan_stats["planned_weights"],
             "oracle_tok_per_s": s_ref["tok_per_s"],
@@ -345,15 +344,32 @@ BENCHES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="emit a JSON array instead of CSV (the CI BENCH "
+                         "baseline artifact format)")
+    ap.add_argument("--out", default=None,
+                    help="also write the JSON payload to this file "
+                         "(always JSON, whatever the stdout format)")
     args = ap.parse_args()
-    print("name,us_per_call,derived")
+    records = []
+    if not args.json:
+        print("name,us_per_call,derived")
     for name, fn in BENCHES:
         if args.only and args.only not in name:
             continue
         us, out = _timed(fn)
-        derived = json.dumps(out, default=str, sort_keys=True)
-        # CSV-escape the JSON payload
-        print(f'{name},{us:.0f},"{derived.replace(chr(34), chr(39))}"')
+        records.append({"name": name, "us_per_call": round(us),
+                        "derived": out})
+        if not args.json:
+            derived = json.dumps(out, default=str, sort_keys=True)
+            # CSV-escape the JSON payload
+            print(f'{name},{us:.0f},"{derived.replace(chr(34), chr(39))}"')
+    payload = json.dumps(records, default=str, sort_keys=True, indent=1)
+    if args.json:
+        print(payload)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(payload)
 
 
 if __name__ == '__main__':

@@ -24,11 +24,27 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--quant-spec", default=None,
+                    help="serve quantized, e.g. "
+                         "'planes=3,encoding=ent,impl=pallas_fused'")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
+    spec = None
+    if args.quant_spec:
+        from repro.engine import QuantSpec
+        spec = QuantSpec.parse(args.quant_spec)
+        cfg = cfg.replace(quant=spec,
+                          quant_planes=spec.planes if spec else 0)
+        print(f"quant spec: {spec}")
     api = get_api(cfg)
     params = unbox(api.init(jax.random.PRNGKey(0), cfg))
+    if spec is not None and spec.impl in ("pallas", "pallas_fused"):
+        # pre-plan the dense weights so the jit'd serve step runs the
+        # Pallas kernel (instead of its int8-dot cost lowering)
+        from repro.kernels import ops
+        params, planned = ops.plan_params(params, spec)
+        print(f"pre-planned {planned} dense weights for the kernel path")
     b = args.batch
     max_len = args.prompt_len + args.tokens + 1
 

@@ -27,6 +27,9 @@ def main():
     ap.add_argument("--full", action="store_true",
                     help="~100M-param model instead of the CPU-sized smoke")
     ap.add_argument("--quant-planes", type=int, default=0)
+    ap.add_argument("--quant-spec", default=None,
+                    help="full quantized-GEMM spec, e.g. "
+                         "'planes=3,encoding=ent,impl=planes'")
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--resume", action="store_true")
@@ -37,6 +40,7 @@ def main():
                 steps=args.steps, global_batch=args.batch, seq_len=args.seq,
                 lr=1e-3, schedule="wsd",
                 quant_planes=args.quant_planes,
+                quant_spec=args.quant_spec,
                 grad_compress=args.grad_compress,
                 ckpt_dir=args.ckpt_dir, ckpt_every=50, resume=args.resume,
                 log_every=10)

@@ -9,6 +9,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.engine.spec import QuantSpec
+
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "pad_vocab"]
 
 
@@ -61,11 +63,32 @@ class ModelConfig:
     remat: bool = True
     scan_unroll: int = 1           # layer-scan unroll (dry-run cost variants)
     quant_planes: int = 0          # >0: BW-decomposed int8 linear path
+    # full quantized-GEMM configuration; None defers to the quant_planes
+    # sugar above (launchers materialize an explicit spec at startup so
+    # concurrent engines with different specs never interfere)
+    quant: Optional[QuantSpec] = None
     # --- parallelism policy ---
     fsdp: bool = True
     fsdp_over_pod: bool = False    # shard weights over the pod axis too
     # long-context support (sub-quadratic sequence mixing)
     subquadratic: bool = False
+
+    def quant_spec(self) -> Optional[QuantSpec]:
+        """The QuantSpec the model layers should execute under.
+
+        An explicit ``quant`` field wins; otherwise the legacy
+        ``quant_planes`` int is sugar for a default-grid spec whose impl
+        comes from the deprecated global shim (preserving the old
+        global-switch semantics for un-migrated callers).  Returns None
+        when quantization is disabled.
+        """
+        if self.quant is not None:
+            return self.quant if self.quant.enabled else None
+        if self.quant_planes:
+            from repro.engine import _compat
+            return QuantSpec(planes=self.quant_planes,
+                             impl=_compat.default_impl())
+        return None
 
     @property
     def resolved_head_dim(self) -> int:

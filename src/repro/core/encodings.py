@@ -46,6 +46,7 @@ __all__ = [
     "mbe_digits_jnp",
     "ent_digits_jnp",
     "bitserial_digits_jnp",
+    "bitserial_sm_digits_jnp",
 ]
 
 ENCODINGS = ("mbe", "ent", "bitserial", "bitserial_sm")
@@ -202,10 +203,22 @@ def bitserial_digits_jnp(x, bits: int = _BITS):
     return jnp.stack(ds, axis=-1)
 
 
+def bitserial_sm_digits_jnp(x, bits: int = _BITS):
+    """Sign-magnitude radix-2 digits (Table III "bit-serial(M)"), jnp."""
+    xi = x.astype(jnp.int32)
+    sign = jnp.where(xi < 0, -1, 1)
+    m = jnp.abs(xi)
+    ds = []
+    for bw in range(bits):
+        ds.append((sign * ((m >> bw) & 1)).astype(jnp.int8))
+    return jnp.stack(ds, axis=-1)
+
+
 _JNP_ENCODERS = {
     "mbe": mbe_digits_jnp,
     "ent": ent_digits_jnp,
     "bitserial": bitserial_digits_jnp,
+    "bitserial_sm": bitserial_sm_digits_jnp,
 }
 
 

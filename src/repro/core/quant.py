@@ -22,6 +22,9 @@ __all__ = [
     "dequantize",
     "fake_quant_ste",
     "quantized_matmul_ref",
+    "plane_qmax",
+    "quantize_to_planes",
+    "quantize_for_spec",
 ]
 
 
@@ -61,31 +64,47 @@ def _fq_bwd(_, g):
 fake_quant_ste.defvjp(_fq_fwd, _fq_bwd)
 
 
-def plane_qmax(planes: int) -> int:
-    """Largest magnitude whose EN-T encoding uses only `planes` low digit
-    planes: 2 * (4^p - 1) / 3  ->  {1:2, 2:10, 3:42, 4:170(clipped to 127)}.
+def plane_qmax(planes: int, radix: int = 4, bits: int = 8) -> int:
+    """Largest magnitude whose encoding uses only `planes` low digit planes.
 
-    Quantising with this qmax makes the higher planes *structurally* empty,
-    so the bw_gemm kernel skips their MXU passes entirely: a runtime-
-    selectable effective precision from a single int8 representation (the
-    bit-weight dimension as a first-class compute axis).
+    radix 4 (EN-T / MBE digit set {-2..2}): 2 * (4^p - 1) / 3
+        -> {1:2, 2:10, 3:42, 4:170 (clipped to the int range)}.
+    radix 2 (bit-serial, digit set {-1,0,1}): 2^p - 1.
+
+    Quantising with this qmax makes the higher planes *structurally* empty
+    (in sign-magnitude encodings), so the bw_gemm kernel skips their MXU
+    passes entirely: a runtime-selectable effective precision from a single
+    int8 representation (the bit-weight dimension as a first-class compute
+    axis).
     """
-    return min(2 * (4 ** planes - 1) // 3, 127)
+    int_max = (1 << (bits - 1)) - 1
+    if radix == 4:
+        return min(2 * (4 ** planes - 1) // 3, int_max)
+    if radix == 2:
+        return min((1 << planes) - 1, int_max)
+    raise ValueError(f"unsupported radix {radix}")
 
 
-def quantize_to_planes(x, planes: int = 4, axis=None):
-    """Symmetric quantisation bounded to `planes` EN-T digit planes.
+def quantize_to_planes(x, planes: int = 4, axis=None, radix: int = 4,
+                       bits: int = 8):
+    """Symmetric quantisation bounded to `planes` digit planes.
 
-    Returns (q:int8, scale).  planes=4 is ordinary int8; planes=3 trades
-    ~1.6 effective bits for 25% fewer MXU passes in bw_gemm; planes=2 is
-    int4-class compute at half the passes.
+    Returns (q:int8, scale).  With the default radix-4/int8 grid, planes=4
+    is ordinary int8; planes=3 trades ~1.6 effective bits for 25% fewer MXU
+    passes in bw_gemm; planes=2 is int4-class compute at half the passes.
     """
-    qmax = plane_qmax(planes)
+    qmax = plane_qmax(planes, radix, bits)
     amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
         jnp.abs(x), axis=axis, keepdims=True)
     scale = jnp.maximum(amax, 1e-8) / qmax
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
     return q, scale
+
+
+def quantize_for_spec(x, spec, axis=None):
+    """quantize_to_planes on the grid a repro.engine.QuantSpec describes."""
+    return quantize_to_planes(x, spec.planes, axis=axis, radix=spec.radix,
+                              bits=spec.bits)
 
 
 def quantized_matmul_ref(x, w, bits: int = 8,

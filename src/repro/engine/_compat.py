@@ -1,0 +1,33 @@
+"""DEPRECATION SHIM (scheduled for removal after one release).
+
+This module is the *only* mutable impl-selection state left in the
+codebase: it backs the deprecated ``layers.set_quant_impl`` /
+``layers.QUANT_IMPL`` global-switch API while callers migrate to passing
+an explicit :class:`repro.engine.QuantSpec`.  Nothing on the spec-driven
+path reads it; it is consulted only when a caller still uses the legacy
+integer ``quant_planes`` sugar without a spec, which is exactly the
+surface the old global selected an implementation for.
+"""
+from __future__ import annotations
+
+from .spec import normalize_impl
+
+__all__ = ["default_impl", "set_default_impl", "legacy_name"]
+
+# raw legacy name as the caller set it (so the deprecated QUANT_IMPL
+# attribute reads back what was written), default matches the old global
+_state = {"legacy": "planes"}
+
+
+def default_impl() -> str:
+    """Registry engine name the legacy sugar path should use."""
+    return normalize_impl(_state["legacy"])
+
+
+def legacy_name() -> str:
+    """The old-style name as set through the shim (for QUANT_IMPL reads)."""
+    return _state["legacy"]
+
+
+def set_default_impl(name: str) -> None:
+    _state["legacy"] = name

@@ -1,0 +1,297 @@
+"""Pluggable GemmEngine registry: one strategy object per quantized-matmul
+implementation, selected *per call* by ``QuantSpec.impl`` — never by
+process-global state.
+
+Each engine exposes:
+
+    plan(w, spec)                -> optional pre-planned weight record
+    apply(plan_or_w, x, spec)    -> act((x @ w)_int * scales + bias)
+    cost(m, k, n, spec)          -> coarse static cost model (dict)
+
+Registered engines:
+
+    ref          -- single int32 dot on the spec's quantization grid; the
+                    most direct jnp reference (quantized_matmul_ref
+                    semantics on a plane-bounded grid), STE-trainable.
+    planes       -- bit-exact digit-plane decomposed GEMM (one int dot per
+                    BW plane of spec.encoding); the kernel's jnp oracle,
+                    STE-trainable.  Historical default.
+    int8         -- one int8 dot_general on the same grid: the cost the
+                    fused TPU kernel pays *before* plane skipping,
+                    STE-trainable.
+    pallas       -- the Pallas bw_gemm kernel with digit-plane block
+                    skipping; dequant/bias/activation epilogue in jnp.
+    pallas_fused -- bw_gemm with the epilogue fused in-kernel on the
+                    VMEM-resident int32 accumulator (the serving path).
+
+The kernel engines have three tiers (mirroring the old implicit routing):
+a pre-planned array record (traceable under jit/scan), eager concrete
+operands (plan-on-first-use, cached per parameter), and a traced-no-plan
+fallback that lowers to the int8 engine — bit-identical in the integer
+accumulator, so compiled-cost numbers reflect the kernelized technique.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bw_ref
+from repro.core import quant as quantlib
+from .spec import IMPLS, QuantSpec
+
+__all__ = ["GemmEngine", "register", "get_engine", "engine_names",
+           "active_planes"]
+
+_REGISTRY: Dict[str, "GemmEngine"] = {}
+
+
+def register(engine: "GemmEngine") -> "GemmEngine":
+    """Register a GemmEngine strategy instance under ``engine.name``."""
+    if not engine.name:
+        raise ValueError("engine needs a non-empty name")
+    if engine.name in _REGISTRY:
+        raise ValueError(f"engine {engine.name!r} already registered")
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> "GemmEngine":
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown quant impl {name!r}; "
+                         f"one of {engine_names()}") from None
+
+
+def engine_names() -> tuple:
+    return tuple(_REGISTRY)
+
+
+def active_planes(spec: QuantSpec) -> int:
+    """MXU passes a digit-plane engine cannot structurally skip.
+
+    Sign-magnitude encodings (ent / mbe / bitserial_sm) leave planes above
+    the quantization bound all-zero, so only ``spec.planes`` passes can
+    carry work.  Two's-complement bit-serial sign-extends negatives into
+    the high planes, so every plane stays live.
+    """
+    if spec.encoding == "bitserial":
+        return spec.num_digits
+    return min(spec.planes, spec.num_digits)
+
+
+def _is_traced(*arrays) -> bool:
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _epilogue(y, bias, activation, out_dtype):
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    if activation is not None:
+        from repro.kernels.bw_gemm import EPILOGUE_ACTIVATIONS
+        y = EPILOGUE_ACTIVATIONS[activation](y)
+    return y.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# STE-trainable jnp matmul cores, specialized per (engine, spec, out dtype).
+# custom_vjp forward = exact int GEMM on the spec grid; backward =
+# straight-through float gradient.  The lru_cache keys on the frozen spec,
+# so two engines with different specs coexist without interference.
+# ---------------------------------------------------------------------------
+
+def _quantize_operands(x, w, spec: QuantSpec):
+    act_axis = -1 if spec.act_quant == "per_token" else None
+    qx, sx = quantlib.quantize_for_spec(x.astype(jnp.float32), spec,
+                                        axis=act_axis)
+    qw, sw = quantlib.quantize_for_spec(w.astype(jnp.float32), spec, axis=0)
+    return qx, sx, qw, sw
+
+
+@functools.lru_cache(maxsize=None)
+def _ste_matmul(kind: str, spec: QuantSpec, dtype_name: str):
+    """custom_vjp quantized matmul specialized on (engine kind, spec)."""
+    out_dtype = jnp.dtype(dtype_name)
+
+    def impl(x, w):
+        qx, sx, qw, sw = _quantize_operands(x, w, spec)
+        x2 = qx.reshape(-1, qx.shape[-1])
+        if kind == "int8":
+            acc = jax.lax.dot_general(
+                x2.astype(jnp.int8), qw, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        elif kind == "ref":
+            acc = jax.lax.dot_general(
+                x2.astype(jnp.int32), qw.astype(jnp.int32),
+                (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+        else:                            # "planes": exact digit-plane GEMM
+            acc = bw_ref.bw_matmul_jnp(x2, qw, spec.encoding, spec.bits)
+        acc = acc.reshape(*qx.shape[:-1], qw.shape[-1])
+        return (acc.astype(jnp.float32) * (sx * sw)).astype(out_dtype)
+
+    @jax.custom_vjp
+    def f(x, w):
+        return impl(x, w)
+
+    def fwd(x, w):
+        return impl(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        gf = g.astype(jnp.float32)
+        xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
+        dx = (gf.reshape(-1, gf.shape[-1]) @ w.astype(jnp.float32).T
+              ).reshape(x.shape).astype(x.dtype)
+        dw = (xf.T @ gf.reshape(-1, gf.shape[-1])).astype(w.dtype)
+        return dx, dw
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# Engine strategies
+# ---------------------------------------------------------------------------
+
+class GemmEngine:
+    """Strategy interface for one quantized-GEMM implementation."""
+
+    name: str = ""
+    uses_plans: bool = False      # consumes pre-planned weight records
+
+    def plan(self, w, spec: QuantSpec):
+        """Pre-plan a dense weight [K, N] for repeated application.
+
+        Returns an engine-specific plan record, or None when the engine
+        has no planning step (jnp engines re-quantize per call).
+        """
+        return None
+
+    def apply(self, plan_or_w, x, spec: QuantSpec, *, n_out: int = None,
+              bias=None, activation: Optional[str] = None,
+              out_dtype=jnp.float32, interpret: Optional[bool] = None):
+        """y = act((x @ w)_int * scales + bias), cast to out_dtype.
+
+        plan_or_w: the raw float weight [K, N], or a record from plan()
+        (kernel engines only; then n_out — the original N — is required,
+        because the record carries only padded shapes).
+        """
+        raise NotImplementedError
+
+    def cost(self, m: int, k: int, n: int, spec: QuantSpec) -> dict:
+        """Coarse static cost model of one [M,K]x[K,N] call (autotuning
+        seam): integer MACs, MXU pass multiplier, HBM bytes for the
+        accumulator round-trip the epilogue placement implies."""
+        passes = self._passes(spec)
+        return {
+            "mxu_passes": passes,
+            "int_macs": passes * m * k * n,
+            "acc_hbm_bytes": self._acc_hbm_bytes(m, n),
+        }
+
+    def _passes(self, spec: QuantSpec) -> int:
+        return 1
+
+    def _acc_hbm_bytes(self, m: int, n: int) -> int:
+        return 0                 # jnp engines: XLA fuses the epilogue
+
+
+class _JnpEngine(GemmEngine):
+    """Shared driver for the STE-trainable pure-jnp engines."""
+
+    kind: str = ""
+
+    def apply(self, plan_or_w, x, spec, *, n_out=None, bias=None,
+              activation=None, out_dtype=jnp.float32, interpret=None):
+        if isinstance(plan_or_w, dict):
+            raise TypeError(f"engine {self.name!r} takes raw weights, not "
+                            f"plan records")
+        y = _ste_matmul(self.kind, spec, jnp.dtype(out_dtype).name)(
+            x, plan_or_w)
+        return _epilogue(y, bias, activation, out_dtype)
+
+
+class RefEngine(_JnpEngine):
+    name = "ref"
+    kind = "ref"
+
+
+class PlanesEngine(_JnpEngine):
+    name = "planes"
+    kind = "planes"
+
+    def _passes(self, spec):
+        return active_planes(spec)
+
+
+class Int8Engine(_JnpEngine):
+    name = "int8"
+    kind = "int8"
+
+
+class PallasEngine(GemmEngine):
+    """bw_gemm kernel path, dequant/bias/activation epilogue in jnp."""
+
+    name = "pallas"
+    uses_plans = True
+    fused = False
+
+    def plan(self, w, spec):
+        from repro.kernels import ops
+        return ops.plan_dense_weight(w, spec)
+
+    def apply(self, plan_or_w, x, spec, *, n_out=None, bias=None,
+              activation=None, out_dtype=jnp.float32, interpret=None):
+        if spec.act_quant != "per_tensor":
+            raise ValueError(
+                f"engine {self.name!r} supports act_quant='per_tensor' "
+                f"only (the kernel epilogue folds one activation scale "
+                f"into the per-channel weight scale); got "
+                f"{spec.act_quant!r}")
+        from repro.kernels import ops
+        if isinstance(plan_or_w, dict):       # pre-planned: jit/scan-safe
+            if n_out is None:
+                raise ValueError("n_out is required with a plan record "
+                                 "(the record only carries padded shapes)")
+            return ops.planned_dense_apply(
+                plan_or_w, x, spec, n_out, bias=bias, activation=activation,
+                out_dtype=out_dtype, interpret=interpret, fused=self.fused)
+        w = plan_or_w
+        if _is_traced(x, w):
+            # traced without a plan (dry-run cost analysis, jit'd train
+            # steps): lower to the int8 engine -- one int8 dot is the
+            # kernel's cost-representative, bit-exact lowering.
+            return get_engine("int8").apply(
+                w, x, spec, bias=bias, activation=activation,
+                out_dtype=out_dtype)
+        return ops.quantized_dense(
+            x, w, spec, bias=bias, activation=activation,
+            out_dtype=out_dtype, interpret=interpret, fused=self.fused)
+
+    def _passes(self, spec):
+        return active_planes(spec)
+
+    def _acc_hbm_bytes(self, m, n):
+        # unfused: int32 accumulator is written to HBM, then re-read (and
+        # the float result written) by the jnp epilogue
+        return 3 * 4 * m * n
+
+
+class PallasFusedEngine(PallasEngine):
+    """bw_gemm with the epilogue fused onto the VMEM-resident accumulator."""
+
+    name = "pallas_fused"
+    fused = True
+
+    def _acc_hbm_bytes(self, m, n):
+        return 0                 # only the final float block leaves VMEM
+
+
+for _engine in (RefEngine(), PlanesEngine(), Int8Engine(), PallasEngine(),
+                PallasFusedEngine()):
+    register(_engine)
+
+assert engine_names() == IMPLS, (engine_names(), IMPLS)

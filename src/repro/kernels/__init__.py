@@ -4,7 +4,8 @@
   bw_gemm         -- bit-weight decomposed GEMM with digit-plane block skipping
   bw_gemm_fused   -- bw_gemm + in-kernel dequant/bias/activation epilogue
   ops             -- public jitted wrappers (padding, planning cache, masks,
-                     per-shape block selection, the quantized-dense dispatch)
+                     per-shape block selection, the quantized-dense dispatch);
+                     spec-level entry points take a repro.engine.QuantSpec
   ref             -- pure-jnp oracles
 """
 from . import ops, ref  # noqa: F401

@@ -2,6 +2,17 @@
 encoding, occupancy masks, weight planning (magnitude-ordered row
 permutation) and the quantised-linear entry point used by the models.
 
+Every spec-level entry point (``plan_for`` / ``plan_dense_weight`` /
+``planned_dense_apply`` / ``quantized_dense`` / ``plan_params`` /
+``select_block_sizes``) is configured by a single
+:class:`repro.engine.QuantSpec` — planes, encoding, bits, and block-size
+overrides all travel inside the spec, so callers with different specs
+(e.g. two ServeEngines, or an autotuner sweeping block shapes) coexist in
+one process; a bare int plane budget is accepted as legacy sugar for a
+default-grid spec.  The per-parameter plan cache keys on (weight,
+spec.plan_key()), so the same weight planned under two specs holds two
+independent entries.
+
 On non-TPU backends the wrappers run the kernels in interpret mode (the
 kernel body executes in Python on CPU) so every code path is testable here;
 on TPU the same calls compile to MXU programs.
@@ -20,6 +31,7 @@ import numpy as np
 
 from repro.core import encodings as enc
 from repro.core import quant as quantlib
+from repro.engine.spec import QuantSpec
 from . import bw_gemm as _bw
 from . import quant_gemm as _qg
 from . import ref as kref
@@ -67,12 +79,22 @@ _BLOCK_TABLE = (
 )
 
 
-def select_block_sizes(m: int, k: int, n: int):
-    """(block_m, block_k, block_n) for a logical [M, K] x [K, N] GEMM."""
+def select_block_sizes(m: int, k: int, n: int,
+                       spec: Optional[QuantSpec] = None):
+    """(block_m, block_k, block_n) for a logical [M, K] x [K, N] GEMM.
+
+    A spec's explicit block_m/block_k/block_n overrides win component-wise
+    over the dispatch table.
+    """
+    sel = _BLOCK_TABLE[-1][1]
     for (mn_m, mn_k, mn_n), blocks in _BLOCK_TABLE:
         if m >= mn_m and k >= mn_k and n >= mn_n:
-            return blocks
-    return _BLOCK_TABLE[-1][1]
+            sel = blocks
+            break
+    if spec is not None:
+        sel = (spec.block_m or sel[0], spec.block_k or sel[1],
+               spec.block_n or sel[2])
+    return sel
 
 
 def plane_block_mask(digits, block_m: int, block_k: int):
@@ -311,30 +333,29 @@ def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
 
 
-def plan_for(w, planes: int, encoding: str = "ent",
-             block_m: Optional[int] = None, block_k: Optional[int] = None):
+def plan_for(w, spec):
     """Quantize + plan a dense weight for the kernel path, with caching.
 
-    w: float [K, N] (d_in, d_out).  Returns (PlannedOperand of W^T with
-    [N, K] layout -- output channels as kernel rows -- and the per-channel
-    weight scale sw of shape [1, N]).
+    w: float [K, N] (d_in, d_out).  spec: QuantSpec (or legacy int plane
+    budget).  Returns (PlannedOperand of W^T with [N, K] layout -- output
+    channels as kernel rows -- and the per-channel weight scale sw of
+    shape [1, N]).  Cache entries key on (weight, spec.plan_key()): the
+    same weight planned under two specs coexists as two entries.
     """
     if isinstance(w, jax.core.Tracer):
         raise TypeError(
             "plan_for needs concrete weights (planning is a one-time eager "
             "step); under tracing use the jnp oracle path instead")
+    spec = QuantSpec.coerce(spec)
     k, n = w.shape
-    if block_m is None or block_k is None:
-        sel_m, sel_k, _ = select_block_sizes(n, k, 128)
-        block_m = block_m or sel_m
-        block_k = block_k or sel_k
-    params = (int(planes), encoding, int(block_m), int(block_k), k, n)
+    block_m, block_k, _ = select_block_sizes(n, k, 128, spec)
+    params = spec.plan_key() + (int(block_m), int(block_k), k, n)
 
     def build():
-        qw, sw = quantlib.quantize_to_planes(
-            jnp.asarray(w).astype(jnp.float32), planes, axis=0)
-        planned = plan_operand(qw.T, encoding=encoding, block_m=block_m,
-                               block_k=block_k)
+        qw, sw = quantlib.quantize_for_spec(
+            jnp.asarray(w).astype(jnp.float32), spec, axis=0)
+        planned = plan_operand(qw.T, encoding=spec.encoding, block_m=block_m,
+                               block_k=block_k, bits=spec.bits)
         return planned, jnp.asarray(sw, jnp.float32)
 
     return _PLAN_CACHE.lookup(w, params, build)
@@ -347,8 +368,7 @@ def _channel_rows(vec, n: int, m_pad: int, row_perm) -> jax.Array:
     return full[row_perm].reshape(-1, 1)
 
 
-def plan_dense_weight(w, planes: int, encoding: str = "ent",
-                      use_cache: bool = True) -> dict:
+def plan_dense_weight(w, spec, use_cache: bool = True) -> dict:
     """Quantize + plan a dense weight into a pure-array plan record.
 
     The record is a pytree of arrays only (digit planes, occupancy mask,
@@ -357,23 +377,21 @@ def plan_dense_weight(w, planes: int, encoding: str = "ent",
     fed to the fused kernel *under tracing* -- the planning itself happens
     here, eagerly, once per weight.
 
-    Radix-4 encodings only: the record carries arrays, not the encoding
-    name, and planned_dense_apply reconstructs block geometry (but not the
-    radix) from shapes -- a radix-2 plan would decode silently wrong.
+    The record does not carry the encoding name: planned_dense_apply takes
+    the same QuantSpec and reconstructs the radix from it (and checks the
+    plane count against the record's shapes, so an ent plan applied under a
+    bit-serial spec fails loudly instead of decoding silently wrong).
     """
-    if enc.radix(encoding) != 4:
-        raise ValueError(
-            f"plan_dense_weight supports radix-4 encodings (ent/mbe); "
-            f"got {encoding!r}")
+    spec = QuantSpec.coerce(spec)
     if use_cache:
-        planned, sw = plan_for(w, planes, encoding=encoding)
+        planned, sw = plan_for(w, spec)
     else:
         k, n = w.shape
-        block_m, block_k, _ = select_block_sizes(n, k, 128)
-        qw, sw = quantlib.quantize_to_planes(
-            jnp.asarray(w).astype(jnp.float32), planes, axis=0)
-        planned = plan_operand(qw.T, encoding=encoding, block_m=block_m,
-                               block_k=block_k)
+        block_m, block_k, _ = select_block_sizes(n, k, 128, spec)
+        qw, sw = quantlib.quantize_for_spec(
+            jnp.asarray(w).astype(jnp.float32), spec, axis=0)
+        planned = plan_operand(qw.T, encoding=spec.encoding, block_m=block_m,
+                               block_k=block_k, bits=spec.bits)
         sw = jnp.asarray(sw, jnp.float32)
     n = w.shape[1]
     m_pad = planned.digits.shape[1]
@@ -387,61 +405,91 @@ def plan_dense_weight(w, planes: int, encoding: str = "ent",
     }
 
 
-def planned_dense_apply(plan: dict, x, planes: int, n_out: int, *, bias=None,
+def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
                         activation=None, out_dtype=jnp.float32,
                         block_n: Optional[int] = None,
-                        interpret: Optional[bool] = None):
-    """y = act((x @ w)_int * s_x * s_w + bias) through the fused kernel.
+                        interpret: Optional[bool] = None,
+                        fused: bool = True):
+    """y = act((x @ w)_int * s_x * s_w + bias) through the bw_gemm kernel.
 
     plan: record from plan_dense_weight (possibly a scan-sliced layer of a
-    stacked plan).  Activations are quantized per-tensor at call time; the
-    dequant (per-channel weight scale x per-tensor act scale), bias add and
-    activation run in the kernel epilogue on the VMEM-resident accumulator.
+    stacked plan), built under the *same* spec.  Activations are quantized
+    per-tensor at call time.  With fused=True the dequant (per-channel
+    weight scale x per-tensor act scale), bias add and activation run in
+    the kernel epilogue on the VMEM-resident accumulator; with fused=False
+    the kernel returns the int32 accumulator and the epilogue runs in jnp.
     Traceable end to end: safe inside jit / scan (block sizes come from
-    static array shapes).
+    static array shapes, radix from the static spec).
     """
+    spec = QuantSpec.coerce(spec)
+    if spec.act_quant != "per_tensor":
+        raise ValueError(
+            f"the kernel path supports act_quant='per_tensor' only (one "
+            f"activation scale folds into the per-channel weight scale in "
+            f"the epilogue); got {spec.act_quant!r}")
     if interpret is None:
         interpret = _interpret()
     digits, mask = plan["digits"], plan["mask"]
     bw_n, m_pad, k_pad = digits.shape
+    if bw_n != spec.num_digits:
+        raise ValueError(
+            f"plan record has {bw_n} digit planes but spec "
+            f"{spec.encoding!r}/{spec.bits}b implies {spec.num_digits}; "
+            f"was the plan built under a different spec?")
     block_m = m_pad // mask.shape[1]
     block_k = k_pad // mask.shape[2]
     k = x.shape[-1]
     lead = x.shape[:-1]
-    qx, sx = quantlib.quantize_to_planes(
-        jnp.asarray(x).astype(jnp.float32), planes)
+    qx, sx = quantlib.quantize_for_spec(
+        jnp.asarray(x).astype(jnp.float32), spec)
     x2 = qx.reshape(-1, k)
     batch = x2.shape[0]
     if block_n is None:
-        block_n = select_block_sizes(n_out, k, batch)[2]
-    scale_rows = plan["sw_rows"] * sx
-    bias_rows = None
-    if bias is not None:
-        bias_rows = _channel_rows(bias, n_out, m_pad, plan["row_perm"])
+        block_n = select_block_sizes(n_out, k, batch, spec)[2]
     bt = _pad_to(_pad_to(x2.T, block_k, 0), block_n, 1)
-    out = _bw.bw_gemm_fused(
-        digits, bt, mask, scale_rows, bias_rows,
-        block_m=block_m, block_n=block_n, block_k=block_k,
-        radix=4, interpret=bool(interpret), activation=activation,
-        epilogue_axis="m", out_dtype=jnp.float32)
-    y = out[plan["inv_perm"]][:n_out, :batch].T
+    if fused:
+        scale_rows = plan["sw_rows"] * sx
+        bias_rows = None
+        if bias is not None:
+            bias_rows = _channel_rows(bias, n_out, m_pad, plan["row_perm"])
+        out = _bw.bw_gemm_fused(
+            digits, bt, mask, scale_rows, bias_rows,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            radix=spec.radix, interpret=bool(interpret),
+            activation=activation, epilogue_axis="m", out_dtype=jnp.float32)
+        y = out[plan["inv_perm"]][:n_out, :batch].T
+    else:
+        acc = _bw.bw_gemm(
+            digits, bt, mask, block_m=block_m, block_n=block_n,
+            block_k=block_k, radix=spec.radix, interpret=bool(interpret))
+        acc = acc[plan["inv_perm"]][:n_out, :batch]
+        sw = plan["sw_rows"][plan["inv_perm"]][:n_out]     # original order
+        y = (acc.astype(jnp.float32) * (sw * sx)).T
+        if bias is not None:
+            y = y + jnp.asarray(bias, jnp.float32)
+        if activation is not None:
+            y = _bw.EPILOGUE_ACTIVATIONS[activation](y)
     return y.reshape(*lead, n_out).astype(out_dtype)
 
 
-def quantized_dense(x, w, planes: int, *, bias=None, activation=None,
-                    out_dtype=jnp.float32, encoding: str = "ent",
+def quantized_dense(x, w, spec, *, bias=None, activation=None,
+                    out_dtype=jnp.float32,
                     block_n: Optional[int] = None,
-                    interpret: Optional[bool] = None):
-    """Eager kernel-path dense: plan (cached per parameter) + fused GEMM.
+                    interpret: Optional[bool] = None,
+                    fused: bool = True):
+    """Eager kernel-path dense: plan (cached per parameter) + bw_gemm.
 
     x: [..., K] float.  w: [K, N] float (concrete).  bias: optional [N].
-    Under tracing use plan_params + planned_dense_apply instead (the model
-    layer routes this automatically).
+    spec: QuantSpec (or legacy int plane budget).  Under tracing use
+    plan_params + planned_dense_apply instead (the model layer routes this
+    automatically).
     """
-    plan = plan_dense_weight(w, planes, encoding=encoding)
-    return planned_dense_apply(plan, x, planes, w.shape[1], bias=bias,
+    spec = QuantSpec.coerce(spec)
+    plan = plan_dense_weight(w, spec)
+    return planned_dense_apply(plan, x, spec, w.shape[1], bias=bias,
                                activation=activation, out_dtype=out_dtype,
-                               block_n=block_n, interpret=interpret)
+                               block_n=block_n, interpret=interpret,
+                               fused=fused)
 
 
 # Param-dict names whose "w" never flows through the quantized dense path
@@ -454,19 +502,20 @@ _NO_PLAN_KEYS = frozenset({
 })
 
 
-def plan_params(params, planes: int, encoding: str = "ent",
-                should_plan=None):
+def plan_params(params, spec, should_plan=None):
     """Attach a 'w_plan' record next to every dense weight in a param tree.
 
     2-D weights get a single plan; 3-D weights (layer-stacked for scan) get
     per-layer plans stacked on axis 0 so jax.lax.scan slices them alongside
-    the weights.  Returns (new_params, planned_count).  The original tree is
-    not mutated; non-dict leaves and non-dense weights pass through.
+    the weights.  spec: QuantSpec (or legacy int plane budget).  Returns
+    (new_params, planned_count).  The original tree is not mutated;
+    non-dict leaves and non-dense weights pass through.
 
     should_plan: optional (path_tuple, w) -> bool to narrow which weights
     get plans.  The default plans every dense "w" except dicts named in
     _NO_PLAN_KEYS (known raw-matmul consumers like the MoE router).
     """
+    spec = QuantSpec.coerce(spec)
     count = 0
     if should_plan is None:
         def should_plan(path, _w):
@@ -482,11 +531,10 @@ def plan_params(params, planes: int, encoding: str = "ent",
         if ndim not in (2, 3) or not should_plan(path, w):
             return out
         if ndim == 2:
-            out["w_plan"] = plan_dense_weight(w, planes, encoding)
+            out["w_plan"] = plan_dense_weight(w, spec)
             count += 1
         else:                  # [L, K, N] stacked for the layer scan
-            plans = [plan_dense_weight(w[i], planes, encoding,
-                                       use_cache=False)
+            plans = [plan_dense_weight(w[i], spec, use_cache=False)
                      for i in range(w.shape[0])]
             out["w_plan"] = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
             count += w.shape[0]

@@ -172,19 +172,23 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                moe_groups: int = 0,
                param_dtype: Optional[str] = None,
                skip_cost_variants: bool = False,
-               quant_impl: str = "pallas"):
+               quant_impl: str = "pallas_fused",
+               quant_spec: Optional[str] = None):
     """Lower + compile one cell (+ cost variants).  Returns
     (record dict, lowered, compiled)."""
+    from repro.engine import spec_from_flags
     cfg = get_config(arch)
     overrides = {}
-    if quant_planes:
-        overrides["quant_planes"] = quant_planes
-        # the kernel execution path: under tracing "pallas" lowers each
-        # linear to one int8 dot (what the fused bw_gemm kernel costs before
-        # plane skipping), so cost_analysis reflects the kernelized
-        # technique instead of the 4-dot oracle
-        from repro.models import layers as _layers
-        _layers.set_quant_impl(quant_impl)
+    spec = spec_from_flags(quant_spec, quant_planes, quant_impl)
+    if spec is not None:
+        # bake the spec into the cfg the steps close over (no global
+        # switch).  Kernel impls lower each linear under tracing to one
+        # int8 dot (what the bw_gemm kernel costs before plane skipping),
+        # so cost_analysis reflects the kernelized technique instead of
+        # the 4-dot oracle.
+        quant_planes = spec.planes
+        overrides["quant_planes"] = spec.planes
+        overrides["quant"] = spec
     if remat is not None:
         overrides["remat"] = remat
     if fsdp is not None:
@@ -263,7 +267,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         "status": "ok", "kind": kind, "chips": chips,
         "seq_len": shape.seq_len, "global_batch": shape.global_batch,
         "quant_planes": quant_planes,
-        "quant_impl": quant_impl if quant_planes else None,
+        "quant_impl": spec.impl if spec else None,
+        "quant_spec": str(spec) if spec else None,
         "seq_axis": seq_axis,
         "capacity_axis": capacity_axis,
         "kv_seq_axis": kv_seq_axis,
@@ -330,13 +335,18 @@ def main(argv=None) -> int:
                     default="both")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape) cell in subprocesses")
+    ap.add_argument("--quant-spec", default=None,
+                    help="full quantized-GEMM spec, e.g. "
+                         "'planes=4,encoding=ent,impl=pallas' (the two "
+                         "flags below are sugar for its fields)")
     ap.add_argument("--quant-planes", type=int, default=0,
                     help="enable the paper's BW-decomposed int8 path with "
                          "this many EN-T digit planes")
-    ap.add_argument("--quant-impl", default="pallas",
-                    choices=("planes", "int8", "pallas"),
-                    help="quantized matmul impl to lower (pallas = the "
-                         "kernel path's cost-representative lowering)")
+    ap.add_argument("--quant-impl", default="pallas_fused",
+                    choices=("ref", "planes", "int8", "pallas",
+                             "pallas_fused"),
+                    help="quantized matmul engine to lower (kernel impls "
+                         "use their cost-representative int8 lowering)")
     ap.add_argument("--seq-axis", default=None,
                     help="mesh axis for sequence parallelism (e.g. 'model')")
     ap.add_argument("--capacity-axis", default=None,
@@ -363,7 +373,8 @@ def main(argv=None) -> int:
         ap.error("--arch and --shape required (or --all)")
     recs = run_cell(args.arch, args.shape, args.mesh,
                     quant_planes=args.quant_planes,
-                    quant_impl=args.quant_impl, seq_axis=args.seq_axis,
+                    quant_impl=args.quant_impl,
+                    quant_spec=args.quant_spec, seq_axis=args.seq_axis,
                     capacity_axis=args.capacity_axis,
                     kv_seq_axis=args.kv_seq_axis,
                     fsdp=False if args.no_fsdp else None,
@@ -397,6 +408,8 @@ def _run_all(args) -> int:
             if args.quant_planes:
                 cmd += ["--quant-planes", str(args.quant_planes),
                         "--quant-impl", args.quant_impl]
+            if args.quant_spec:
+                cmd += ["--quant-spec", args.quant_spec]
             print(f"[dryrun] {' '.join(cmd[3:])}", flush=True)
             r = subprocess.run(cmd)
             if r.returncode != 0:

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS, get_config
+from repro.engine import QuantSpec, engine_names, spec_from_flags
 from repro.models import layers as L
 from repro.models.api import get_api
 from repro.parallel.sharding import unbox
@@ -44,38 +45,56 @@ class Request:
 class ServeEngine:
     """Fixed-batch continuous-batching engine over the decode state.
 
-    quant: optional layers.QuantState.  With impl == "pallas" the engine
-    serves through the kernel execution path: every dense weight is
-    pre-planned once at init (encode -> digit planes -> occupancy mask ->
+    quant: a repro.engine.QuantSpec, a legacy layers.QuantState, or None
+    (None defers to cfg: an explicit cfg.quant spec, else the quant_planes
+    sugar).  The resolved spec is baked into this engine's cfg, so the
+    jit'd serve step closes over it — engines with different specs coexist
+    in one process without interfering.
+
+    With a kernel impl ("pallas" / "pallas_fused") the engine serves
+    through the kernel execution path: every dense weight is pre-planned
+    once at init (encode -> digit planes -> occupancy mask ->
     magnitude-ordered channel permutation) and the plan records are
     attached to the param tree, so the jit'd serve step scans/slices them
-    like any other parameter and each quantized matmul executes the fused
-    Pallas bw_gemm (interpret mode off-TPU) instead of the jnp oracle.
+    like any other parameter and each quantized matmul executes the Pallas
+    bw_gemm kernel (interpret mode off-TPU) instead of the jnp oracle.
     """
 
     def __init__(self, cfg, batch: int, max_len: int, seed: int = 0,
-                 quant: Optional[L.QuantState] = None):
-        self.quant = quant or L.QuantState(planes=cfg.quant_planes,
-                                           impl=L.QUANT_IMPL)
-        if self.quant.planes:
-            cfg = cfg.replace(quant_planes=self.quant.planes)
+                 quant=None):
+        if isinstance(quant, QuantSpec):
+            spec = quant if quant.enabled else None
+        elif isinstance(quant, L.QuantState):
+            spec = quant.spec()
+        elif quant is None:
+            spec = cfg.quant_spec()
+        else:
+            raise TypeError(f"quant must be a QuantSpec, QuantState or "
+                            f"None; got {type(quant).__name__}")
+        self.spec = spec
+        # QuantState view kept for stats compatibility (plan_stats etc.)
+        self.quant = quant if isinstance(quant, L.QuantState) else \
+            L.QuantState(planes=spec.planes if spec else 0,
+                         impl=spec.impl if spec else "planes")
+        # bake the spec into the cfg the step closes over: no global state
+        cfg = cfg.replace(quant=spec,
+                          quant_planes=spec.planes if spec else 0)
         self.cfg = cfg
         self.api = get_api(cfg)
         self.batch = batch
         self.max_len = max_len
         self.params = unbox(self.api.init(jax.random.PRNGKey(seed), cfg))
         self.state = unbox(self.api.init_decode(cfg, batch, max_len))
-        self._kernel_path = bool(self.quant.planes) and \
-            self.quant.impl == "pallas"
+        self._kernel_path = spec is not None and \
+            spec.impl in ("pallas", "pallas_fused")
         if self._kernel_path:
             # one-time planning step: encode every dense weight into digit
             # planes + occupancy mask + channel permutation and attach the
             # plan records to the param tree.  The jit'd serve step then
             # scans/slices them like any other parameter and every quantized
-            # matmul executes the fused Pallas kernel.
+            # matmul executes the Pallas kernel.
             from repro.kernels import ops
-            self.params, planned = ops.plan_params(self.params,
-                                                   self.quant.planes)
+            self.params, planned = ops.plan_params(self.params, spec)
             self.quant.plan_stats = {"planned_weights": planned,
                                      **ops.plan_cache_stats()}
         self.step = jax.jit(make_serve_step(cfg))
@@ -117,31 +136,27 @@ class ServeEngine:
         return finished
 
     def run(self, requests: List[Request]) -> dict:
-        # the step traces against the global impl selector on its first
-        # call; activate for the duration of the run and restore after so
-        # engines don't leak their impl into unrelated code in the process
-        prev_impl = L.QUANT_IMPL
-        self.quant.activate()
+        # the jit'd step closed over this engine's cfg (and its baked-in
+        # QuantSpec) at construction: no global impl state to save/restore,
+        # and concurrent engines with different specs cannot interfere
         queue = deque(requests)
         done: List[Request] = []
         t0 = time.time()
-        try:
-            while queue or any(s is not None for s in self.slots):
-                self._admit(queue)
-                nxt, self.state = self.step(
-                    self.params, jnp.asarray(self.cur),
-                    jnp.asarray(self.pos), self.state)
-                done.extend(self._advance(np.asarray(nxt)))
-                self.steps += 1
-        finally:
-            L.set_quant_impl(prev_impl)
+        while queue or any(s is not None for s in self.slots):
+            self._admit(queue)
+            nxt, self.state = self.step(
+                self.params, jnp.asarray(self.cur),
+                jnp.asarray(self.pos), self.state)
+            done.extend(self._advance(np.asarray(nxt)))
+            self.steps += 1
         dt = time.time() - t0
         gen = sum(len(r.out) for r in done)
         stats = {"requests": len(done), "generated_tokens": gen,
                  "engine_steps": self.steps, "wall_s": round(dt, 2),
                  "tok_per_s": round(gen / max(dt, 1e-9), 1),
-                 "quant_planes": self.quant.planes,
-                 "quant_impl": self.quant.impl}
+                 "quant_spec": str(self.spec) if self.spec else None,
+                 "quant_planes": self.spec.planes if self.spec else 0,
+                 "quant_impl": self.spec.impl if self.spec else None}
         if self._kernel_path:
             from repro.kernels import ops
             stats["plan_cache"] = ops.plan_cache_stats()
@@ -157,12 +172,20 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--max-tokens", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quant-spec", default=None,
+                    help="full quantized-GEMM spec, e.g. "
+                         "'planes=4,encoding=ent,impl=pallas_fused' "
+                         "(the flags below are sugar for its fields)")
     ap.add_argument("--quant-planes", type=int, default=0,
                     help="serve through the BW-decomposed int8 path with "
-                         "this many EN-T digit planes")
-    ap.add_argument("--quant-impl", choices=L.QUANT_IMPLS, default="pallas",
-                    help="quantized matmul implementation (pallas = the "
+                         "this many digit planes")
+    ap.add_argument("--quant-impl", choices=engine_names(),
+                    default="pallas_fused",
+                    help="quantized matmul engine (pallas_fused = the "
                          "fused kernel execution path)")
+    ap.add_argument("--quant-encoding", default="ent",
+                    help="bit-weight encoding (see core.encodings)")
+    ap.add_argument("--quant-bits", type=int, default=8)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -170,10 +193,11 @@ def main(argv=None) -> int:
     reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                     args.prompt_len).tolist(),
                     args.max_tokens) for i in range(args.requests)]
-    quant = L.QuantState(planes=args.quant_planes, impl=args.quant_impl) \
-        if args.quant_planes else None
+    spec = spec_from_flags(args.quant_spec, args.quant_planes,
+                           args.quant_impl, args.quant_encoding,
+                           args.quant_bits)
     eng = ServeEngine(cfg, args.batch,
-                      args.prompt_len + args.max_tokens + 1, quant=quant)
+                      args.prompt_len + args.max_tokens + 1, quant=spec)
     stats = eng.run(reqs)
     print(stats)
     assert stats["requests"] == args.requests

@@ -39,13 +39,21 @@ __all__ = ["train", "main"]
 def train(arch: str, *, smoke: bool = True, steps: int = 50,
           global_batch: int = 8, seq_len: int = 128,
           mesh_shape=(1, 1), lr: float = 3e-4, schedule: str = "cosine",
-          quant_planes: int = 0, grad_compress: bool = False,
+          quant_planes: int = 0, quant_spec=None,
+          grad_compress: bool = False,
           microbatches: int = 1, ckpt_dir: str | None = None,
           ckpt_every: int = 20, resume: bool = False, seed: int = 0,
           log_every: int = 10, overrides: dict | None = None) -> dict:
+    from repro.engine import QuantSpec, spec_from_flags
     cfg = get_config(arch, smoke=smoke, **(overrides or {}))
-    if quant_planes:
-        cfg = cfg.replace(quant_planes=quant_planes)
+    # resolve the quantized-GEMM spec eagerly: the jit'd step closes over
+    # it via cfg (quant_spec may be a QuantSpec or a CLI "k=v,..." string;
+    # quant_planes alone is sugar for the trainable jnp oracle engine)
+    if not isinstance(quant_spec, QuantSpec):
+        quant_spec = spec_from_flags(quant_spec, quant_planes,
+                                     quant_impl="planes")
+    if quant_spec is not None:
+        cfg = cfg.replace(quant=quant_spec, quant_planes=quant_spec.planes)
     ocfg = opt.OptConfig(peak_lr=lr, total_steps=steps,
                          warmup_steps=max(steps // 10, 1),
                          schedule=schedule,
@@ -114,6 +122,9 @@ def main(argv=None) -> int:
     ap.add_argument("--schedule", choices=["cosine", "wsd", "constant"],
                     default="cosine")
     ap.add_argument("--quant-planes", type=int, default=0)
+    ap.add_argument("--quant-spec", default=None,
+                    help="full quantized-GEMM spec, e.g. "
+                         "'planes=3,encoding=ent,impl=planes'")
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
@@ -124,6 +135,7 @@ def main(argv=None) -> int:
     out = train(args.arch, smoke=args.smoke, steps=args.steps,
                 global_batch=args.batch, seq_len=args.seq, lr=args.lr,
                 schedule=args.schedule, quant_planes=args.quant_planes,
+                quant_spec=args.quant_spec,
                 grad_compress=args.grad_compress,
                 microbatches=args.microbatches, ckpt_dir=args.ckpt_dir,
                 ckpt_every=args.ckpt_every, resume=args.resume,

@@ -41,9 +41,9 @@ def attn_init(key, cfg, param_dtype=jnp.float32):
 def _project_qkv(p, x, cfg, positions, dtype):
     b, t, _ = x.shape
     hd = cfg.head_dim
-    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_planes)
-    k = L.dense_apply(p["wk"], x, dtype, cfg.quant_planes)
-    v = L.dense_apply(p["wv"], x, dtype, cfg.quant_planes)
+    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_spec())
+    k = L.dense_apply(p["wk"], x, dtype, cfg.quant_spec())
+    v = L.dense_apply(p["wv"], x, dtype, cfg.quant_spec())
     q = q.reshape(b, t, cfg.n_heads, hd)
     k = k.reshape(b, t, cfg.n_kv_heads, hd)
     v = v.reshape(b, t, cfg.n_kv_heads, hd)
@@ -137,7 +137,7 @@ def attn_apply(p, x, cfg, positions, dtype=jnp.bfloat16):
         out = _dense_causal(q, k, v)
     out = constrain(out, "batch", "seq_inner", "heads", "head_dim")
     out = out.reshape(b, t, cfg.n_heads * cfg.head_dim)
-    return L.dense_apply(p["wo"], out, dtype, cfg.quant_planes), (k, v)
+    return L.dense_apply(p["wo"], out, dtype, cfg.quant_spec()), (k, v)
 
 
 def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
@@ -180,5 +180,5 @@ def attn_decode(p, x, cfg, cache_k, cache_v, pos, dtype=jnp.bfloat16):
     probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache_v)
     out = out.reshape(b, 1, cfg.n_heads * hd)
-    return (L.dense_apply(p["wo"], out, dtype, cfg.quant_planes),
+    return (L.dense_apply(p["wo"], out, dtype, cfg.quant_spec()),
             cache_k, cache_v)

@@ -41,7 +41,7 @@ def _bidir_attn(p, x, cfg, positions, dtype):
     probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
     out = out.reshape(b, t, cfg.n_heads * cfg.head_dim)
-    return L.dense_apply(p["wo"], out, dtype, cfg.quant_planes)
+    return L.dense_apply(p["wo"], out, dtype, cfg.quant_spec())
 
 
 def cross_init(key, cfg, param_dtype=jnp.float32):
@@ -63,8 +63,8 @@ def cross_kv(p, memory, cfg, dtype):
     """Project encoder memory to per-layer cross K/V: [B, S, n_kv, hd]."""
     b, s, _ = memory.shape
     hd = cfg.head_dim
-    k = L.dense_apply(p["wk"], memory, dtype, cfg.quant_planes)
-    v = L.dense_apply(p["wv"], memory, dtype, cfg.quant_planes)
+    k = L.dense_apply(p["wk"], memory, dtype, cfg.quant_spec())
+    v = L.dense_apply(p["wv"], memory, dtype, cfg.quant_spec())
     return (k.reshape(b, s, cfg.n_kv_heads, hd),
             v.reshape(b, s, cfg.n_kv_heads, hd))
 
@@ -73,7 +73,7 @@ def cross_apply(p, x, k, v, cfg, dtype):
     """q from decoder states x [B,T,d]; k/v precomputed from memory."""
     b, t, _ = x.shape
     hd = cfg.head_dim
-    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_planes)
+    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_spec())
     q = q.reshape(b, t, cfg.n_heads, hd)
     kk = A._repeat_kv(k, cfg.n_heads)
     vv = A._repeat_kv(v, cfg.n_heads)
@@ -82,7 +82,7 @@ def cross_apply(p, x, k, v, cfg, dtype):
     probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
     out = out.reshape(b, t, cfg.n_heads * hd)
-    return L.dense_apply(p["wo"], out, dtype, cfg.quant_planes)
+    return L.dense_apply(p["wo"], out, dtype, cfg.quant_spec())
 
 
 # ---------------------------------------------------------------------------
@@ -185,7 +185,7 @@ def encdec_apply(params, tokens, cfg, frontend_embeds=None):
     x, _ = jax.lax.scan(body_fn, x, params["dec_blocks"],
                         unroll=cfg.scan_unroll)
     x = norm_apply(cfg, params["final_norm"], x)
-    logits = L.dense_apply(params["lm_head"], x, dtype, cfg.quant_planes)
+    logits = L.dense_apply(params["lm_head"], x, dtype, cfg.quant_spec())
     return constrain(logits, "batch", "seq_inner", "vocab"), \
         jnp.zeros((), jnp.float32)
 
@@ -244,5 +244,5 @@ def encdec_decode_step(params, tokens, pos, caches, cfg):
     x, new_caches = jax.lax.scan(body, x, (params["dec_blocks"], caches),
                                  unroll=cfg.scan_unroll)
     x = norm_apply(cfg, params["final_norm"], x)
-    logits = L.dense_apply(params["lm_head"], x, dtype, cfg.quant_planes)
+    logits = L.dense_apply(params["lm_head"], x, dtype, cfg.quant_spec())
     return constrain(logits, "batch", "seq", "vocab"), new_caches

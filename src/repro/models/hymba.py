@@ -110,9 +110,9 @@ def _windowed_chunked(q, k, v, window: int, chunk: int):
 def _attn_branch(p, x, cfg, positions, dtype):
     b, t, _ = x.shape
     hd = cfg.head_dim
-    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_planes)
-    k = L.dense_apply(p["wk"], x, dtype, cfg.quant_planes)
-    v = L.dense_apply(p["wv"], x, dtype, cfg.quant_planes)
+    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_spec())
+    k = L.dense_apply(p["wk"], x, dtype, cfg.quant_spec())
+    v = L.dense_apply(p["wv"], x, dtype, cfg.quant_spec())
     q = q.reshape(b, t, cfg.n_heads, hd)
     k = k.reshape(b, t, cfg.n_kv_heads, hd)
     v = v.reshape(b, t, cfg.n_kv_heads, hd)
@@ -124,7 +124,7 @@ def _attn_branch(p, x, cfg, positions, dtype):
     else:
         out = _windowed(q, k, v, HYMBA_WINDOW, positions)
     out = out.reshape(b, t, cfg.n_heads * hd)
-    return L.dense_apply(p["wo"], out, dtype, cfg.quant_planes), (k, v)
+    return L.dense_apply(p["wo"], out, dtype, cfg.quant_spec()), (k, v)
 
 
 def block_apply(p, x, cfg, positions, ssm_state, dtype=jnp.bfloat16):
@@ -180,7 +180,7 @@ def hymba_lm_apply(params, tokens, cfg, with_meta: bool = True):
                         unroll=cfg.scan_unroll)
     x = norm_apply(cfg, params["final_norm"], x)
     logits = L.dense_apply(params["lm_head"], x[:, n_meta:], dtype,
-                           cfg.quant_planes)
+                           cfg.quant_spec())
     logits = constrain(logits, "batch", "seq_inner", "vocab")
     return logits, jnp.zeros((), jnp.float32)
 
@@ -216,11 +216,11 @@ def _decode_attn(p, x, cfg, ck, cv, cpos, pos, dtype):
     hd = cfg.head_dim
     w = ck.shape[1]
     positions = pos[:, None]
-    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_planes) \
+    q = L.dense_apply(p["wq"], x, dtype, cfg.quant_spec()) \
         .reshape(b, 1, cfg.n_heads, hd)
-    k = L.dense_apply(p["wk"], x, dtype, cfg.quant_planes) \
+    k = L.dense_apply(p["wk"], x, dtype, cfg.quant_spec()) \
         .reshape(b, 1, cfg.n_kv_heads, hd)
-    v = L.dense_apply(p["wv"], x, dtype, cfg.quant_planes) \
+    v = L.dense_apply(p["wv"], x, dtype, cfg.quant_spec()) \
         .reshape(b, 1, cfg.n_kv_heads, hd)
     q, k = L.rope(q, k, positions, hd, cfg.rope_theta)
     slot = pos % w
@@ -239,7 +239,7 @@ def _decode_attn(p, x, cfg, ck, cv, cpos, pos, dtype):
     probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv).reshape(b, 1,
                                                            cfg.n_heads * hd)
-    return L.dense_apply(p["wo"], out, dtype, cfg.quant_planes), ck, cv, cpos
+    return L.dense_apply(p["wo"], out, dtype, cfg.quant_spec()), ck, cv, cpos
 
 
 def hymba_lm_decode_step(params, tokens, pos, caches, cfg):
@@ -265,5 +265,5 @@ def hymba_lm_decode_step(params, tokens, pos, caches, cfg):
         body, x, (params["blocks"], caches["kv"], caches["ssm"]),
         unroll=cfg.scan_unroll)
     x = norm_apply(cfg, params["final_norm"], x)
-    logits = L.dense_apply(params["lm_head"], x, dtype, cfg.quant_planes)
+    logits = L.dense_apply(params["lm_head"], x, dtype, cfg.quant_spec())
     return logits, {"kv": kv_new, "ssm": ssm_new}

@@ -3,10 +3,18 @@
 Every init_* returns a pytree of sharding.Boxed leaves (value + logical
 axes); apply functions consume the unboxed value tree.  Compute runs in
 cfg.dtype (bf16 by default), norms and softmax in fp32.
+
+Quantized execution is configured per call by a
+:class:`repro.engine.QuantSpec` passed to ``dense_apply`` (models thread
+``cfg.quant_spec()``); the spec's ``impl`` selects a registered GemmEngine
+strategy.  There is no process-global implementation switch — the old
+``set_quant_impl`` / ``QUANT_IMPL`` API survives only as a deprecation
+shim at the bottom of this module.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -14,13 +22,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.parallel.sharding import Boxed, box, constrain
-from repro.core import quant as quantlib
-from repro.core import bw_ref
+from repro import engine as englib
+from repro.engine import _compat as _quant_compat
+from repro.engine.spec import QuantSpec
 
 __all__ = [
     "dense_init", "dense_apply", "rmsnorm_init", "rmsnorm_apply",
     "layernorm_init", "layernorm_apply", "embed_init", "embed_apply",
-    "rope", "activation", "QuantState", "set_quant_impl", "QUANT_IMPLS",
+    "rope", "activation", "QuantState", "QuantSpec",
+    "set_quant_impl", "QUANT_IMPLS",
 ]
 
 
@@ -43,128 +53,47 @@ def dense_init(key, d_in: int, d_out: int, axes: Tuple[str, str],
     return p
 
 
-def dense_apply(p, x, dtype=jnp.bfloat16, quant_planes: int = 0,
+def dense_apply(p, x, dtype=jnp.bfloat16, quant=0,
                 activation: Optional[str] = None):
     """y = act(x @ w (+ b)).
 
-    quant_planes > 0 routes through the paper's BW-decomposed quantised
-    matmul semantics (exact int8 digit-plane GEMM, per-tensor act scale and
-    per-channel weight scale), with a straight-through gradient.  With
-    QUANT_IMPL == "pallas" and concrete operands (serving / eager forward)
-    the integer GEMM is the Pallas bw_gemm kernel with the dequant + bias +
-    activation epilogue fused in; under tracing (jit'd train/serve steps)
-    it falls back bit-exactly to the jnp oracle on the same plane-bounded
-    quantisation grid.
+    quant: a repro.engine.QuantSpec (models pass ``cfg.quant_spec()``), or
+    the legacy int plane budget (sugar for a default-grid spec whose impl
+    comes from the deprecated global shim), or 0/None for the bf16 path.
+
+    An enabled spec routes through the paper's BW-decomposed quantised
+    matmul semantics (exact integer digit-plane GEMM on the spec's grid,
+    per-tensor act scale and per-channel weight scale) via the GemmEngine
+    the spec's ``impl`` names, with a straight-through gradient on the jnp
+    engines.  The kernel engines consume a pre-planned ``w_plan`` record
+    when one is attached to ``p`` (ops.plan_params; traceable under
+    jit/scan), run the real Pallas kernel on eager concrete operands, and
+    lower to a cost-representative int8 dot under tracing without a plan.
 
     activation: optional epilogue activation name (see layers.activation).
     None keeps the historical behaviour of returning the linear output.
     """
     w = p["w"]
     b = p.get("b")
-    if quant_planes:
-        if QUANT_IMPL == "pallas" and "w_plan" in p:
-            # pre-planned weights (ops.plan_params): fully traceable --
-            # the fused kernel runs inside jit'd serve steps and scans
-            from repro.kernels import ops as kops
-            return kops.planned_dense_apply(
-                p["w_plan"], x, quant_planes, w.shape[-1], bias=b,
-                activation=activation, out_dtype=dtype)
-        if QUANT_IMPL == "pallas" and not _is_traced(x, w):
-            from repro.kernels import ops as kops
-            return kops.quantized_dense(
-                x, w, quant_planes, bias=b, activation=activation,
-                out_dtype=dtype)
-        y = _bw_quant_matmul(x, w, quant_planes, dtype)
-    else:
-        y = jax.lax.dot_general(x.astype(dtype), w.astype(dtype),
-                                (((x.ndim - 1,), (0,)), ((), ())))
+    # the impl kwarg only applies to the legacy int sugar: it reads the
+    # deprecated global-switch shim so un-migrated callers keep working
+    spec = QuantSpec.coerce(quant, impl=_quant_compat.default_impl())
+    if spec is not None:
+        eng = englib.get_engine(spec.impl)
+        plan = p.get("w_plan") if eng.uses_plans else None
+        if plan is not None:
+            return eng.apply(plan, x, spec, n_out=w.shape[-1], bias=b,
+                             activation=activation, out_dtype=dtype)
+        return eng.apply(w, x, spec, bias=b, activation=activation,
+                         out_dtype=dtype)
+    y = jax.lax.dot_general(x.astype(dtype), w.astype(dtype),
+                            (((x.ndim - 1,), (0,)), ((), ())))
     if b is not None:
         y = y + b.astype(dtype)
     if activation is not None:
         from repro.kernels.bw_gemm import EPILOGUE_ACTIVATIONS
         y = EPILOGUE_ACTIVATIONS[activation](y)
     return y
-
-
-def _is_traced(*arrays) -> bool:
-    return any(isinstance(a, jax.core.Tracer) for a in arrays)
-
-
-import functools
-
-# Implementation selector for the quantized path:
-#   "planes" -- bit-exact EN-T digit-plane GEMM (the Pallas kernel's jnp
-#               oracle; 4 int8 dots).  Default; used by tests/training.
-#   "int8"   -- single int8 dot_general with the same plane-bounded
-#               quantization grid: the cost the fused TPU bw_gemm kernel
-#               pays *before* plane skipping.
-#   "pallas" -- the kernel execution path: pre-planned weights (cached
-#               digit planes + occupancy mask + channel permutation) fed to
-#               the fused bw_gemm kernel with the dequant/bias/activation
-#               epilogue in-kernel.  Eager calls (serving, benchmarks) run
-#               the real kernel; traced calls (jit'd steps, the dry-run)
-#               lower to the single int8 dot -- the kernel's pre-skipping
-#               cost model, bit-identical to the planes oracle in the int
-#               accumulator.
-QUANT_IMPL = "planes"
-QUANT_IMPLS = ("planes", "int8", "pallas")
-
-
-def set_quant_impl(kind: str) -> None:
-    """Select the quantized-matmul implementation globally."""
-    global QUANT_IMPL
-    if kind not in QUANT_IMPLS:
-        raise ValueError(f"unknown quant impl {kind!r}; one of {QUANT_IMPLS}")
-    QUANT_IMPL = kind
-
-
-@functools.lru_cache(maxsize=None)
-def _make_bw_quant_matmul(planes: int, dtype_name: str, impl_kind: str):
-    """custom_vjp quantized matmul specialized on (planes, dtype):
-    exact EN-T digit-plane int GEMM forward, straight-through backward."""
-    out_dtype = jnp.dtype(dtype_name)
-
-    def impl(x, w):
-        qx, sx = quantlib.quantize_to_planes(x.astype(jnp.float32), planes)
-        qw, sw = quantlib.quantize_to_planes(w.astype(jnp.float32), planes,
-                                             axis=0)
-        x2 = qx.reshape(-1, qx.shape[-1])
-        if impl_kind in ("int8", "pallas"):
-            # "pallas" reaches here only under tracing (eager calls take the
-            # kernel path in dense_apply): one int8 dot is the kernel's
-            # cost-representative, bit-exact lowering.
-            acc = jax.lax.dot_general(
-                x2.astype(jnp.int8), qw,
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.int32)
-        else:
-            acc = bw_ref.bw_matmul_jnp(x2, qw)  # exact digit-plane int GEMM
-        acc = acc.reshape(*qx.shape[:-1], qw.shape[-1])
-        return (acc.astype(jnp.float32) * (sx * sw)).astype(out_dtype)
-
-    @jax.custom_vjp
-    def f(x, w):
-        return impl(x, w)
-
-    def fwd(x, w):
-        return impl(x, w), (x, w)
-
-    def bwd(res, g):
-        x, w = res
-        gf = g.astype(jnp.float32)
-        xf = x.astype(jnp.float32).reshape(-1, x.shape[-1])
-        dx = (gf.reshape(-1, gf.shape[-1]) @ w.astype(jnp.float32).T
-              ).reshape(x.shape).astype(x.dtype)
-        dw = (xf.T @ gf.reshape(-1, gf.shape[-1])).astype(w.dtype)
-        return dx, dw
-
-    f.defvjp(fwd, bwd)
-    return f
-
-
-def _bw_quant_matmul(x, w, planes, dtype):
-    return _make_bw_quant_matmul(int(planes), jnp.dtype(dtype).name,
-                                 QUANT_IMPL)(x, w)
 
 
 # ---------------------------------------------------------------------------
@@ -252,15 +181,71 @@ def activation(name: str):
 class QuantState:
     """Quantized-execution state threaded through launchers/engines.
 
-    planes selects the EN-T digit-plane budget (0 = bf16 path); impl picks
-    the quantized-matmul implementation (see QUANT_IMPLS).  plan_stats is
-    filled by engines that pre-plan weights through the kernel path so
-    callers can verify the kernel (not the oracle) served the traffic.
+    A thin wrapper over the engine registry: ``spec()`` converts to the
+    QuantSpec that actually configures execution (planes = digit-plane
+    budget, 0 = bf16 path; impl = registered GemmEngine name, legacy
+    aliases accepted).  plan_stats is filled by serving engines that
+    pre-plan weights through the kernel path so callers can verify the
+    kernel (not the oracle) served the traffic.
     """
     planes: int = 0
     impl: str = "planes"
     plan_stats: Optional[dict] = None
 
+    def spec(self) -> Optional[QuantSpec]:
+        """The QuantSpec this state describes (None when disabled)."""
+        if not self.planes:
+            return None
+        return QuantSpec(planes=self.planes,
+                         impl=englib.normalize_impl(self.impl))
+
     def activate(self) -> "QuantState":
-        set_quant_impl(self.impl)
+        """DEPRECATED: pass ``spec()`` explicitly instead of activating a
+        process-global default."""
+        warnings.warn(
+            "QuantState.activate() is deprecated: pass QuantState.spec() "
+            "(a QuantSpec) explicitly to dense_apply / cfg.replace(quant=...) "
+            "instead of mutating the process-global default",
+            DeprecationWarning, stacklevel=2)
+        _quant_compat.set_default_impl(self.impl)
         return self
+
+
+# ---------------------------------------------------------------------------
+# DEPRECATION SHIM -- the old process-global implementation switch.
+# Everything below warns and proxies to repro.engine._compat, which only
+# the legacy int-plane-budget sugar path consults.  Scheduled for removal
+# after one release; new code passes QuantSpec explicitly.
+# ---------------------------------------------------------------------------
+
+QUANT_IMPLS = englib.IMPLS      # registered engine names (stable tuple)
+
+
+def set_quant_impl(kind: str) -> None:
+    """DEPRECATED: select the default impl for legacy int-budget callers.
+
+    Only calls that pass a bare ``quant_planes`` int (no QuantSpec) see
+    this default; spec-carrying callers are unaffected, so engines with
+    different specs never interfere.  Use
+    ``QuantSpec(impl=...)`` / ``--quant-spec impl=...`` instead.
+    """
+    warnings.warn(
+        "set_quant_impl() is deprecated: pass QuantSpec(impl=...) "
+        "explicitly (e.g. dense_apply(p, x, dtype, cfg.quant_spec()))",
+        DeprecationWarning, stacklevel=2)
+    if englib.normalize_impl(kind) not in englib.IMPLS:
+        raise ValueError(f"unknown quant impl {kind!r}; one of "
+                         f"{englib.IMPLS} (or legacy alias 'pallas')")
+    _quant_compat.set_default_impl(kind)
+
+
+def __getattr__(name: str):
+    # module-level attribute shim (PEP 562) for the removed global
+    if name == "QUANT_IMPL":
+        warnings.warn(
+            "layers.QUANT_IMPL is deprecated: quantized execution is "
+            "configured per call by QuantSpec; this reads the legacy "
+            "default used only by un-migrated int-budget callers",
+            DeprecationWarning, stacklevel=2)
+        return _quant_compat.legacy_name()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

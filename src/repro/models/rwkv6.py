@@ -97,11 +97,11 @@ def timemix_apply(p, x, cfg, x_prev_last, state, dtype=jnp.bfloat16):
     mixed = _ddlerp(p, x.astype(jnp.float32), x_prev.astype(jnp.float32),
                     jnp.float32)
     xw, xk, xv, xr, xg = [mixed[:, :, i] for i in range(_N_MIX)]
-    r = L.dense_apply(p["wr"], xr.astype(dtype), dtype, cfg.quant_planes)
-    k = L.dense_apply(p["wk"], xk.astype(dtype), dtype, cfg.quant_planes)
-    v = L.dense_apply(p["wv"], xv.astype(dtype), dtype, cfg.quant_planes)
+    r = L.dense_apply(p["wr"], xr.astype(dtype), dtype, cfg.quant_spec())
+    k = L.dense_apply(p["wk"], xk.astype(dtype), dtype, cfg.quant_spec())
+    v = L.dense_apply(p["wv"], xv.astype(dtype), dtype, cfg.quant_spec())
     g = jax.nn.silu(L.dense_apply(p["wg"], xg.astype(dtype), dtype,
-                                  cfg.quant_planes))
+                                  cfg.quant_spec()))
     # data-dependent decay, computed in fp32 for stability
     wlo = jnp.tanh(L.dense_apply(p["w_lora1"], xw, jnp.float32))
     wln = p["w0"].astype(jnp.float32) + \
@@ -122,7 +122,7 @@ def timemix_apply(p, x, cfg, x_prev_last, state, dtype=jnp.bfloat16):
     y = y.reshape(b, t, d) * p["ln_x_scale"].astype(jnp.float32) + \
         p["ln_x_bias"].astype(jnp.float32)
     y = (y.astype(dtype) * g)
-    out = L.dense_apply(p["wo"], y, dtype, cfg.quant_planes)
+    out = L.dense_apply(p["wo"], y, dtype, cfg.quant_spec())
     return out, x[:, -1], state
 
 
@@ -147,12 +147,12 @@ def chanmix_apply(p, x, cfg, x_prev_last, dtype=jnp.bfloat16):
     mu_r = p["mu_r"].astype(dtype)
     xk = x + (x_prev - x) * mu_k
     xr = x + (x_prev - x) * mu_r
-    k = L.dense_apply(p["wk"], xk, dtype, cfg.quant_planes)
+    k = L.dense_apply(p["wk"], xk, dtype, cfg.quant_spec())
     k = jnp.square(jax.nn.relu(k))
     k = constrain(k, "batch", "seq_inner", "mlp")
-    kv = L.dense_apply(p["wv"], k, dtype, cfg.quant_planes)
+    kv = L.dense_apply(p["wv"], k, dtype, cfg.quant_spec())
     return jax.nn.sigmoid(L.dense_apply(p["wr"], xr, dtype,
-                                        cfg.quant_planes)) * kv, x[:, -1]
+                                        cfg.quant_spec())) * kv, x[:, -1]
 
 
 def rwkv_init(key, cfg, param_dtype=jnp.float32):
@@ -237,7 +237,7 @@ def rwkv_lm_apply(params, tokens, cfg, state=None, return_state=False):
     x, new_state = jax.lax.scan(body_fn, x, (params["blocks"], state),
                                 unroll=cfg.scan_unroll)
     x = L.layernorm_apply(params["ln_out"], x)
-    logits = L.dense_apply(params["head"], x, dtype, cfg.quant_planes)
+    logits = L.dense_apply(params["head"], x, dtype, cfg.quant_spec())
     logits = constrain(logits, "batch", "seq_inner", "vocab")
     if return_state:
         return logits, new_state

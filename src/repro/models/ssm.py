@@ -89,7 +89,7 @@ def ssm_apply(p, x, cfg, state=None, dtype=jnp.bfloat16):
     if state is None:
         from repro.parallel.sharding import unbox
         state = unbox(init_ssm_state(cfg, b))
-    xz = L.dense_apply(p["in_proj"], x, dtype, cfg.quant_planes)
+    xz = L.dense_apply(p["in_proj"], x, dtype, cfg.quant_spec())
     xs, z = jnp.split(xz, 2, axis=-1)
     xs = constrain(xs, "batch", "seq_inner", "mlp")
     xs, conv_state = _causal_conv(xs, p["conv_w"].astype(dtype),
@@ -105,7 +105,7 @@ def ssm_apply(p, x, cfg, state=None, dtype=jnp.bfloat16):
     y, h = _selective_scan(xs, dt, bmat, cmat, a, state["h"])
     y = y + xs * p["d_skip"].astype(jnp.float32)[None, None]
     y = (y.astype(dtype) * jax.nn.silu(z))
-    out = L.dense_apply(p["out_proj"], y, dtype, cfg.quant_planes)
+    out = L.dense_apply(p["out_proj"], y, dtype, cfg.quant_spec())
     return out, {"h": h, "conv": conv_state.astype(jnp.bfloat16)}
 
 

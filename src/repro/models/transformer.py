@@ -49,16 +49,16 @@ def mlp_init(key, cfg, param_dtype=jnp.float32):
 def mlp_apply(p, x, cfg, dtype=jnp.bfloat16):
     act = L.activation(cfg.act)
     if cfg.gated_mlp:
-        up = L.dense_apply(p["up"], x, dtype, cfg.quant_planes)
-        g = L.dense_apply(p["gate"], x, dtype, cfg.quant_planes)
+        up = L.dense_apply(p["up"], x, dtype, cfg.quant_spec())
+        g = L.dense_apply(p["gate"], x, dtype, cfg.quant_spec())
         h = act(g) * up
     else:
         # activation folded into the dense epilogue (fused in-kernel on the
         # pallas quantized path; identical math on the other impls)
-        h = L.dense_apply(p["up"], x, dtype, cfg.quant_planes,
+        h = L.dense_apply(p["up"], x, dtype, cfg.quant_spec(),
                           activation=cfg.act)
     h = constrain(h, "batch", "seq_inner", "mlp")
-    return L.dense_apply(p["down"], h, dtype, cfg.quant_planes)
+    return L.dense_apply(p["down"], h, dtype, cfg.quant_spec())
 
 
 def block_init(key, cfg, param_dtype=jnp.float32):
@@ -147,7 +147,7 @@ def _logits(params, x, cfg, dtype):
     if cfg.tie_embeddings:
         logits = L.embed_logits(params["embed"], x, dtype)
     else:
-        logits = L.dense_apply(params["lm_head"], x, dtype, cfg.quant_planes)
+        logits = L.dense_apply(params["lm_head"], x, dtype, cfg.quant_spec())
     if cfg.logit_softcap:
         c = cfg.logit_softcap
         logits = c * jnp.tanh(logits.astype(jnp.float32) / c)

@@ -1,0 +1,96 @@
+"""The deprecated global-switch API (set_quant_impl / QUANT_IMPL /
+QuantState.activate) must keep working for one release, warn on every use,
+and only influence legacy int-plane-budget callers — never spec carriers.
+
+This file is deliberately excluded from the CI `deprecations` lane (which
+runs the suite with -W error::DeprecationWarning): it is the one place the
+shim surface is allowed to fire.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.engine import QuantSpec
+from repro.engine import _compat
+from repro.models import layers as L
+
+
+@pytest.fixture(autouse=True)
+def _restore_legacy_default():
+    prev = _compat.legacy_name()
+    yield
+    _compat.set_default_impl(prev)
+
+
+def _problem(rng):
+    x = jnp.asarray(rng.normal(0, 1, size=(3, 64)).astype(np.float32))
+    p = {"w": jnp.asarray(rng.normal(0, 0.05, size=(64, 48))
+                          .astype(np.float32))}
+    return p, x
+
+
+def test_set_quant_impl_warns_and_steers_legacy_int_callers(rng):
+    p, x = _problem(rng)
+    want = np.asarray(L.dense_apply(
+        p, x, jnp.float32, QuantSpec(planes=3, impl="pallas_fused")),
+        np.float32)
+    with pytest.warns(DeprecationWarning, match="set_quant_impl"):
+        L.set_quant_impl("pallas")          # legacy alias for the fused path
+    got = np.asarray(L.dense_apply(p, x, jnp.float32, 3), np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_set_quant_impl_does_not_touch_spec_callers(rng):
+    p, x = _problem(rng)
+    spec = QuantSpec(planes=3, impl="planes")
+    want = np.asarray(L.dense_apply(p, x, jnp.float32, spec), np.float32)
+    with pytest.warns(DeprecationWarning):
+        L.set_quant_impl("int8")
+    got = np.asarray(L.dense_apply(p, x, jnp.float32, spec), np.float32)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_set_quant_impl_rejects_unknown():
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="unknown quant impl"):
+            L.set_quant_impl("nope")
+
+
+def test_quant_impl_attribute_reads_back_with_warning():
+    with pytest.warns(DeprecationWarning):
+        L.set_quant_impl("pallas")
+    with pytest.warns(DeprecationWarning, match="QUANT_IMPL"):
+        assert L.QUANT_IMPL == "pallas"
+
+
+def test_module_getattr_still_raises_for_typos():
+    with pytest.raises(AttributeError):
+        L.QUANT_IMPLZ
+
+
+def test_quant_impls_tuple_lists_registered_engines():
+    assert L.QUANT_IMPLS == \
+        ("ref", "planes", "int8", "pallas", "pallas_fused")
+
+
+def test_quantstate_activate_warns_and_spec_maps_aliases():
+    st = L.QuantState(planes=3, impl="pallas")
+    assert st.spec() == QuantSpec(planes=3, impl="pallas_fused")
+    assert L.QuantState().spec() is None
+    with pytest.warns(DeprecationWarning, match="activate"):
+        st.activate()
+    assert _compat.default_impl() == "pallas_fused"
+
+
+def test_config_quant_planes_sugar_follows_legacy_default():
+    """cfg.quant_spec() without an explicit spec preserves the old
+    global-switch semantics for un-migrated callers."""
+    from repro.configs.registry import get_config
+    cfg = get_config("minicpm-2b", smoke=True).replace(quant_planes=3)
+    assert cfg.quant_spec() == QuantSpec(planes=3, impl="planes")
+    with pytest.warns(DeprecationWarning):
+        L.set_quant_impl("int8")
+    assert cfg.quant_spec().impl == "int8"
+    # an explicit spec always wins over the shim
+    cfg2 = cfg.replace(quant=QuantSpec(planes=2, impl="ref"))
+    assert cfg2.quant_spec() == QuantSpec(planes=2, impl="ref")

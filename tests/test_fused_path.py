@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import bw_ref, quant as quantlib
+from repro.engine import QuantSpec
 from repro.kernels import ops, ref
 from repro.kernels.bw_gemm import EPILOGUE_ACTIVATIONS
 
@@ -193,55 +194,50 @@ def test_select_block_sizes_table():
     assert big >= (128, 128, 128) and big != (128, 128, 128)
 
 
-def test_dense_apply_pallas_impl_matches_oracle(rng):
+def test_dense_apply_kernel_impl_matches_oracle(rng):
     from repro.models import layers as L
     x = jnp.asarray(rng.normal(0, 1, size=(3, 64)).astype(np.float32))
     p = {"w": jnp.asarray(rng.normal(0, 0.05, size=(64, 48))
                           .astype(np.float32)),
          "b": jnp.asarray(rng.normal(0, 0.1, size=(48,)).astype(np.float32))}
-    want = np.asarray(L.dense_apply(p, x, jnp.float32, quant_planes=3),
-                      np.float32)
-    L.set_quant_impl("pallas")
-    try:
-        got = np.asarray(L.dense_apply(p, x, jnp.float32, quant_planes=3),
-                         np.float32)
-    finally:
-        L.set_quant_impl("planes")
-    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    want = np.asarray(L.dense_apply(p, x, jnp.float32, 3), np.float32)
+    for impl in ("pallas", "pallas_fused"):
+        got = np.asarray(L.dense_apply(
+            p, x, jnp.float32, QuantSpec(planes=3, impl=impl)), np.float32)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
 def test_planned_dense_apply_inside_jit_matches_oracle(rng):
     """The attached-plan route must work under jit (the serve-step shape)."""
     from repro.models import layers as L
+    spec = QuantSpec(planes=3, impl="pallas_fused")
     x = jnp.asarray(rng.normal(0, 1, size=(3, 64)).astype(np.float32))
     params = {"proj": {"w": jnp.asarray(
         rng.normal(0, 0.05, size=(64, 48)).astype(np.float32))}}
-    want = np.asarray(L.dense_apply(params["proj"], x, jnp.float32,
-                                    quant_planes=3), np.float32)
-    planned_params, count = ops.plan_params(params, 3)
+    want = np.asarray(L.dense_apply(params["proj"], x, jnp.float32, 3),
+                      np.float32)
+    planned_params, count = ops.plan_params(params, spec)
     assert count == 1 and "w_plan" in planned_params["proj"]
 
     @jax.jit
     def step(p, xx):
-        return L.dense_apply(p["proj"], xx, jnp.float32, quant_planes=3)
+        return L.dense_apply(p["proj"], xx, jnp.float32, spec)
 
-    L.set_quant_impl("pallas")
-    try:
-        got = np.asarray(step(planned_params, x), np.float32)
-    finally:
-        L.set_quant_impl("planes")
+    got = np.asarray(step(planned_params, x), np.float32)
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
-def test_plan_rejects_radix2_encodings(rng):
-    """The plan record cannot carry a radix; radix-2 encodings must be
-    refused loudly instead of decoding silently wrong."""
+def test_plan_spec_mismatch_fails_loudly(rng):
+    """The plan record cannot carry its encoding; applying it under a spec
+    from a different radix family must be refused instead of decoding
+    silently wrong."""
     x = jnp.asarray(rng.normal(0, 1, size=(2, 64)).astype(np.float32))
     w = jnp.asarray(rng.normal(0, 0.05, size=(64, 32)).astype(np.float32))
-    with pytest.raises(ValueError, match="radix-4"):
-        ops.quantized_dense(x, w, 3, encoding="bitserial", interpret=True)
-    with pytest.raises(ValueError, match="radix-4"):
-        ops.plan_dense_weight(w, 3, encoding="bitserial")
+    plan = ops.plan_dense_weight(w, QuantSpec(planes=3, encoding="ent"))
+    with pytest.raises(ValueError, match="digit planes"):
+        ops.planned_dense_apply(
+            plan, x, QuantSpec(planes=3, encoding="bitserial"), 32,
+            interpret=True)
 
 
 def test_plan_params_skips_raw_matmul_weights(rng):
@@ -274,7 +270,7 @@ def test_plan_params_stacked_layers(rng):
 
 
 def test_fallback_under_tracing_without_plan_is_bit_exact(rng):
-    """QUANT_IMPL='pallas' with traced, unplanned weights must lower to the
+    """A kernel impl with traced, unplanned weights must lower to the
     int8 dot -- bit-identical to the planes oracle after dequant."""
     from repro.models import layers as L
     x = jnp.asarray(rng.normal(0, 1, size=(3, 64)).astype(np.float32))
@@ -283,14 +279,11 @@ def test_fallback_under_tracing_without_plan_is_bit_exact(rng):
 
     @jax.jit
     def step(pp, xx):
-        return L.dense_apply(pp, xx, jnp.float32, quant_planes=3)
+        return L.dense_apply(pp, xx, jnp.float32, 3)
 
     want = np.asarray(step(p, x), np.float32)      # planes impl
-    L.set_quant_impl("pallas")
-    try:
-        got = np.asarray(jax.jit(
-            lambda pp, xx: L.dense_apply(pp, xx, jnp.float32,
-                                         quant_planes=3))(p, x), np.float32)
-    finally:
-        L.set_quant_impl("planes")
+    spec = QuantSpec(planes=3, impl="pallas_fused")
+    got = np.asarray(jax.jit(
+        lambda pp, xx: L.dense_apply(pp, xx, jnp.float32, spec))(p, x),
+        np.float32)
     np.testing.assert_array_equal(got, want)
