@@ -247,6 +247,34 @@ def model_quantized_forward_kernel():
             "kernel_tok_per_s": s_ker["tok_per_s"]}
 
 
+def serve_throughput():
+    """Serving throughput under the synthetic load generator: requests/s,
+    tok/s and TTFT/TPOT per tier-routing policy on the two-tier QuantSpec
+    ladder (fast planes=2 / quality planes=4, both the fused kernel path in
+    interpret mode), virtual-time discrete-event drive."""
+    from repro.configs.registry import get_config
+    from repro.serving import (AsyncServer, default_tiers, loadgen,
+                               validate_summary)
+    cfg = get_config("minicpm-2b", smoke=True)
+    out = {}
+    for policy in ("fastest", "round_robin", "slo"):
+        reqs = loadgen.synthesize(cfg.vocab_size, 12, prompt_len=(3, 6),
+                                  max_tokens=(3, 6), pattern="poisson",
+                                  rate=50, deadline_slack=(0.1, 1.5), seed=0)
+        server = AsyncServer(cfg, tiers=default_tiers(2, batch=2),
+                             max_len=16, router=policy,
+                             step_time_scale=5e4)
+        stats = validate_summary(server.run(reqs))
+        out[policy] = {"completed": stats["completed"],
+                       "req_per_s": stats["req_per_s"],
+                       "tok_per_s": stats["tok_per_s"],
+                       "ttft_p50_s": stats["ttft"]["p50"],
+                       "tpot_p50_s": stats["tpot"]["p50"],
+                       "tier_requests": stats["tier_requests"],
+                       "deadlines_met": stats["deadlines"]["met"]}
+    return out
+
+
 def kernel_quant_planes():
     import numpy as np
     import jax.numpy as jnp
@@ -336,6 +364,7 @@ BENCHES = [
     ("kernel.plane_bounded_quant", kernel_quant_planes),
     ("e2e.train_step_smoke", train_step_smoke),
     ("e2e.quantized_forward_kernel", model_quantized_forward_kernel),
+    ("e2e.serve_throughput", serve_throughput),
     ("beyond.qat_planes_ablation", qat_planes_ablation),
     ("beyond.encoding_width_scaling", encoding_width_scaling),
 ]

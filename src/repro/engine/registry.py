@@ -245,12 +245,6 @@ class PallasEngine(GemmEngine):
 
     def apply(self, plan_or_w, x, spec, *, n_out=None, bias=None,
               activation=None, out_dtype=jnp.float32, interpret=None):
-        if spec.act_quant != "per_tensor":
-            raise ValueError(
-                f"engine {self.name!r} supports act_quant='per_tensor' "
-                f"only (the kernel epilogue folds one activation scale "
-                f"into the per-channel weight scale); got "
-                f"{spec.act_quant!r}")
         from repro.kernels import ops
         if isinstance(plan_or_w, dict):       # pre-planned: jit/scan-safe
             if n_out is None:

@@ -33,9 +33,15 @@ __all__ = ["QuantSpec", "IMPLS", "ACT_QUANT_POLICIES"]
 IMPLS = ("ref", "planes", "int8", "pallas", "pallas_fused")
 
 # How activations are quantized at matmul time:
-#   per_tensor -- one scale for the whole activation tensor (kernel-friendly:
-#                 folds into the per-channel weight scale in the epilogue).
-#   per_token  -- one scale per row (last-dim reduction); jnp engines only.
+#   per_tensor -- one scale for the whole activation tensor (folds into the
+#                 per-channel weight scale in the kernel epilogue).  NOTE:
+#                 the scale is a max over the *batch*, so under continuous
+#                 batching a request's outputs depend on its batch-mates.
+#   per_token  -- one scale per row (last-dim reduction); reaches the fused
+#                 kernel epilogue as a per-column vector (tokens sit on the
+#                 kernel N axis).  Decode rows become independent, so
+#                 serving outputs are deterministic per request — the
+#                 serving tiers default to this policy.
 ACT_QUANT_POLICIES = ("per_tensor", "per_token")
 
 # legacy global-switch impl names -> registry engine names ("pallas" used to

@@ -95,15 +95,16 @@ def bw_gemm(digits, b, mask, *, block_m: int = 128, block_n: int = 128,
     )(mask, digits, b)
 
 
-def _fused_kernel(mask_ref, d_ref, b_ref, scale_ref, bias_ref, o_ref,
-                  acc_ref, *, n_planes: int, radix: int, k_steps: int,
-                  activation, has_bias: bool):
+def _fused_kernel(mask_ref, d_ref, b_ref, scale_ref, scale_n_ref, bias_ref,
+                  o_ref, acc_ref, *, n_planes: int, radix: int, k_steps: int,
+                  activation, has_bias: bool, has_scale_n: bool):
     """bw_gemm with the dequant epilogue folded in.
 
     The int32 accumulator lives in a VMEM scratch block revisited across the
     K grid; only the final float result is written to the output in HBM, so
     the accumulator never round-trips through HBM.  On the last K step the
-    epilogue applies scale (act scale x per-channel weight scale), optional
+    epilogue applies scale (act scale x per-channel weight scale; with a
+    second per-column vector when the act scale is per-token), optional
     bias, and optional activation -- all on the register/VMEM-resident block.
     """
     @pl.when(pl.program_id(2) == 0)
@@ -123,7 +124,13 @@ def _fused_kernel(mask_ref, d_ref, b_ref, scale_ref, bias_ref, o_ref,
 
     @pl.when(pl.program_id(2) == k_steps - 1)
     def _epilogue():
-        y = acc_ref[...].astype(jnp.float32) * scale_ref[...]
+        s = scale_ref[...]
+        if has_scale_n:
+            # combine the two scale vectors first so the accumulator is
+            # multiplied by one float, bit-matching the jnp oracle's
+            # `acc * (sx * sw)` ordering
+            s = s * scale_n_ref[...]
+        y = acc_ref[...].astype(jnp.float32) * s
         if has_bias:
             y = y + bias_ref[...]
         y = EPILOGUE_ACTIVATIONS[activation](y)
@@ -133,11 +140,11 @@ def _fused_kernel(mask_ref, d_ref, b_ref, scale_ref, bias_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=(
     "block_m", "block_n", "block_k", "radix", "interpret", "activation",
     "epilogue_axis", "out_dtype"))
-def bw_gemm_fused(digits, b, mask, scale, bias=None, *, block_m: int = 128,
-                  block_n: int = 128, block_k: int = 256, radix: int = 4,
-                  interpret: bool = False, activation=None,
+def bw_gemm_fused(digits, b, mask, scale, bias=None, scale_n=None, *,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 256,
+                  radix: int = 4, interpret: bool = False, activation=None,
                   epilogue_axis: str = "m", out_dtype=jnp.float32):
-    """C = act((sum_bw (digits[bw] @ B) * radix**bw) * scale + bias).
+    """C = act((sum_bw (digits[bw] @ B) * radix**bw) * scales + bias).
 
     digits: int8 [BW, M, K] encoded planes of the multiplicand.
     b:      int8 [K, N].
@@ -145,6 +152,11 @@ def bw_gemm_fused(digits, b, mask, scale, bias=None, *, block_m: int = 128,
     scale:  f32 [M, 1] (epilogue_axis='m', per-row: weight channels on M as
             in the planned-weight layout) or [1, N] (epilogue_axis='n').
     bias:   optional f32, same shape rules as scale.
+    scale_n: optional second scale vector on the *other* axis -- [1, N] when
+            epilogue_axis='m'.  This is how per-token activation scales
+            reach the fused epilogue: the planned-weight layout puts tokens
+            on the kernel N axis, so a per-token act scale is a per-column
+            vector multiplied into the per-channel row scale in-kernel.
     """
     bw_n, m, k = digits.shape
     k2, n = b.shape
@@ -157,16 +169,24 @@ def bw_gemm_fused(digits, b, mask, scale, bias=None, *, block_m: int = 128,
     if epilogue_axis == "m":
         assert scale.shape == (m, 1), scale.shape
         vec_spec = pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0))
+        col_spec = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
     else:
         assert scale.shape == (1, n), scale.shape
+        assert scale_n is None, "scale_n only supports epilogue_axis='m'"
         vec_spec = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
+        col_spec = vec_spec
+    has_scale_n = scale_n is not None
+    if has_scale_n:
+        assert scale_n.shape == (1, n), scale_n.shape
+    else:                               # placeholder so arity is static
+        scale_n = jnp.ones((1, n), jnp.float32)
     has_bias = bias is not None
     if not has_bias:                    # placeholder so arity is static
         bias = jnp.zeros_like(scale)
     grid = (m // block_m, n // block_n, k // block_k)
     kernel = functools.partial(_fused_kernel, n_planes=bw_n, radix=radix,
                                k_steps=grid[2], activation=activation,
-                               has_bias=has_bias)
+                               has_bias=has_bias, has_scale_n=has_scale_n)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -175,10 +195,12 @@ def bw_gemm_fused(digits, b, mask, scale, bias=None, *, block_m: int = 128,
             pl.BlockSpec((bw_n, block_m, block_k), lambda i, j, kk: (0, i, kk)),
             pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
             vec_spec,
+            col_spec,
             vec_spec,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.dtype(out_dtype)),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
         interpret=interpret,
-    )(mask, digits, b, scale.astype(jnp.float32), bias.astype(jnp.float32))
+    )(mask, digits, b, scale.astype(jnp.float32),
+      scale_n.astype(jnp.float32), bias.astype(jnp.float32))

@@ -414,19 +414,19 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
 
     plan: record from plan_dense_weight (possibly a scan-sliced layer of a
     stacked plan), built under the *same* spec.  Activations are quantized
-    per-tensor at call time.  With fused=True the dequant (per-channel
-    weight scale x per-tensor act scale), bias add and activation run in
-    the kernel epilogue on the VMEM-resident accumulator; with fused=False
-    the kernel returns the int32 accumulator and the epilogue runs in jnp.
-    Traceable end to end: safe inside jit / scan (block sizes come from
-    static array shapes, radix from the static spec).
+    at call time per the spec's act_quant policy: ``per_tensor`` folds the
+    single activation scale into the per-channel weight scale; ``per_token``
+    keeps one scale per activation row and (fused=True) feeds it to the
+    kernel epilogue as a per-column vector -- tokens sit on the kernel N
+    axis in the planned-weight layout -- so continuous-batching decode
+    outputs do not depend on what else is packed in the batch.  With
+    fused=True the dequant, bias add and activation run in the kernel
+    epilogue on the VMEM-resident accumulator; with fused=False the kernel
+    returns the int32 accumulator and the epilogue runs in jnp.  Traceable
+    end to end: safe inside jit / scan (block sizes come from static array
+    shapes, radix from the static spec).
     """
     spec = QuantSpec.coerce(spec)
-    if spec.act_quant != "per_tensor":
-        raise ValueError(
-            f"the kernel path supports act_quant='per_tensor' only (one "
-            f"activation scale folds into the per-channel weight scale in "
-            f"the epilogue); got {spec.act_quant!r}")
     if interpret is None:
         interpret = _interpret()
     digits, mask = plan["digits"], plan["mask"]
@@ -440,20 +440,25 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
     block_k = k_pad // mask.shape[2]
     k = x.shape[-1]
     lead = x.shape[:-1]
+    per_token = spec.act_quant == "per_token"
     qx, sx = quantlib.quantize_for_spec(
-        jnp.asarray(x).astype(jnp.float32), spec)
+        jnp.asarray(x).astype(jnp.float32), spec,
+        axis=-1 if per_token else None)
     x2 = qx.reshape(-1, k)
     batch = x2.shape[0]
     if block_n is None:
         block_n = select_block_sizes(n_out, k, batch, spec)[2]
     bt = _pad_to(_pad_to(x2.T, block_k, 0), block_n, 1)
+    sx_cols = None
+    if per_token:                        # one scale per activation row ->
+        sx_cols = _pad_to(sx.reshape(1, -1), block_n, 1)  # kernel N axis
     if fused:
-        scale_rows = plan["sw_rows"] * sx
+        scale_rows = plan["sw_rows"] if per_token else plan["sw_rows"] * sx
         bias_rows = None
         if bias is not None:
             bias_rows = _channel_rows(bias, n_out, m_pad, plan["row_perm"])
         out = _bw.bw_gemm_fused(
-            digits, bt, mask, scale_rows, bias_rows,
+            digits, bt, mask, scale_rows, bias_rows, sx_cols,
             block_m=block_m, block_n=block_n, block_k=block_k,
             radix=spec.radix, interpret=bool(interpret),
             activation=activation, epilogue_axis="m", out_dtype=jnp.float32)
@@ -464,7 +469,8 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
             block_k=block_k, radix=spec.radix, interpret=bool(interpret))
         acc = acc[plan["inv_perm"]][:n_out, :batch]
         sw = plan["sw_rows"][plan["inv_perm"]][:n_out]     # original order
-        y = (acc.astype(jnp.float32) * (sw * sx)).T
+        s = sw * (sx.reshape(1, -1) if per_token else sx)
+        y = (acc.astype(jnp.float32) * s).T
         if bias is not None:
             y = y + jnp.asarray(bias, jnp.float32)
         if activation is not None:

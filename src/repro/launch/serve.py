@@ -1,166 +1,56 @@
-"""Batched serving launcher: continuous greedy decoding over a request
-queue with a fixed-batch engine — the production shape of the decode_32k
-dry-run cells, runnable at CPU smoke scale.
+"""Serving launcher: a thin CLI over the ``repro.serving`` package.
 
-The engine keeps `batch` concurrent slots; finished sequences (EOS or
-max_tokens) are swapped for queued requests between steps (continuous
-batching at step granularity).  The same serve_step the dry-run lowers is
-used unchanged.
+Single-engine mode (default, the historical surface):
 
-Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch granite-34b \
         --requests 12 --batch 4 --max-tokens 24
+
+Async multi-tier mode (``--tiers N`` or repeated ``--tier name=spec``):
+one continuous-batching worker per QuantSpec tier, requests routed by a
+cost-model-driven policy, served under a synthetic arrival process:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b \
+        --requests 12 --tiers 2 --arrival poisson --rate 50 --router slo
+
+``ServeEngine`` and ``Request`` remain importable from this module for
+backward compatibility; the engine itself now lives in
+``repro.serving.engine`` (see README "Serving").
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
-from collections import deque
-from typing import List, Optional
+import json
+import sys
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS, get_config
 from repro.engine import QuantSpec, engine_names, spec_from_flags
-from repro.models import layers as L
-from repro.models.api import get_api
-from repro.parallel.sharding import unbox
-from repro.train.steps import make_serve_step
+from repro.serving import (AsyncServer, Request, ROUTER_POLICIES,
+                           ServeEngine, Tier, default_tiers, loadgen,
+                           validate_summary)
+from repro.serving.scheduler import POLICIES
 
 __all__ = ["ServeEngine", "Request", "main"]
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_tokens: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+def _parse_tier(text: str) -> Tier:
+    """``name=<quant-spec-string>`` (spec ``off`` -> unquantized tier)."""
+    if "=" not in text:
+        raise argparse.ArgumentTypeError(
+            f"--tier expects name=<quant-spec>, got {text!r}")
+    name, spec_text = text.split("=", 1)
+    return Tier(name.strip(), QuantSpec.parse(spec_text))
 
 
-class ServeEngine:
-    """Fixed-batch continuous-batching engine over the decode state.
-
-    quant: a repro.engine.QuantSpec, a legacy layers.QuantState, or None
-    (None defers to cfg: an explicit cfg.quant spec, else the quant_planes
-    sugar).  The resolved spec is baked into this engine's cfg, so the
-    jit'd serve step closes over it — engines with different specs coexist
-    in one process without interfering.
-
-    With a kernel impl ("pallas" / "pallas_fused") the engine serves
-    through the kernel execution path: every dense weight is pre-planned
-    once at init (encode -> digit planes -> occupancy mask ->
-    magnitude-ordered channel permutation) and the plan records are
-    attached to the param tree, so the jit'd serve step scans/slices them
-    like any other parameter and each quantized matmul executes the Pallas
-    bw_gemm kernel (interpret mode off-TPU) instead of the jnp oracle.
-    """
-
-    def __init__(self, cfg, batch: int, max_len: int, seed: int = 0,
-                 quant=None):
-        if isinstance(quant, QuantSpec):
-            spec = quant if quant.enabled else None
-        elif isinstance(quant, L.QuantState):
-            spec = quant.spec()
-        elif quant is None:
-            spec = cfg.quant_spec()
-        else:
-            raise TypeError(f"quant must be a QuantSpec, QuantState or "
-                            f"None; got {type(quant).__name__}")
-        self.spec = spec
-        # QuantState view kept for stats compatibility (plan_stats etc.)
-        self.quant = quant if isinstance(quant, L.QuantState) else \
-            L.QuantState(planes=spec.planes if spec else 0,
-                         impl=spec.impl if spec else "planes")
-        # bake the spec into the cfg the step closes over: no global state
-        cfg = cfg.replace(quant=spec,
-                          quant_planes=spec.planes if spec else 0)
-        self.cfg = cfg
-        self.api = get_api(cfg)
-        self.batch = batch
-        self.max_len = max_len
-        self.params = unbox(self.api.init(jax.random.PRNGKey(seed), cfg))
-        self.state = unbox(self.api.init_decode(cfg, batch, max_len))
-        self._kernel_path = spec is not None and \
-            spec.impl in ("pallas", "pallas_fused")
-        if self._kernel_path:
-            # one-time planning step: encode every dense weight into digit
-            # planes + occupancy mask + channel permutation and attach the
-            # plan records to the param tree.  The jit'd serve step then
-            # scans/slices them like any other parameter and every quantized
-            # matmul executes the Pallas kernel.
-            from repro.kernels import ops
-            self.params, planned = ops.plan_params(self.params, spec)
-            self.quant.plan_stats = {"planned_weights": planned,
-                                     **ops.plan_cache_stats()}
-        self.step = jax.jit(make_serve_step(cfg))
-        self.slots: List[Optional[Request]] = [None] * batch
-        self.pos = np.zeros(batch, np.int32)
-        self.cur = np.zeros((batch, 1), np.int32)
-        self.prompt_cursor = np.zeros(batch, np.int32)
-        self.steps = 0
-
-    def _admit(self, queue: deque) -> None:
-        for i in range(self.batch):
-            if self.slots[i] is None and queue:
-                req = queue.popleft()
-                self.slots[i] = req
-                self.pos[i] = 0
-                self.prompt_cursor[i] = 0
-                self.cur[i, 0] = req.prompt[0]
-
-    def _advance(self, next_tokens: np.ndarray) -> List[Request]:
-        finished = []
-        for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            self.pos[i] += 1
-            c = int(self.prompt_cursor[i]) + 1
-            if c < len(req.prompt):
-                # still teacher-forcing the prompt
-                self.prompt_cursor[i] = c
-                self.cur[i, 0] = req.prompt[c]
-            else:
-                tok = int(next_tokens[i, 0])
-                req.out.append(tok)
-                self.cur[i, 0] = tok
-                if len(req.out) >= req.max_tokens or \
-                        self.pos[i] >= self.max_len - 1:
-                    req.done = True
-                    finished.append(req)
-                    self.slots[i] = None
-        return finished
-
-    def run(self, requests: List[Request]) -> dict:
-        # the jit'd step closed over this engine's cfg (and its baked-in
-        # QuantSpec) at construction: no global impl state to save/restore,
-        # and concurrent engines with different specs cannot interfere
-        queue = deque(requests)
-        done: List[Request] = []
-        t0 = time.time()
-        while queue or any(s is not None for s in self.slots):
-            self._admit(queue)
-            nxt, self.state = self.step(
-                self.params, jnp.asarray(self.cur),
-                jnp.asarray(self.pos), self.state)
-            done.extend(self._advance(np.asarray(nxt)))
-            self.steps += 1
-        dt = time.time() - t0
-        gen = sum(len(r.out) for r in done)
-        stats = {"requests": len(done), "generated_tokens": gen,
-                 "engine_steps": self.steps, "wall_s": round(dt, 2),
-                 "tok_per_s": round(gen / max(dt, 1e-9), 1),
-                 "quant_spec": str(self.spec) if self.spec else None,
-                 "quant_planes": self.spec.planes if self.spec else 0,
-                 "quant_impl": self.spec.impl if self.spec else None}
-        if self._kernel_path:
-            from repro.kernels import ops
-            stats["plan_cache"] = ops.plan_cache_stats()
-        return stats
+def _parse_slack(text):
+    try:
+        lo, hi = (float(s) for s in text.split(":"))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--deadline-slack expects lo:hi seconds, got {text!r}")
+    return (lo, hi)
 
 
 def main(argv=None) -> int:
@@ -186,22 +76,92 @@ def main(argv=None) -> int:
     ap.add_argument("--quant-encoding", default="ent",
                     help="bit-weight encoding (see core.encodings)")
     ap.add_argument("--quant-bits", type=int, default=8)
+    # -- async multi-tier server ------------------------------------------
+    ap.add_argument("--tiers", type=int, default=0,
+                    help="run the async server with the first N default "
+                         "quant tiers (fast/balanced/quality ladder); "
+                         "0 = single-engine mode")
+    ap.add_argument("--tier", action="append", dest="custom_tiers",
+                    type=_parse_tier, metavar="NAME=SPEC",
+                    help="custom tier (repeatable), e.g. "
+                         "fast=planes=2,impl=pallas_fused; implies the "
+                         "async server")
+    ap.add_argument("--policy", choices=tuple(POLICIES), default="fcfs",
+                    help="admission policy of each tier worker's queue")
+    ap.add_argument("--router", choices=ROUTER_POLICIES, default="slo",
+                    help="tier-routing policy (cost-model driven)")
+    ap.add_argument("--arrival", choices=loadgen.ARRIVAL_PATTERNS,
+                    default="none", help="synthetic arrival process")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="arrival rate (req/s) for poisson/uniform")
+    ap.add_argument("--deadline-slack", type=_parse_slack, default=None,
+                    metavar="LO:HI",
+                    help="give each request a deadline of arrival + "
+                         "U(lo, hi) seconds (drives --policy deadline "
+                         "and --router slo)")
+    ap.add_argument("--realtime", action="store_true",
+                    help="threaded wall-clock mode (default: deterministic "
+                         "virtual-time simulation)")
+    ap.add_argument("--step-time-scale", type=float, default=5e4,
+                    help="virtual-mode multiplier on the hwmodel step-time "
+                         "estimates (smoke models are tiny, so unscaled "
+                         "estimates serve any load without queueing; the "
+                         "default creates visible contention at smoke "
+                         "scale)")
+    ap.add_argument("--json", action="store_true",
+                    help="print stats as JSON")
+    ap.add_argument("--out", default=None,
+                    help="also write the stats JSON to this file")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    rng = np.random.default_rng(args.seed)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
-                                    args.prompt_len).tolist(),
-                    args.max_tokens) for i in range(args.requests)]
-    spec = spec_from_flags(args.quant_spec, args.quant_planes,
-                           args.quant_impl, args.quant_encoding,
-                           args.quant_bits)
-    eng = ServeEngine(cfg, args.batch,
-                      args.prompt_len + args.max_tokens + 1, quant=spec)
-    stats = eng.run(reqs)
-    print(stats)
-    assert stats["requests"] == args.requests
-    return 0
+    max_len = args.prompt_len + args.max_tokens + 1
+    # --batch sets the decode-slot count of every tier worker too
+    tiers = tuple(dataclasses.replace(t, batch=args.batch)
+                  for t in args.custom_tiers or ()) or \
+        (default_tiers(args.tiers, batch=args.batch) if args.tiers else None)
+
+    if tiers is None:
+        # -- single-engine mode (the historical surface) -------------------
+        rng = np.random.default_rng(args.seed)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                        args.prompt_len).tolist(),
+                        args.max_tokens) for i in range(args.requests)]
+        spec = spec_from_flags(args.quant_spec, args.quant_planes,
+                               args.quant_impl, args.quant_encoding,
+                               args.quant_bits)
+        eng = ServeEngine(cfg, args.batch, max_len, quant=spec)
+        stats = eng.run(reqs, policy=args.policy)
+        ok = stats["requests"] == args.requests
+        if not ok:
+            print(f"serve FAILED: completed {stats['requests']} of "
+                  f"{args.requests} requests", file=sys.stderr)
+    else:
+        # -- async multi-tier mode -----------------------------------------
+        reqs = loadgen.synthesize(
+            cfg.vocab_size, args.requests,
+            prompt_len=(max(args.prompt_len // 2, 1), args.prompt_len),
+            max_tokens=(max(args.max_tokens // 2, 1), args.max_tokens),
+            pattern=args.arrival, rate=args.rate,
+            deadline_slack=args.deadline_slack, seed=args.seed)
+        server = AsyncServer(cfg, tiers=tiers, max_len=max_len,
+                             seed=args.seed, admission=args.policy,
+                             router=args.router,
+                             step_time_scale=args.step_time_scale)
+        stats = server.run(reqs, realtime=args.realtime)
+        validate_summary(stats)
+        ok = (stats["completed"] + stats["rejected"] == stats["requests"]
+              and stats["completed"] > 0)
+        if not ok:
+            print(f"serve FAILED: {stats['completed']} completed + "
+                  f"{stats['rejected']} rejected of {stats['requests']} "
+                  f"requests", file=sys.stderr)
+
+    print(json.dumps(stats, indent=1, default=str) if args.json else stats)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(stats, f, indent=1, default=str)
+    return 0 if ok else 1
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""repro.serving — asynchronous continuous-batching serving subsystem.
+
+The serving-level realization of the paper's thesis: the bit-weight /
+digit-plane budget of a quantized GEMM is a tunable cost knob, so a server
+can trade latency against quantization quality *per request* by routing
+traffic across engine workers baked with different ``QuantSpec`` tiers.
+
+Layers (each its own module):
+
+    request   -- ServeRequest lifecycle (QUEUED -> PREFILL -> DECODE ->
+                 DONE, REJECTED) with arrival/deadline/priority + timing
+    slots     -- SlotAllocator: decode-slot + KV-position bookkeeping,
+                 decoupled from the engine's batch arrays
+    scheduler -- admission Scheduler with pluggable policies (fcfs,
+                 priority, deadline/EDF) and prompt-length validation
+    tiers     -- Tier ladder + TierRouter (service-time estimates from
+                 GemmEngine.cost / core.hwmodel)
+    engine    -- ServeEngine: the jit'd fixed-batch decode engine with a
+                 stepping surface (admit_from / step) and the legacy
+                 blocking run()
+    server    -- AsyncServer: one TierWorker per tier, virtual-time
+                 (deterministic discrete-event) and realtime (threaded)
+                 drive modes
+    metrics   -- per-request TTFT/TPOT, queue depth, occupancy, tier
+                 histogram; validate_summary pins the dict shape
+    loadgen   -- Poisson / burst / uniform synthetic request loads
+
+``repro.launch.serve`` is a thin CLI over this package.
+"""
+from .request import (ServeRequest, Request, QUEUED, PREFILL,  # noqa: F401
+                      DECODE, DONE, REJECTED, LIFECYCLE)
+from .slots import SlotAllocator, SlotEvent                    # noqa: F401
+from .scheduler import (Scheduler, AdmissionPolicy, POLICIES,  # noqa: F401
+                        make_policy)
+from .tiers import (Tier, default_tiers, TierRouter,           # noqa: F401
+                    ROUTER_POLICIES, estimate_step_time, step_cost,
+                    decode_step_gemms)
+from .engine import ServeEngine, RESET_STATE_FAMILIES          # noqa: F401
+from .server import AsyncServer, TierWorker                    # noqa: F401
+from .metrics import (ServerMetrics, validate_summary,         # noqa: F401
+                      SUMMARY_KEYS, dist)
+from . import loadgen                                          # noqa: F401
+
+__all__ = [
+    "ServeRequest", "Request", "QUEUED", "PREFILL", "DECODE", "DONE",
+    "REJECTED", "LIFECYCLE",
+    "SlotAllocator", "SlotEvent",
+    "Scheduler", "AdmissionPolicy", "POLICIES", "make_policy",
+    "Tier", "default_tiers", "TierRouter", "ROUTER_POLICIES",
+    "estimate_step_time", "step_cost", "decode_step_gemms",
+    "ServeEngine", "RESET_STATE_FAMILIES",
+    "AsyncServer", "TierWorker",
+    "ServerMetrics", "validate_summary", "SUMMARY_KEYS", "dist",
+    "loadgen",
+]

@@ -1,0 +1,191 @@
+"""ServeEngine: the fixed-batch continuous-batching decode engine.
+
+One engine owns one jit'd serve step closed over one ``QuantSpec`` (baked
+into the cfg at construction — engines with different specs coexist in one
+process without interfering), plus the host-side slot state, now managed by
+``serving.slots.SlotAllocator`` instead of ad-hoc arrays.  The engine
+exposes a stepping surface (``admit_from`` / ``step`` / ``has_work``) that
+the async server drives, and keeps the legacy blocking ``run(requests)``
+loop as a thin wrapper over it.
+
+Correctness fixes over the legacy loop:
+
+- A prompt that cannot fit ``max_len`` fails fast at admission (the old
+  loop silently overran the KV cache — `dynamic_update_slice` clamping
+  corrupted the last cache row — and truncated generation to one token).
+  ``on_too_long="truncate"`` clips with a warning instead; the async
+  server's schedulers default to rejecting.
+- Recurrent-state families (rwkv, hybrid) get their per-slot state row
+  reset to its initial value when a slot is *reused*: attention families
+  mask stale cache rows by position, but a recurrence has no position
+  mask, so the old loop leaked the previous occupant's state into the next
+  request.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import QuantSpec
+from repro.models import layers as L
+from repro.models.api import get_api
+from repro.parallel.sharding import unbox
+from repro.train.steps import make_serve_step
+
+from .metrics import dist
+from .request import ServeRequest
+from .scheduler import Scheduler
+from .slots import SlotAllocator
+
+__all__ = ["ServeEngine", "RESET_STATE_FAMILIES"]
+
+# Families whose decode state is a recurrence (no position-masked cache):
+# their per-slot state row must be re-initialized when a slot is reused.
+RESET_STATE_FAMILIES = ("rwkv", "hybrid")
+
+
+@jax.jit
+def _reset_state_row(state, state0, slot):
+    """Restore one batch row (axis 1: leaves are [L, B, ...]) of the decode
+    state tree to its initial value."""
+    def leaf(s, s0):
+        if s.ndim < 2:
+            return s
+        upd = jax.lax.dynamic_slice_in_dim(s0, slot, 1, axis=1)
+        return jax.lax.dynamic_update_slice_in_dim(s, upd, slot, axis=1)
+    return jax.tree.map(leaf, state, state0)
+
+
+class ServeEngine:
+    """Fixed-batch continuous-batching engine over the decode state.
+
+    quant: a repro.engine.QuantSpec, a legacy layers.QuantState, or None
+    (None defers to cfg: an explicit cfg.quant spec, else the quant_planes
+    sugar).  The resolved spec is baked into this engine's cfg, so the
+    jit'd serve step closes over it — engines with different specs coexist
+    in one process without interfering.
+
+    With a kernel impl ("pallas" / "pallas_fused") the engine serves
+    through the kernel execution path: every dense weight is pre-planned
+    once at init (encode -> digit planes -> occupancy mask ->
+    magnitude-ordered channel permutation) and the plan records are
+    attached to the param tree, so the jit'd serve step scans/slices them
+    like any other parameter and each quantized matmul executes the Pallas
+    bw_gemm kernel (interpret mode off-TPU) instead of the jnp oracle.
+    """
+
+    def __init__(self, cfg, batch: int, max_len: int, seed: int = 0,
+                 quant=None, on_too_long: str = "error",
+                 audit: bool = False):
+        if isinstance(quant, QuantSpec):
+            spec = quant if quant.enabled else None
+        elif isinstance(quant, L.QuantState):
+            spec = quant.spec()
+        elif quant is None:
+            spec = cfg.quant_spec()
+        else:
+            raise TypeError(f"quant must be a QuantSpec, QuantState or "
+                            f"None; got {type(quant).__name__}")
+        self.spec = spec
+        # QuantState view kept for stats compatibility (plan_stats etc.)
+        self.quant = quant if isinstance(quant, L.QuantState) else \
+            L.QuantState(planes=spec.planes if spec else 0,
+                         impl=spec.impl if spec else "planes")
+        # bake the spec into the cfg the step closes over: no global state
+        cfg = cfg.replace(quant=spec,
+                          quant_planes=spec.planes if spec else 0)
+        self.cfg = cfg
+        self.api = get_api(cfg)
+        self.batch = batch
+        self.max_len = max_len
+        self.on_too_long = on_too_long
+        self.params = unbox(self.api.init(jax.random.PRNGKey(seed), cfg))
+        self.state = unbox(self.api.init_decode(cfg, batch, max_len))
+        self._state0 = jax.tree.map(jnp.copy, self.state) \
+            if self.api.family in RESET_STATE_FAMILIES else None
+        self._kernel_path = spec is not None and \
+            spec.impl in ("pallas", "pallas_fused")
+        if self._kernel_path:
+            # one-time planning step: encode every dense weight into digit
+            # planes + occupancy mask + channel permutation and attach the
+            # plan records to the param tree.  The jit'd serve step then
+            # scans/slices them like any other parameter and every quantized
+            # matmul executes the Pallas kernel.
+            from repro.kernels import ops
+            self.params, planned = ops.plan_params(self.params, spec)
+            self.quant.plan_stats = {"planned_weights": planned,
+                                     **ops.plan_cache_stats()}
+        self.step_fn = jax.jit(make_serve_step(cfg))
+        self.slots = SlotAllocator(batch, max_len, audit=audit)
+        self.steps = 0
+
+    # -- stepping surface (driven by the async server) -----------------------
+
+    @property
+    def active(self) -> int:
+        return self.slots.active
+
+    def has_work(self, scheduler: Optional[Scheduler] = None) -> bool:
+        return self.slots.active > 0 or \
+            (scheduler is not None and scheduler.queue_depth > 0)
+
+    def admit_from(self, scheduler: Scheduler, now: float = 0.0) -> int:
+        """Fill free slots from the scheduler (per its admission policy);
+        returns the number of requests admitted."""
+        admitted = 0
+        for slot in self.slots.free_slots():
+            req = scheduler.pop(now)
+            if req is None:
+                break
+            rebind = self.slots.bind(slot, req, now)
+            if rebind and self._state0 is not None:
+                # recurrent state: restore this row to its initial value so
+                # the new occupant never sees the previous request's state
+                self.state = _reset_state_row(
+                    self.state, self._state0, jnp.int32(slot))
+            admitted += 1
+        return admitted
+
+    def step(self, now: float = 0.0) -> List[ServeRequest]:
+        """One batched decode step; returns requests finished this step."""
+        nxt, self.state = self.step_fn(
+            self.params, jnp.asarray(self.slots.cur),
+            jnp.asarray(self.slots.pos), self.state)
+        self.steps += 1
+        return self.slots.advance(np.asarray(nxt), now)
+
+    # -- legacy blocking loop ------------------------------------------------
+
+    def run(self, requests: List[ServeRequest], policy: str = "fcfs") -> dict:
+        """Serve ``requests`` to completion (the legacy synchronous loop):
+        admit into free slots per ``policy``, step, repeat."""
+        sched = Scheduler(policy, max_len=self.max_len,
+                          on_too_long=self.on_too_long)
+        t0 = time.perf_counter()
+        for req in requests:
+            sched.submit(req, now=0.0)
+        done: List[ServeRequest] = []
+        while self.has_work(sched):
+            now = time.perf_counter() - t0
+            self.admit_from(sched, now)
+            done.extend(self.step(now=time.perf_counter() - t0))
+        dt = time.perf_counter() - t0
+        gen = sum(len(r.out) for r in done)
+        stats = {"requests": len(done), "generated_tokens": gen,
+                 "engine_steps": self.steps, "wall_s": round(dt, 2),
+                 "tok_per_s": round(gen / max(dt, 1e-9), 1),
+                 "quant_spec": str(self.spec) if self.spec else None,
+                 "quant_planes": self.spec.planes if self.spec else 0,
+                 "quant_impl": self.spec.impl if self.spec else None,
+                 "rejected": len(sched.rejected),
+                 "admission_policy": sched.policy.name,
+                 "ttft": dist(r.ttft for r in done),
+                 "tpot": dist(r.tpot for r in done)}
+        if self._kernel_path:
+            from repro.kernels import ops
+            stats["plan_cache"] = ops.plan_cache_stats()
+        return stats

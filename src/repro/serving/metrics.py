@@ -1,0 +1,128 @@
+"""Serving metrics: per-request TTFT/TPOT, queue depth, slot occupancy,
+tier assignment histogram.
+
+Timing metrics are derived from the timestamps the lifecycle transitions
+stamped on each request (``ServeRequest.ttft`` / ``.tpot`` / ``.latency``),
+so the collector works identically on the realtime clock and the
+virtual-time simulation clock.  ``validate_summary`` pins the summary-dict
+shape — the CI serve-smoke lane and the benchmark artifact both assert it.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from .request import DONE, REJECTED, ServeRequest
+
+__all__ = ["dist", "ServerMetrics", "SUMMARY_KEYS", "DIST_KEYS",
+           "validate_summary"]
+
+DIST_KEYS = ("mean", "p50", "p95", "max")
+
+
+def dist(values: Iterable[float], ndigits: int = 4) -> Optional[dict]:
+    """mean/p50/p95/max summary of a sample list (None when empty)."""
+    vals = np.asarray([v for v in values if v is not None], np.float64)
+    if vals.size == 0:
+        return None
+    return {"mean": round(float(vals.mean()), ndigits),
+            "p50": round(float(np.percentile(vals, 50)), ndigits),
+            "p95": round(float(np.percentile(vals, 95)), ndigits),
+            "max": round(float(vals.max()), ndigits)}
+
+
+SUMMARY_KEYS = ("requests", "completed", "rejected", "generated_tokens",
+                "engine_steps", "wall_s", "sim_s", "req_per_s", "tok_per_s",
+                "ttft", "tpot", "latency", "queue_depth", "slot_occupancy",
+                "tier_requests", "tier_tokens", "deadlines")
+
+
+class ServerMetrics:
+    """Aggregates time-series samples; the final summary combines them with
+    the per-request timing the lifecycle stamps carry."""
+
+    def __init__(self):
+        self._queue_depth: List[int] = []
+        self._occupancy: Dict[str, List[float]] = {}
+        self.engine_steps = 0
+
+    def sample(self, queue_depth: int, occupancy: Dict[str, float]) -> None:
+        """One observation of server state (taken per scheduling round)."""
+        self._queue_depth.append(int(queue_depth))
+        for tier, occ in occupancy.items():
+            self._occupancy.setdefault(tier, []).append(float(occ))
+
+    def summary(self, requests: List[ServeRequest], wall_s: float,
+                sim_s: Optional[float] = None) -> dict:
+        done = [r for r in requests if r.state == DONE]
+        rejected = [r for r in requests if r.state == REJECTED]
+        gen = sum(len(r.out) for r in done)
+        tier_reqs = Counter(r.tier for r in done if r.tier is not None)
+        tier_toks: Counter = Counter()
+        for r in done:
+            if r.tier is not None:
+                tier_toks[r.tier] += len(r.out)
+        with_deadline = [r for r in done if r.deadline is not None]
+        met = sum(1 for r in with_deadline if r.deadline_met)
+        # throughput is measured on the serving clock: simulated seconds in
+        # virtual-time mode (deterministic; host wall time there is jit
+        # compile + interpret overhead), wall seconds in realtime mode
+        served_s = sim_s if sim_s is not None else wall_s
+        return {
+            "requests": len(requests),
+            "completed": len(done),
+            "rejected": len(rejected),
+            "generated_tokens": gen,
+            "engine_steps": self.engine_steps,
+            "wall_s": round(wall_s, 4),
+            "sim_s": round(sim_s, 6) if sim_s is not None else None,
+            "req_per_s": round(len(done) / max(served_s, 1e-9), 2),
+            "tok_per_s": round(gen / max(served_s, 1e-9), 1),
+            "ttft": dist(r.ttft for r in done),
+            "tpot": dist(r.tpot for r in done),
+            "latency": dist(r.latency for r in done),
+            "queue_depth": dist(self._queue_depth, 2),
+            "slot_occupancy": {t: dist(v, 3)
+                               for t, v in sorted(self._occupancy.items())},
+            "tier_requests": dict(sorted(tier_reqs.items())),
+            "tier_tokens": dict(sorted(tier_toks.items())),
+            "deadlines": {"with_deadline": len(with_deadline), "met": met,
+                          "missed": len(with_deadline) - met},
+        }
+
+
+def validate_summary(stats: dict) -> dict:
+    """Assert the metrics-dict shape (CI serve-smoke lane contract).
+
+    Returns ``stats`` so it composes in expressions; raises ``ValueError``
+    listing everything wrong otherwise.
+    """
+    problems = []
+    for key in SUMMARY_KEYS:
+        if key not in stats:
+            problems.append(f"missing key {key!r}")
+    for key in ("ttft", "tpot", "latency", "queue_depth"):
+        d = stats.get(key)
+        if d is not None and set(d) != set(DIST_KEYS):
+            problems.append(f"{key!r} must have keys {DIST_KEYS}, got "
+                            f"{tuple(d)}")
+    counts = ("requests", "completed", "rejected", "generated_tokens",
+              "engine_steps")
+    for key in counts:
+        v = stats.get(key)
+        if key in stats and not isinstance(v, int):
+            problems.append(f"{key!r} must be an int, got {type(v).__name__}")
+    if not problems and \
+            stats["completed"] + stats["rejected"] > stats["requests"]:
+        problems.append("completed + rejected exceeds requests")
+    tr = stats.get("tier_requests")
+    if isinstance(tr, dict) and isinstance(stats.get("completed"), int):
+        if sum(tr.values()) != stats["completed"]:
+            problems.append("tier_requests histogram does not sum to "
+                            "completed")
+    if problems:
+        raise ValueError("bad serving metrics summary: "
+                         + "; ".join(problems))
+    return stats

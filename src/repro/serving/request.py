@@ -1,0 +1,116 @@
+"""Request lifecycle for the serving subsystem.
+
+A request moves through ``QUEUED -> PREFILL -> DECODE -> DONE`` (or exits
+early to ``REJECTED`` at admission).  Each transition stamps a timestamp on
+the server's clock — wall seconds in realtime mode, simulated seconds in
+virtual-time mode — so TTFT / TPOT / latency are derived properties of the
+request itself, not of any particular collector.
+
+``ServeRequest`` is also the legacy ``repro.launch.serve.Request``: the
+first three fields keep their historical positional order and the ``out`` /
+``done`` fields their historical meaning, so pre-serving callers
+(``Request(rid, prompt, max_tokens)``; read ``.out`` / ``.done``) work
+unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+__all__ = ["ServeRequest", "Request", "QUEUED", "PREFILL", "DECODE",
+           "DONE", "REJECTED", "LIFECYCLE"]
+
+QUEUED = "QUEUED"
+PREFILL = "PREFILL"
+DECODE = "DECODE"
+DONE = "DONE"
+REJECTED = "REJECTED"
+
+LIFECYCLE = (QUEUED, PREFILL, DECODE, DONE)
+
+_TRANSITIONS = {
+    QUEUED: (PREFILL, REJECTED),
+    PREFILL: (DECODE,),
+    DECODE: (DONE,),
+    DONE: (),
+    REJECTED: (),
+}
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One generation request with lifecycle state and timing.
+
+    rid/prompt/max_tokens/out/done are the legacy surface; everything else
+    is the serving subsystem's: arrival/deadline/priority drive admission
+    policies, ``tier`` records the quant tier the router assigned, and the
+    ``*_at`` stamps feed TTFT/TPOT metrics.
+    """
+    rid: int
+    prompt: List[int]
+    max_tokens: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    arrival: float = 0.0
+    deadline: Optional[float] = None
+    priority: int = 0
+    tier: Optional[str] = None
+    state: str = QUEUED
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    error: Optional[str] = None
+
+    def to(self, state: str, now: Optional[float] = None) -> "ServeRequest":
+        """Transition to ``state``, stamping the matching timestamp."""
+        if state not in _TRANSITIONS[self.state]:
+            raise ValueError(f"request {self.rid}: illegal transition "
+                             f"{self.state} -> {state}")
+        self.state = state
+        if state == PREFILL:
+            self.admitted_at = now
+        elif state == DECODE:
+            self.first_token_at = now
+        elif state == DONE:
+            self.finished_at = now
+            self.done = True
+        return self
+
+    # -- derived timings (None until the relevant stamps exist) -------------
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in (DONE, REJECTED)
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token: arrival -> first generated token."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.arrival
+
+    @property
+    def tpot(self) -> Optional[float]:
+        """Time per output token over the decode phase."""
+        if self.finished_at is None or self.first_token_at is None:
+            return None
+        return ((self.finished_at - self.first_token_at)
+                / max(len(self.out) - 1, 1))
+
+    @property
+    def latency(self) -> Optional[float]:
+        """End-to-end: arrival -> done."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.arrival
+
+    @property
+    def deadline_met(self) -> Optional[bool]:
+        """None when the request carries no deadline or is unfinished."""
+        if self.deadline is None or self.finished_at is None:
+            return None
+        return self.finished_at <= self.deadline
+
+
+# Legacy alias: `from repro.launch.serve import Request` keeps working.
+Request = ServeRequest

@@ -1,0 +1,237 @@
+"""AsyncServer: continuous-batching serving across QuantSpec-tiered workers.
+
+One ``TierWorker`` per tier: a ``ServeEngine`` baked with that tier's
+QuantSpec (e.g. a ``planes=2`` fast tier next to a ``planes=4`` /
+``pallas_fused`` quality tier), fed by its own admission ``Scheduler``.
+The server routes each arriving request to a tier through a ``TierRouter``
+policy driven by GemmEngine.cost / core.hwmodel service-time estimates,
+then drives the workers in one of two modes:
+
+    virtual  (default) -- deterministic discrete-event simulation: the
+        clock advances by per-tier estimated step times, arrivals are
+        released at their (virtual) timestamps.  Offline load tests and CI
+        run this mode: same seed -> same schedule -> same metrics.
+    realtime -- one thread per tier worker plus an arrival feeder; step
+        times are measured (EWMA) and fed back into the router's
+        estimates.  Request outputs are identical to virtual mode for a
+        given routing, because each worker admits in FCFS submission order
+        and greedy decode is deterministic.
+
+Per-request outputs are bit-identical to a standalone ``ServeEngine`` run
+under the same QuantSpec: a tier worker *is* a standalone engine, and a
+decode row depends only on its own slot state for the dense families.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Sequence
+
+from .engine import ServeEngine
+from .metrics import ServerMetrics
+from .request import ServeRequest
+from .scheduler import Scheduler
+from .slots import SlotAllocator  # noqa: F401  (re-exported surface)
+from .tiers import Tier, TierRouter, default_tiers, estimate_step_time
+
+__all__ = ["TierWorker", "AsyncServer"]
+
+
+class TierWorker:
+    """One tier's engine + admission queue (thread-safe submission)."""
+
+    def __init__(self, tier: Tier, cfg, max_len: int, seed: int = 0,
+                 admission: str = "fcfs", on_too_long: str = "reject",
+                 audit: bool = False):
+        self.tier = tier
+        self.engine = ServeEngine(cfg, tier.batch, max_len, seed=seed,
+                                  quant=tier.spec, on_too_long=on_too_long,
+                                  audit=audit)
+        self.scheduler = Scheduler(admission, max_len=max_len,
+                                   on_too_long=on_too_long)
+        self.finished: List[ServeRequest] = []
+        self.next_free = 0.0        # virtual-mode: when this worker can step
+        self.step_time = 1e-9       # seconds per engine step (est. or EWMA)
+        self.cv = threading.Condition()
+
+    def submit(self, req: ServeRequest, now: float) -> bool:
+        with self.cv:
+            ok = self.scheduler.submit(req, now)
+            self.cv.notify()
+        return ok
+
+    def has_work(self) -> bool:
+        with self.cv:
+            return self.engine.has_work(self.scheduler)
+
+    def loads(self):
+        """(backlog tokens, slots) for the router's queueing estimate."""
+        with self.cv:
+            return (self.scheduler.queued_tokens()
+                    + self.engine.slots.backlog_tokens(), self.tier.batch)
+
+    def pump(self, now: float, t_end: Optional[float] = None
+             ) -> List[ServeRequest]:
+        """Admit + one engine step.  ``t_end`` is the clock value at which
+        the step's tokens exist (virtual mode passes now + step_time)."""
+        with self.cv:
+            self.engine.admit_from(self.scheduler, now)
+        finished = self.engine.step(now=now if t_end is None else t_end)
+        if finished:
+            with self.cv:
+                self.finished.extend(finished)
+        return finished
+
+
+class AsyncServer:
+    """Routes a request load across QuantSpec-tiered ServeEngine workers."""
+
+    def __init__(self, cfg, tiers: Optional[Sequence[Tier]] = None,
+                 max_len: int = 32, seed: int = 0, admission: str = "fcfs",
+                 router: str = "slo", on_too_long: str = "reject",
+                 design: str = "tpu", step_time_scale: float = 1.0,
+                 audit: bool = False):
+        self.cfg = cfg
+        self.tiers = tuple(tiers if tiers is not None else default_tiers(2))
+        names = [t.name for t in self.tiers]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tier names: {names}")
+        self.workers: Dict[str, TierWorker] = {
+            t.name: TierWorker(t, cfg, max_len, seed=seed,
+                               admission=admission, on_too_long=on_too_long,
+                               audit=audit)
+            for t in self.tiers}
+        per_step = {}
+        for t in self.tiers:
+            est = max(estimate_step_time(cfg, t.batch, t.spec, design)
+                      * step_time_scale, 1e-9)
+            per_step[t.name] = est
+            self.workers[t.name].step_time = est
+        self.router = TierRouter(self.tiers, per_step, router)
+        self.metrics = ServerMetrics()
+
+    # -- routing -------------------------------------------------------------
+
+    def _route_and_submit(self, req: ServeRequest, now: float) -> bool:
+        loads = {n: w.loads() for n, w in self.workers.items()}
+        tier = self.router.route(req, now, loads)
+        return self.workers[tier.name].submit(req, now)
+
+    def _sample(self) -> None:
+        self.metrics.sample(
+            sum(w.scheduler.queue_depth for w in self.workers.values()),
+            {n: w.engine.slots.occupancy for n, w in self.workers.items()})
+
+    # -- drive modes ---------------------------------------------------------
+
+    def run(self, requests: Sequence[ServeRequest], realtime: bool = False,
+            time_scale: float = 1.0) -> dict:
+        """Serve the load to completion; returns the metrics summary.
+
+        Re-runnable: each call starts a fresh clock and metrics collector
+        (worker engines and their jit caches are reused).
+        """
+        reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
+        steps_before = {n: w.engine.steps for n, w in self.workers.items()}
+        for w in self.workers.values():
+            w.next_free = 0.0
+            w.finished.clear()
+        self.metrics = ServerMetrics()
+        t_host = time.perf_counter()
+        sim_s = (self._run_realtime(reqs, time_scale) if realtime
+                 else self._run_virtual(reqs))
+        wall_s = time.perf_counter() - t_host
+        self.metrics.engine_steps = sum(
+            w.engine.steps - steps_before[n]
+            for n, w in self.workers.items())
+        stats = self.metrics.summary(reqs, wall_s, sim_s)
+        stats["mode"] = "realtime" if realtime else "virtual"
+        stats["router_policy"] = self.router.policy
+        stats["tiers"] = {t.name: (str(t.spec) if t.spec else None)
+                          for t in self.tiers}
+        stats["per_step_s"] = {n: round(v, 9)
+                               for n, v in self.router.per_step.items()}
+        return stats
+
+    def _run_virtual(self, reqs: List[ServeRequest]) -> float:
+        """Discrete-event simulation on the estimated step times."""
+        now, i, eps = 0.0, 0, 1e-12
+        workers = list(self.workers.values())
+        while True:
+            while i < len(reqs) and reqs[i].arrival <= now + eps:
+                self._route_and_submit(reqs[i], now)
+                i += 1
+            busy = [w for w in workers if w.has_work()]
+            if not busy:
+                if i >= len(reqs):
+                    return now
+                now = reqs[i].arrival     # idle: jump to the next arrival
+                continue
+            ready = [w for w in busy if w.next_free <= now + eps]
+            if not ready:
+                times = [w.next_free for w in busy]
+                if i < len(reqs):
+                    times.append(reqs[i].arrival)
+                now = min(times)
+                continue
+            for w in ready:               # deterministic: tier order
+                t_end = now + w.step_time
+                w.pump(now, t_end=t_end)
+                w.next_free = t_end
+            self._sample()
+
+    def _run_realtime(self, reqs: List[ServeRequest],
+                      time_scale: float) -> float:
+        """Threaded mode: one thread per tier worker, arrivals replayed on
+        the wall clock stretched by ``time_scale``.  The clock handed to
+        workers and lifecycle stamps is mapped back into the *load's* time
+        domain (wall / time_scale), so TTFT/latency/deadline comparisons
+        stay consistent with the unscaled arrival and deadline fields."""
+        if time_scale <= 0:
+            raise ValueError(f"time_scale must be positive, got "
+                             f"{time_scale}")
+        t0 = time.perf_counter()
+
+        def clock() -> float:
+            return (time.perf_counter() - t0) / time_scale
+
+        stop = threading.Event()
+        threads = [threading.Thread(
+            target=self._worker_main, args=(w, clock, stop), daemon=True)
+            for w in self.workers.values()]
+        for t in threads:
+            t.start()
+        try:
+            for req in reqs:
+                wait = (req.arrival - clock()) * time_scale
+                if wait > 0:
+                    time.sleep(wait)
+                self._route_and_submit(req, clock())
+            while any(w.has_work() for w in self.workers.values()):
+                self._sample()
+                time.sleep(0.01)
+        finally:
+            stop.set()
+            for w in self.workers.values():
+                with w.cv:
+                    w.cv.notify_all()
+            for t in threads:
+                t.join()
+        return clock()
+
+    def _worker_main(self, worker: TierWorker, clock, stop) -> None:
+        measured = False
+        while True:
+            with worker.cv:
+                while not worker.engine.has_work(worker.scheduler):
+                    if stop.is_set():
+                        return
+                    worker.cv.wait(0.05)
+            t_step = clock()
+            worker.pump(t_step)
+            dt = max(clock() - t_step, 1e-9)
+            # EWMA of measured step time feeds the router's SLO estimates
+            worker.step_time = dt if not measured else \
+                0.8 * worker.step_time + 0.2 * dt
+            measured = True
+            self.router.per_step[worker.tier.name] = worker.step_time

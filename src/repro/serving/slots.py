@@ -1,0 +1,137 @@
+"""SlotAllocator: decode-slot bookkeeping decoupled from the engine.
+
+The engine's jit'd serve step is a fixed-batch program; the allocator owns
+the per-slot host state (which request occupies which row, its KV position,
+its teacher-forcing cursor, the token fed next step) and the slot lifecycle
+(bind on admission, release on completion).  Positions always restart at 0
+on bind, so a reused slot never continues a previous request's KV
+positions — the attention mask over ``pos`` guarantees cache rows beyond
+the new position are never read.  (Recurrent state families need an
+explicit state reset on rebind; the engine handles that, keyed off the
+``rebind`` flag this allocator returns.)
+
+With ``audit=True`` the allocator records a (generation, slot, rid, pos)
+event per step, which the property tests replay to check the continuous
+batching invariants: every request finishes exactly once, and within one
+binding the position sequence starts at 0 and is strictly increasing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from .request import DECODE, DONE, PREFILL, ServeRequest
+
+__all__ = ["SlotAllocator", "SlotEvent"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotEvent:
+    """One audit record: request ``rid`` occupied ``slot`` (binding number
+    ``generation`` of that slot) at KV position ``pos`` this step."""
+    generation: int
+    slot: int
+    rid: int
+    pos: int
+
+
+class SlotAllocator:
+    def __init__(self, n_slots: int, max_len: int, audit: bool = False):
+        if n_slots <= 0:
+            raise ValueError(f"n_slots must be positive, got {n_slots}")
+        if max_len < 2:
+            raise ValueError(f"max_len must be >= 2, got {max_len}")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self._reqs: List[Optional[ServeRequest]] = [None] * n_slots
+        self.pos = np.zeros(n_slots, np.int32)
+        self.cursor = np.zeros(n_slots, np.int32)   # teacher-forcing cursor
+        self.cur = np.zeros((n_slots, 1), np.int32)  # token fed this step
+        self.generation = np.zeros(n_slots, np.int64)  # bindings per slot
+        self._ever_bound = np.zeros(n_slots, bool)
+        self.trace: List[SlotEvent] = [] if audit else None
+
+    # -- queries -------------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self._reqs) if r is None]
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self._reqs)
+
+    @property
+    def occupancy(self) -> float:
+        return self.active / self.n_slots
+
+    def request_at(self, slot: int) -> Optional[ServeRequest]:
+        return self._reqs[slot]
+
+    def backlog_tokens(self) -> int:
+        """Tokens still owed by bound requests (prompt remainder + decode)."""
+        total = 0
+        for i, r in enumerate(self._reqs):
+            if r is None:
+                continue
+            total += max(len(r.prompt) - 1 - int(self.cursor[i]), 0)
+            total += max(r.max_tokens - len(r.out), 0)
+        return total
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def bind(self, slot: int, req: ServeRequest,
+             now: Optional[float] = None) -> bool:
+        """Bind ``req`` to ``slot``; returns True when the slot is being
+        *reused* (a previous request decoded here — recurrent-state families
+        must reset that row's state)."""
+        if self._reqs[slot] is not None:
+            raise ValueError(f"slot {slot} is occupied by request "
+                             f"{self._reqs[slot].rid}")
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) + 1 > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt length {len(req.prompt)} "
+                f"does not fit max_len {self.max_len} (needs room for at "
+                f"least one generated token)")
+        req.to(PREFILL, now)
+        rebind = bool(self._ever_bound[slot])
+        self._reqs[slot] = req
+        self.pos[slot] = 0
+        self.cursor[slot] = 0
+        self.cur[slot, 0] = req.prompt[0]
+        self.generation[slot] += 1
+        self._ever_bound[slot] = True
+        return rebind
+
+    def advance(self, next_tokens: np.ndarray,
+                now: Optional[float] = None) -> List[ServeRequest]:
+        """Consume one engine step's sampled tokens; returns requests that
+        finished (and released their slot) this step."""
+        finished: List[ServeRequest] = []
+        for i, req in enumerate(self._reqs):
+            if req is None:
+                continue
+            if self.trace is not None:
+                self.trace.append(SlotEvent(int(self.generation[i]), i,
+                                            req.rid, int(self.pos[i])))
+            self.pos[i] += 1
+            c = int(self.cursor[i]) + 1
+            if c < len(req.prompt):
+                # still teacher-forcing the prompt
+                self.cursor[i] = c
+                self.cur[i, 0] = req.prompt[c]
+                continue
+            tok = int(next_tokens[i, 0])
+            if req.state == PREFILL:
+                req.to(DECODE, now)
+            req.out.append(tok)
+            self.cur[i, 0] = tok
+            if len(req.out) >= req.max_tokens or \
+                    self.pos[i] >= self.max_len - 1:
+                req.to(DONE, now)
+                finished.append(req)
+                self._reqs[i] = None
+        return finished

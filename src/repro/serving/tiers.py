@@ -1,0 +1,171 @@
+"""Quant tiers and cost-driven tier routing.
+
+A ``Tier`` names one QuantSpec an engine worker is baked with.  The paper's
+knob — digit-plane budget per GEMM — becomes a serving-level policy here:
+fewer planes means fewer MXU passes per matmul (``GemmEngine.cost``), so a
+low-plane tier is a *fast* tier and a full-plane tier a *quality* tier.
+
+``estimate_step_time`` turns the registry's per-GEMM cost model into a
+per-decode-step service-time estimate (seconds) on a ``core.hwmodel``
+array design: integer MACs of one decode step across the model's dense
+GEMMs, divided by the design's peak throughput, plus the HBM round-trip
+the engine's epilogue placement implies.  ``TierRouter`` uses those
+estimates to assign each request a tier:
+
+    quality     -- always the highest-quality tier
+    fastest     -- always the cheapest tier
+    round_robin -- cycle tiers (load spreading)
+    slo         -- deadline-aware: the highest-quality tier whose estimated
+                   completion (queue backlog + own service time) meets the
+                   request's deadline; deadline-less requests get quality,
+                   infeasible deadlines fall back to the fastest tier
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import hwmodel as hw
+from repro.engine import QuantSpec, get_engine
+
+from .request import ServeRequest
+
+__all__ = ["Tier", "default_tiers", "decode_step_gemms", "step_cost",
+           "estimate_step_time", "TierRouter", "ROUTER_POLICIES"]
+
+# nominal accumulator-traffic bandwidth for the epilogue HBM round-trip
+# (bytes/s); only the *relative* cost across engines matters for routing
+_NOMINAL_HBM_BPS = 300e9
+
+
+@dataclasses.dataclass(frozen=True)
+class Tier:
+    """One serving tier: a name, the QuantSpec its worker is baked with
+    (None = unquantized bf16), and the worker's decode-slot count."""
+    name: str
+    spec: Optional[QuantSpec]
+    batch: int = 4
+
+    def quality_rank(self) -> Tuple[int, int, int]:
+        """Orderable quality: unquantized > more planes > more bits."""
+        if self.spec is None:
+            return (1, 0, 0)
+        return (0, self.spec.planes, self.spec.bits)
+
+
+def default_tiers(n: int = 2, batch: int = 4,
+                  impl: str = "pallas_fused") -> Tuple[Tier, ...]:
+    """The default tier ladder: fast (2 planes) -> balanced (3) ->
+    quality (4 planes).  ``n`` selects the ladder's endpoints first.
+
+    act_quant is per_token: a per-tensor act scale is a max over the whole
+    batch, which would make a request's tokens depend on its batch-mates —
+    per-token scales keep continuous-batching outputs deterministic per
+    request (and bit-identical to a standalone run under the same spec).
+    """
+    def spec(planes):
+        return QuantSpec(planes=planes, impl=impl, act_quant="per_token")
+    fast = Tier("fast", spec(2), batch)
+    balanced = Tier("balanced", spec(3), batch)
+    quality = Tier("quality", spec(4), batch)
+    ladder = {1: (quality,), 2: (fast, quality),
+              3: (fast, balanced, quality)}
+    try:
+        return ladder[n]
+    except KeyError:
+        raise ValueError(f"--tiers supports 1..3 default tiers, got {n}") \
+            from None
+
+
+def decode_step_gemms(cfg, batch: int) -> List[Tuple[int, int, int]]:
+    """Coarse (m, k, n) list of the dense GEMMs one decode step runs:
+    4 mixer matmuls + 2 FFN matmuls per block, plus the LM head."""
+    d, f = cfg.d_model, cfg.d_ff
+    per_block = [(batch, d, d)] * 4 + [(batch, d, f), (batch, f, d)]
+    n_blocks = cfg.n_layers + getattr(cfg, "n_encoder_layers", 0)
+    return per_block * n_blocks + [(batch, d, cfg.padded_vocab)]
+
+
+def step_cost(cfg, batch: int, spec: Optional[QuantSpec]) -> Dict[str, int]:
+    """Aggregate GemmEngine.cost over one decode step's GEMMs."""
+    total = {"int_macs": 0, "mxu_passes": 0, "acc_hbm_bytes": 0}
+    engine = get_engine(spec.impl) if spec is not None else None
+    for m, k, n in decode_step_gemms(cfg, batch):
+        if engine is None:       # unquantized: one pass, fused epilogue
+            c = {"int_macs": m * k * n, "mxu_passes": 1,
+                 "acc_hbm_bytes": 0}
+        else:
+            c = engine.cost(m, k, n, spec)
+        for key in total:
+            total[key] += c[key]
+    return total
+
+
+def estimate_step_time(cfg, batch: int, spec: Optional[QuantSpec],
+                       design: str = "tpu") -> float:
+    """Estimated seconds per decode step on a core.hwmodel array design."""
+    d = hw.TABLE7[design]
+    cost = step_cost(cfg, batch, spec)
+    ops_per_s = hw.peak_tops(d) * 1e12
+    return (2.0 * cost["int_macs"] / ops_per_s
+            + cost["acc_hbm_bytes"] / _NOMINAL_HBM_BPS)
+
+
+ROUTER_POLICIES = ("quality", "fastest", "round_robin", "slo")
+
+
+class TierRouter:
+    """Assigns each request a tier from per-tier service-time estimates.
+
+    ``per_step`` maps tier name -> estimated seconds per engine step (one
+    token per active slot); the async server builds it from
+    ``estimate_step_time`` (scaled into its clock domain) and may refresh
+    it with measured step times in realtime mode.
+    """
+
+    def __init__(self, tiers, per_step: Dict[str, float],
+                 policy: str = "slo"):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"unknown router policy {policy!r}; "
+                             f"one of {ROUTER_POLICIES}")
+        self.tiers = tuple(tiers)
+        if not self.tiers:
+            raise ValueError("router needs at least one tier")
+        self.per_step = dict(per_step)
+        self.policy = policy
+        self._rr = 0
+        self._fastest = min(self.tiers,
+                            key=lambda t: (self.per_step[t.name], t.name))
+        self._quality = max(self.tiers,
+                            key=lambda t: (t.quality_rank(), t.name))
+
+    def route(self, req: ServeRequest, now: float = 0.0,
+              loads: Optional[Dict[str, Tuple[int, int]]] = None) -> Tier:
+        """Pick a tier; ``loads`` maps tier name -> (backlog_tokens,
+        n_slots) for the queueing term of the SLO estimate."""
+        if self.policy == "quality":
+            tier = self._quality
+        elif self.policy == "fastest":
+            tier = self._fastest
+        elif self.policy == "round_robin":
+            tier = self.tiers[self._rr % len(self.tiers)]
+            self._rr += 1
+        else:                            # slo
+            tier = self._route_slo(req, now, loads or {})
+        req.tier = tier.name
+        return tier
+
+    def _route_slo(self, req, now, loads) -> Tier:
+        if req.deadline is None:
+            return self._quality
+        work = len(req.prompt) + req.max_tokens
+        best = None
+        for tier in sorted(self.tiers, key=lambda t: t.quality_rank(),
+                           reverse=True):
+            per = self.per_step[tier.name]
+            backlog, slots = loads.get(tier.name, (0, tier.batch))
+            eta = now + (backlog / max(slots, 1) + work) * per
+            if eta <= req.deadline:
+                best = tier
+                break
+        return best or self._fastest

@@ -145,17 +145,29 @@ def test_jnp_engines_are_ste_differentiable(rng):
             np.abs(g).sum() > 0
 
 
-def test_kernel_engines_reject_per_token_act_quant(rng):
-    x = jnp.asarray(rng.normal(0, 1, size=(2, 64)).astype(np.float32))
+def test_kernel_engines_per_token_act_quant(rng):
+    """per-token act scales reach the fused kernel epilogue (as a
+    per-column vector: tokens sit on the kernel N axis) and keep decode
+    rows independent of their batch-mates."""
+    x = jnp.asarray(rng.normal(0, 1, size=(4, 64)).astype(np.float32))
     w = jnp.asarray(rng.normal(0, 0.05, size=(64, 32)).astype(np.float32))
     spec = QuantSpec(planes=3, impl="pallas_fused", act_quant="per_token")
-    with pytest.raises(ValueError, match="per_tensor"):
-        get_engine("pallas_fused").apply(w, x, spec)
-    # the spec-level ops entry points must be equally loud, not silently
-    # fall back to per-tensor
-    with pytest.raises(ValueError, match="per_tensor"):
-        ops.quantized_dense(x, w, spec, interpret=True)
-    # the jnp engines do support it (finer act grid, still close)
+    oracle = np.asarray(get_engine("planes").apply(
+        w, x, spec.replace(impl="planes"), out_dtype=jnp.float32))
+    for impl in ("pallas", "pallas_fused"):
+        got = np.asarray(get_engine(impl).apply(
+            w, x, spec.replace(impl=impl), interpret=True,
+            out_dtype=jnp.float32))
+        np.testing.assert_allclose(got, oracle, rtol=1e-6, atol=1e-6)
+    # batch-independence: scaling row 1 must not change row 0's output
+    # bitwise (per-tensor couples rows through the shared max-abs scale)
+    y = np.asarray(get_engine("pallas_fused").apply(
+        w, x, spec, interpret=True, out_dtype=jnp.float32))
+    y2 = np.asarray(get_engine("pallas_fused").apply(
+        w, x.at[1].multiply(100.0), spec, interpret=True,
+        out_dtype=jnp.float32))
+    assert (y[0] == y2[0]).all()
+    # the jnp engines agree on the finer act grid too (still close to fp)
     got = np.asarray(get_engine("ref").apply(
         w, x, spec.replace(impl="ref", planes=4), out_dtype=jnp.float32))
     want = np.asarray(x.astype(jnp.float32) @ w.astype(jnp.float32))

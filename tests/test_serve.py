@@ -48,6 +48,42 @@ def test_engine_tokens_in_vocab():
         assert all(0 <= t < cfg.padded_vocab for t in r.out)
 
 
+def test_prompt_longer_than_max_len_fails_fast():
+    """Regression: a prompt that cannot fit max_len used to overrun the KV
+    cache (dynamic_update_slice clamping corrupted the last cache row) and
+    silently truncate generation to one token.  It must fail fast at
+    admission now — or truncate with a warning when asked to."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    eng = ServeEngine(cfg, batch=2, max_len=8)
+    with pytest.raises(ValueError, match="does not fit max_len"):
+        eng.run(_reqs(cfg, 1, prompt_len=12, max_tokens=4))
+    # nothing was admitted: the engine stays serviceable
+    stats = eng.run(_reqs(cfg, 2, prompt_len=3, max_tokens=4))
+    assert stats["requests"] == 2
+    # opt-in truncation clips the prompt and completes the request
+    eng2 = ServeEngine(cfg, batch=2, max_len=8, on_too_long="truncate")
+    (req,) = _reqs(cfg, 1, prompt_len=12, max_tokens=4)
+    with pytest.warns(UserWarning, match="truncating prompt"):
+        stats = eng2.run([req])
+    assert stats["requests"] == 1 and len(req.prompt) == 7 and req.done
+
+
+def test_rwkv_slot_reuse_resets_recurrent_state():
+    """Regression: recurrent-state families have no position mask, so a
+    reused slot used to leak the previous occupant's state into the next
+    request.  A request decoded in a reused slot must now produce the same
+    tokens as on a fresh engine."""
+    cfg = get_config("rwkv6-3b", smoke=True)
+    # batch=1 forces slot reuse: the second request rebinds slot 0
+    eng = ServeEngine(cfg, batch=1, max_len=16, seed=3)
+    reqs = _reqs(cfg, 2, prompt_len=4, max_tokens=5, seed=11)
+    eng.run(reqs)
+    fresh = ServeEngine(cfg, batch=1, max_len=16, seed=3)
+    (solo,) = _reqs(cfg, 2, prompt_len=4, max_tokens=5, seed=11)[1:]
+    fresh.run([solo])
+    assert reqs[1].out == solo.out
+
+
 def test_concurrent_engines_with_different_impls_do_not_interfere():
     """Regression for the old global-impl save/restore hack: each engine's
     jit'd step closes over its own QuantSpec, so two engines with

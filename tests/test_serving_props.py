@@ -1,0 +1,188 @@
+"""Property tests for the continuous-batching invariants (tests/_propcheck
+fallback when hypothesis is absent): under random arrival/length mixes,
+every request finishes exactly once, slot reuse never mixes two requests'
+KV positions, and the new scheduler-driven engine under FCFS reproduces
+the legacy synchronous serve loop bit-for-bit."""
+from collections import deque
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst
+except ImportError:                     # offline: deterministic fallback
+    from _propcheck import given, settings, strategies as hst
+
+from repro.configs.registry import get_config
+from repro.serving import (AsyncServer, ServeEngine, ServeRequest,
+                           Scheduler, Tier)
+
+BATCH, MAX_LEN = 2, 16
+
+
+class _LegacyLoop:
+    """The pre-serving synchronous serve loop (PR 2's ServeEngine.run),
+    ported verbatim as the FCFS oracle: deque + in-place slot arrays."""
+
+    def __init__(self, cfg, batch, max_len, seed=0):
+        import jax
+        from repro.models.api import get_api
+        from repro.parallel.sharding import unbox
+        from repro.train.steps import make_serve_step
+        api = get_api(cfg)
+        self.params = unbox(api.init(jax.random.PRNGKey(seed), cfg))
+        self.state = unbox(api.init_decode(cfg, batch, max_len))
+        self.step = jax.jit(make_serve_step(cfg))
+        self.batch, self.max_len = batch, max_len
+
+    def run(self, prompts, max_tokens):
+        import jax.numpy as jnp
+        queue = deque({"rid": i, "prompt": p, "out": []}
+                      for i, p in enumerate(prompts))
+        slots = [None] * self.batch
+        pos = np.zeros(self.batch, np.int32)
+        cursor = np.zeros(self.batch, np.int32)
+        cur = np.zeros((self.batch, 1), np.int32)
+        done = []
+        while queue or any(s is not None for s in slots):
+            for i in range(self.batch):
+                if slots[i] is None and queue:
+                    req = queue.popleft()
+                    slots[i] = req
+                    pos[i] = 0
+                    cursor[i] = 0
+                    cur[i, 0] = req["prompt"][0]
+            nxt, self.state = self.step(self.params, jnp.asarray(cur),
+                                        jnp.asarray(pos), self.state)
+            nxt = np.asarray(nxt)
+            for i, req in enumerate(slots):
+                if req is None:
+                    continue
+                pos[i] += 1
+                c = int(cursor[i]) + 1
+                if c < len(req["prompt"]):
+                    cursor[i] = c
+                    cur[i, 0] = req["prompt"][c]
+                    continue
+                tok = int(nxt[i, 0])
+                req["out"].append(tok)
+                cur[i, 0] = tok
+                if len(req["out"]) >= max_tokens or \
+                        pos[i] >= self.max_len - 1:
+                    done.append(req)
+                    slots[i] = None
+        return done
+
+
+@pytest.fixture(scope="module")
+def harness():
+    """One shared cfg + legacy oracle + new engine + single-tier async
+    server (same init seed everywhere, so all three hold identical params)."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    return {
+        "cfg": cfg,
+        "legacy": _LegacyLoop(cfg, BATCH, MAX_LEN, seed=0),
+        "engine": ServeEngine(cfg, BATCH, MAX_LEN, seed=0, audit=True),
+        "server": AsyncServer(cfg, tiers=(Tier("only", None, BATCH),),
+                              max_len=MAX_LEN, seed=0, admission="fcfs",
+                              router="fastest", audit=True),
+    }
+
+
+def _prompts(lens, vocab):
+    return [[(L * 31 + j * 7 + 1) % vocab for j in range(L)] for L in lens]
+
+
+def _check_slot_invariants(alloc, expected_rids):
+    """Replay the audit trace: within one binding the KV position sequence
+    starts at 0 and increments by 1 (slot reuse never continues a previous
+    request's positions), one binding serves exactly one rid, and every
+    request ran in exactly one binding."""
+    bindings = {}
+    for ev in alloc.trace:
+        bindings.setdefault((ev.slot, ev.generation), []).append(ev)
+    rid_bindings = {}
+    for key, events in bindings.items():
+        rids = {ev.rid for ev in events}
+        assert len(rids) == 1, f"binding {key} mixed requests {rids}"
+        assert [ev.pos for ev in events] == list(range(len(events))), \
+            f"binding {key} KV positions not contiguous from 0"
+        rid_bindings.setdefault(rids.pop(), []).append(key)
+    assert sorted(rid_bindings) == sorted(expected_rids)
+    for rid, keys in rid_bindings.items():
+        assert len(keys) == 1, f"request {rid} ran in {len(keys)} bindings"
+
+
+@settings(max_examples=4, deadline=None)
+@given(lens=hst.lists(hst.integers(min_value=1, max_value=8), min_size=1,
+                      max_size=5),
+       max_tokens=hst.integers(min_value=1, max_value=4))
+def test_fcfs_matches_legacy_loop_bit_for_bit(harness, lens, max_tokens):
+    prompts = _prompts(lens, harness["cfg"].vocab_size)
+    want = {r["rid"]: r["out"] for r in
+            harness["legacy"].run([list(p) for p in prompts], max_tokens)}
+    engine = harness["engine"]
+    engine.slots.trace.clear()
+    reqs = [ServeRequest(i, list(p), max_tokens)
+            for i, p in enumerate(prompts)]
+    stats = engine.run(reqs, policy="fcfs")
+    # every request finishes exactly once, bit-for-bit equal to the legacy
+    # synchronous loop
+    assert stats["requests"] == len(reqs)
+    assert all(r.done for r in reqs)
+    assert {r.rid: r.out for r in reqs} == want
+    _check_slot_invariants(engine.slots, [r.rid for r in reqs])
+
+
+@settings(max_examples=4, deadline=None)
+@given(lens=hst.lists(hst.integers(min_value=1, max_value=8), min_size=1,
+                      max_size=5),
+       max_tokens=hst.integers(min_value=1, max_value=4),
+       spread=hst.floats(min_value=0.0, max_value=0.05))
+def test_async_arrival_mixes_finish_once_and_match_sync(harness, lens,
+                                                        max_tokens, spread):
+    """Random arrival spacing: the async server (single unquantized tier,
+    FCFS) completes every request exactly once with tokens equal to the
+    synchronous engine's, regardless of how arrivals interleave with
+    decoding."""
+    prompts = _prompts(lens, harness["cfg"].vocab_size)
+    reqs = [ServeRequest(i, list(p), max_tokens, arrival=i * spread)
+            for i, p in enumerate(prompts)]
+    server = harness["server"]
+    worker = server.workers["only"]
+    worker.engine.slots.trace.clear()
+    stats = server.run(reqs)
+    assert stats["completed"] == len(reqs) and stats["rejected"] == 0
+    assert all(r.done for r in reqs)
+    _check_slot_invariants(worker.engine.slots, [r.rid for r in reqs])
+    sync = [ServeRequest(i + 1000, list(p), max_tokens)
+            for i, p in enumerate(prompts)]
+    harness["engine"].run(sync)        # same params: seed 0 everywhere
+    assert {r.rid: r.out for r in reqs} == \
+        {r.rid - 1000: r.out for r in sync}
+
+
+@settings(max_examples=30, deadline=None)
+@given(hst.lists(hst.integers(min_value=-5, max_value=5), min_size=1,
+                 max_size=8))
+def test_priority_and_deadline_policies_order_correctly(vals):
+    pri = Scheduler("priority")
+    for i, v in enumerate(vals):
+        pri.submit(ServeRequest(i, [1], 1, priority=v))
+    popped = [pri.pop() for _ in vals]
+    assert [r.priority for r in popped] == \
+        sorted((r.priority for r in popped), reverse=True)
+    # FCFS among equal priorities: rid order within each priority class
+    for p in set(r.priority for r in popped):
+        rids = [r.rid for r in popped if r.priority == p]
+        assert rids == sorted(rids)
+    edf = Scheduler("deadline")
+    for i, v in enumerate(vals):
+        edf.submit(ServeRequest(i, [1], 1,
+                                deadline=None if v == 0 else float(v)))
+    deadlines = [edf.pop().deadline for _ in vals]
+    finite = [d for d in deadlines if d is not None]
+    assert finite == sorted(finite)
+    # deadline-less requests drain last
+    tail = deadlines[len(finite):]
+    assert all(d is None for d in tail)
