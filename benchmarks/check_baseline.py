@@ -1,0 +1,128 @@
+"""Diff a fresh benchmark run against the checked-in versioned baseline.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run --json --out bench.json
+    PYTHONPATH=src python benchmarks/check_baseline.py bench.json
+
+Compares every lane present in both the run and ``BENCH_<v>.json``
+(benchmarks.run.BASELINE_PREFIXES — tables/figures/kernel counters; the
+e2e wall-time lanes are never pinned): booleans and strings must match
+exactly, numbers must agree within ``--rtol`` (default 10%, loose enough
+for float jitter across hosts, tight enough to catch a dropped
+counter or broken exactness flag).  The kernel lanes are *required*: a
+run that silently stops producing them fails the check.  Exit 0 = clean,
+1 = drift (each divergence is printed), 2 = usage/baseline problems.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+try:
+    from benchmarks.run import (BASELINE_VERSION, BENCHES, baseline_path,
+                                is_baseline_lane)
+except ModuleNotFoundError:     # invoked as a script: repo root not on path
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.run import (BASELINE_VERSION, BENCHES, baseline_path,
+                                is_baseline_lane)
+
+REQUIRED_LANE_PREFIX = "kernel."
+
+
+def _walk(path, got, want, rtol, problems):
+    if isinstance(want, dict):
+        if not isinstance(got, dict):
+            problems.append(f"{path}: expected dict, got {type(got).__name__}")
+            return
+        for key, w in want.items():
+            if key not in got:
+                problems.append(f"{path}.{key}: missing from run")
+                continue
+            _walk(f"{path}.{key}", got[key], w, rtol, problems)
+        return
+    if isinstance(want, list):
+        if not isinstance(got, list) or len(got) != len(want):
+            problems.append(f"{path}: list shape changed")
+            return
+        for i, (g, w) in enumerate(zip(got, want)):
+            _walk(f"{path}[{i}]", g, w, rtol, problems)
+        return
+    if isinstance(want, bool) or isinstance(want, str) or want is None:
+        if got != want:
+            problems.append(f"{path}: {got!r} != baseline {want!r}")
+        return
+    if isinstance(want, (int, float)):
+        if not isinstance(got, (int, float)) or isinstance(got, bool):
+            problems.append(f"{path}: {got!r} is not a number")
+            return
+        tol = rtol * max(abs(want), 1e-12)
+        if abs(got - want) > tol:
+            problems.append(f"{path}: {got} deviates from baseline {want} "
+                            f"by more than {rtol:.0%}")
+        return
+    problems.append(f"{path}: unhandled baseline type {type(want).__name__}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("run_json", help="JSON array from benchmarks.run --json")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline path (default: repo-root "
+                         f"BENCH_{BASELINE_VERSION}.json)")
+    ap.add_argument("--rtol", type=float, default=0.10)
+    args = ap.parse_args(argv)
+
+    path = args.baseline or baseline_path()
+    try:
+        with open(path) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"ERROR: cannot read baseline {path!r}: {e}")
+        return 2
+    if baseline.get("version") != BASELINE_VERSION:
+        print(f"ERROR: baseline {path!r} is version "
+              f"{baseline.get('version')!r}, expected {BASELINE_VERSION}")
+        return 2
+    try:
+        with open(args.run_json) as f:
+            records = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"ERROR: cannot read run output {args.run_json!r}: {e}")
+        return 2
+    run = {r["name"]: r["derived"] for r in records}
+
+    lanes = baseline.get("lanes", {})
+    problems = []
+    # the baseline itself must pin every deterministic registered lane —
+    # a baseline regenerated from a filtered run would otherwise silently
+    # un-gate the dropped lanes
+    for name, _fn in BENCHES:
+        if is_baseline_lane(name) and name not in lanes:
+            problems.append(f"{name}: registered baseline lane missing "
+                            f"from {path} (regenerate with "
+                            f"--write-baseline)")
+    required = [n for n in lanes if n.startswith(REQUIRED_LANE_PREFIX)]
+    for name in required:
+        if name not in run:
+            problems.append(f"{name}: required kernel lane missing from run")
+    compared = 0
+    for name, want in sorted(lanes.items()):
+        if name not in run or not is_baseline_lane(name):
+            continue
+        _walk(name, run[name], want, args.rtol, problems)
+        compared += 1
+    if not compared:
+        problems.append("no baseline lanes present in the run at all")
+    for p in problems:
+        print(f"DRIFT: {p}")
+    if not problems:
+        print(f"OK: {compared} lanes match {path} within "
+              f"rtol={args.rtol:.0%}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 
@@ -275,6 +276,74 @@ def serve_throughput():
     return out
 
 
+def kernel_bw_gemm_sparse():
+    """Compacted sparse block dispatch vs the dense predicated kernels on
+    a Table-III-like density sweep: plane budgets 1..4 of LLM-like
+    (student-t) weights give plane-block densities from ~0.25 to 1.0.
+    For each point the sparse fused kernel must be *bit-identical* to the
+    dense fused kernel, while the schedule-aware cost model's grid-step /
+    DMA-byte counters drop proportionally to density."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import quant
+    from repro.engine import QuantSpec, get_engine
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 256, 128
+    b = rng.integers(-128, 128, size=(k, n)).astype(np.int8)
+    scale = rng.uniform(0.5, 2.0, size=(m,)).astype(np.float32)
+    bias = rng.normal(0, 0.1, size=(m,)).astype(np.float32)
+    out = {"sweep": {}}
+    dense_eng = get_engine("pallas_fused")
+    sparse_eng = get_engine("pallas_sparse")
+    for planes in (1, 2, 3, 4):
+        w = (rng.standard_t(4, size=(m, k)) * 0.02).astype(np.float32)
+        qw, _ = quant.quantize_to_planes(jnp.asarray(w), planes=planes)
+        a = np.asarray(qw).astype(np.int8)
+        planned = ops.plan_operand(a, block_m=128, block_k=128)
+        dense = np.asarray(ops.bw_gemm_fused(
+            planned, jnp.asarray(b), scale, bias, activation="silu",
+            interpret=True))
+        sparse = np.asarray(ops.bw_gemm_sparse_fused(
+            planned, jnp.asarray(b), scale, bias, activation="silu",
+            interpret=True))
+        density = planned.density()
+        spec = QuantSpec(planes=planes, block_m=128, block_k=128)
+        cd = dense_eng.cost(m, k, n, spec, density=density)
+        cs = sparse_eng.cost(m, k, n, spec, density=density)
+        out["sweep"][f"planes{planes}"] = {
+            "bit_identical": bool((dense == sparse).all()),
+            "plane_block_density": round(density, 4),
+            "schedule_steps": int(planned.schedule.shape[0]),
+            "sparse_grid_steps": cs["grid_steps"],
+            "dense_grid_steps": cd["grid_steps"],
+            "sparse_dma_bytes": cs["dma_bytes"],
+            "dense_dma_bytes": cd["dma_bytes"],
+            "dma_ratio": round(cs["dma_bytes"] / cd["dma_bytes"], 4),
+        }
+    # adversarial: only the *highest* plane occupied (values +-64 = +-4^3
+    # have a single EN-T digit on plane 3) and only in one block corner --
+    # the schedule must gather exactly that one plane-block and stay exact
+    adv = np.zeros((m, k), np.int8)
+    adv[:128, :128] = rng.choice(np.int8([64, -64]), size=(128, 128))
+    planned = ops.plan_operand(adv, block_m=128, block_k=128)
+    want = (adv.astype(np.int64) @ b.astype(np.int64)).astype(np.int32)
+    got = np.asarray(ops.bw_gemm_sparse(planned, jnp.asarray(b),
+                                        interpret=True))
+    st = ops.schedule_stats(planned.schedule, planned.mask)
+    out["adversarial_high_plane"] = {
+        "exact": bool((got == want).all()),
+        "nnz_blocks": st["nnz_blocks"],
+        "density": round(st["density"], 4),
+    }
+    # the counters must drop monotonically with density
+    sweep = [out["sweep"][f"planes{p}"] for p in (1, 2, 3, 4)]
+    out["dma_drops_with_density"] = all(
+        a["sparse_dma_bytes"] <= b_["sparse_dma_bytes"]
+        for a, b_ in zip(sweep, sweep[1:]))
+    return out
+
+
 def kernel_quant_planes():
     import numpy as np
     import jax.numpy as jnp
@@ -361,6 +430,7 @@ BENCHES = [
     ("fig14.equal_area_throughput", fig14_equal_area),
     ("kernel.bw_gemm_interpret", kernel_bw_gemm),
     ("kernel.bw_gemm_fused", kernel_bw_gemm_fused),
+    ("kernel.bw_gemm_sparse", kernel_bw_gemm_sparse),
     ("kernel.plane_bounded_quant", kernel_quant_planes),
     ("e2e.train_step_smoke", train_step_smoke),
     ("e2e.quantized_forward_kernel", model_quantized_forward_kernel),
@@ -368,6 +438,46 @@ BENCHES = [
     ("beyond.qat_planes_ablation", qat_planes_ablation),
     ("beyond.encoding_width_scaling", encoding_width_scaling),
 ]
+
+
+# --------------------------------------------------------------------------
+# Versioned perf baseline (BENCH_<version>.json at the repo root)
+# --------------------------------------------------------------------------
+# The baseline pins the *derived* quantities of the deterministic lanes
+# (paper tables/figures + kernel counters) so CI can diff the perf
+# trajectory across PRs instead of only archiving an artifact.  Bump
+# BASELINE_VERSION when a PR intentionally moves the numbers and commit
+# the regenerated file:
+#
+#   PYTHONPATH=src python -m benchmarks.run --write-baseline
+#
+# benchmarks/check_baseline.py does the tolerance diff (CI bench job).
+BASELINE_VERSION = 4
+
+# wall-time-independent lanes: everything except the e2e timing lanes and
+# the slow QAT ablation (whose losses depend on the accelerator backend)
+BASELINE_PREFIXES = ("table", "fig", "eq", "kernel", "beyond.encoding")
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def baseline_path(root: str = _REPO_ROOT) -> str:
+    return os.path.join(root, f"BENCH_{BASELINE_VERSION}.json")
+
+
+def is_baseline_lane(name: str) -> bool:
+    return name.startswith(BASELINE_PREFIXES)
+
+
+def write_baseline(records, path=None) -> str:
+    path = path or baseline_path()
+    lanes = [r for r in records if is_baseline_lane(r["name"])]
+    payload = {"version": BASELINE_VERSION,
+               "lanes": {r["name"]: r["derived"] for r in lanes}}
+    with open(path, "w") as f:
+        json.dump(payload, f, default=str, sort_keys=True, indent=1)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
@@ -379,13 +489,24 @@ def main() -> None:
     ap.add_argument("--out", default=None,
                     help="also write the JSON payload to this file "
                          "(always JSON, whatever the stdout format)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help=f"also write the versioned "
+                         f"BENCH_{BASELINE_VERSION}.json baseline (the "
+                         f"deterministic lanes) at the repo root")
     args = ap.parse_args()
+    if args.write_baseline and args.only:
+        # a filtered run would silently overwrite the baseline with a
+        # subset and un-gate every dropped lane in CI
+        ap.error("--write-baseline regenerates the full baseline; "
+                 "it cannot be combined with --only")
     records = []
     if not args.json:
         print("name,us_per_call,derived")
     for name, fn in BENCHES:
         if args.only and args.only not in name:
             continue
+        if args.write_baseline and not is_baseline_lane(name):
+            continue             # baseline runs skip the e2e timing lanes
         us, out = _timed(fn)
         records.append({"name": name, "us_per_call": round(us),
                         "derived": out})
@@ -399,6 +520,8 @@ def main() -> None:
     if args.out:
         with open(args.out, "w") as f:
             f.write(payload)
+    if args.write_baseline:
+        print(f"baseline: {write_baseline(records)}")
 
 
 if __name__ == '__main__':

@@ -24,19 +24,27 @@ w = (rng.standard_normal((1024, 512)) * 0.02).astype(np.float32)
 x = (rng.standard_normal((512, 256)) / 23.0).astype(np.float32)
 
 print(f"{'planes':>6} {'qmax':>5} {'kept MXU passes':>16} "
-      f"{'avg NumPPs':>11} {'rel err':>9}")
+      f"{'avg NumPPs':>11} {'rel err':>9} {'sched steps':>12} "
+      f"{'DMA vs dense':>13}")
 want = w @ x
 for planes in (4, 3, 2):
     qw, sw = quant.quantize_to_planes(jnp.asarray(w), planes)
     qx, sx = quant.quantize_to_planes(jnp.asarray(x), 4)
     planned = ops.plan_operand(np.asarray(qw), block_m=128, block_k=128)
     acc = np.asarray(ops.bw_gemm(planned, qx, interpret=True))
+    # the compacted sparse schedule elides the skipped blocks' DMA too
+    acc_sparse = np.asarray(ops.bw_gemm_sparse(planned, qx, interpret=True))
+    assert (acc_sparse == acc).all()       # bit-identical dispatch
     got = acc.astype(np.float32) * float(sw) * float(sx)
     rel = np.abs(got - want).mean() / np.abs(want).mean()
     kept = float(np.asarray(planned.mask).mean())
     pps = avg_num_pps(np.asarray(qw).astype(np.int64), "ent")
+    st = ops.schedule_stats(planned.schedule, planned.mask)
+    # digit bytes the sparse schedule moves vs the dense kernel's
+    # all-planes-every-block BlockSpec
+    dma_ratio = st["steps"] / st["total_blocks"]
     print(f"{planes:>6} {quant.plane_qmax(planes):>5} {kept:>15.0%} "
-          f"{pps:>11.2f} {rel:>9.4f}")
+          f"{pps:>11.2f} {rel:>9.4f} {st['steps']:>12} {dma_ratio:>12.0%}")
 
 print("\nplanes=4: every block has some high-plane digit (element sparsity"
       " != block sparsity);\nplanes<=3 makes the top planes structurally "

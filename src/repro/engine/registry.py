@@ -23,6 +23,10 @@ Registered engines:
                     skipping; dequant/bias/activation epilogue in jnp.
     pallas_fused -- bw_gemm with the epilogue fused in-kernel on the
                     VMEM-resident int32 accumulator (the serving path).
+    pallas_sparse-- compacted sparse block schedules through scalar
+                    prefetch (bw_gemm_sparse_fused): skipped plane-blocks
+                    cost zero DMA and zero grid steps; falls back to the
+                    dense fused kernel for high-density plans.
 
 The kernel engines have three tiers (mirroring the old implicit routing):
 a pre-planned array record (traceable under jit/scan), eager concrete
@@ -181,16 +185,41 @@ class GemmEngine:
         """
         raise NotImplementedError
 
-    def cost(self, m: int, k: int, n: int, spec: QuantSpec) -> dict:
-        """Coarse static cost model of one [M,K]x[K,N] call (autotuning
-        seam): integer MACs, MXU pass multiplier, HBM bytes for the
-        accumulator round-trip the epilogue placement implies."""
+    def cost(self, m: int, k: int, n: int, spec: QuantSpec, *,
+             density: Optional[float] = None, plan=None) -> dict:
+        """Schedule-aware cost model of one [M,K]x[K,N] call (the
+        autotuning / tier-routing seam).
+
+        density: fraction of non-zero plane blocks over *all* digit
+        planes (``PlannedOperand.density()``); ``plan`` (a plan record or
+        PlannedOperand) supplies the measured value directly.  When
+        neither is given, the estimate assumes the spec's active planes
+        are fully dense — the pre-sparsity upper bound.
+
+        Keys: ``mxu_passes`` (structural per-element pass multiplier),
+        ``int_macs`` (integer MACs actually executed — density-scaled on
+        the kernel engines), ``acc_hbm_bytes`` (epilogue-placement HBM
+        round-trip), ``grid_steps`` (Pallas grid iterations; 0 for the
+        jnp engines) and ``dma_bytes`` (HBM block traffic the BlockSpecs
+        imply).
+        """
         passes = self._passes(spec)
+        acc = self._acc_hbm_bytes(m, n)
         return {
             "mxu_passes": passes,
             "int_macs": passes * m * k * n,
-            "acc_hbm_bytes": self._acc_hbm_bytes(m, n),
+            "acc_hbm_bytes": acc,
+            "grid_steps": 0,     # jnp engines: one fused XLA dot, no grid
+            "dma_bytes": m * k + k * n + 4 * m * n + acc,
         }
+
+    @staticmethod
+    def _plan_density(plan) -> Optional[float]:
+        if plan is None:
+            return None
+        mask = plan["mask"] if isinstance(plan, dict) else plan.mask
+        import numpy as np
+        return float(np.asarray(mask).mean())
 
     def _passes(self, spec: QuantSpec) -> int:
         return 1
@@ -238,6 +267,7 @@ class PallasEngine(GemmEngine):
     name = "pallas"
     uses_plans = True
     fused = False
+    dispatch = "dense"           # sparse-schedule routing (pallas_sparse)
 
     def plan(self, w, spec):
         from repro.kernels import ops
@@ -252,7 +282,8 @@ class PallasEngine(GemmEngine):
                                  "(the record only carries padded shapes)")
             return ops.planned_dense_apply(
                 plan_or_w, x, spec, n_out, bias=bias, activation=activation,
-                out_dtype=out_dtype, interpret=interpret, fused=self.fused)
+                out_dtype=out_dtype, interpret=interpret, fused=self.fused,
+                dispatch=self.dispatch)
         w = plan_or_w
         if _is_traced(x, w):
             # traced without a plan (dry-run cost analysis, jit'd train
@@ -263,7 +294,8 @@ class PallasEngine(GemmEngine):
                 out_dtype=out_dtype)
         return ops.quantized_dense(
             x, w, spec, bias=bias, activation=activation,
-            out_dtype=out_dtype, interpret=interpret, fused=self.fused)
+            out_dtype=out_dtype, interpret=interpret, fused=self.fused,
+            dispatch=self.dispatch)
 
     def _passes(self, spec):
         return active_planes(spec)
@@ -272,6 +304,39 @@ class PallasEngine(GemmEngine):
         # unfused: int32 accumulator is written to HBM, then re-read (and
         # the float result written) by the jnp epilogue
         return 3 * 4 * m * n
+
+    # -- schedule-aware cost -------------------------------------------------
+
+    def _geometry(self, m, k, n, spec):
+        from repro.kernels import ops
+        bm, bk, bn = ops.select_block_sizes(m, k, n, spec)
+        return (bm, bk, bn, -(-m // bm), -(-k // bk), -(-n // bn))
+
+    def cost(self, m, k, n, spec, *, density=None, plan=None):
+        """Dense predicated kernel: the full (M/bm, N/bn, K/bk) grid is
+        walked and every digit plane of every block is DMA'd; only the
+        *MXU passes* of empty plane-blocks are skipped (pl.when)."""
+        if density is None:
+            density = self._plan_density(plan)
+        bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec)
+        bwn = spec.num_digits
+        if density is None:
+            density = active_planes(spec) / bwn
+        acc = self._acc_hbm_bytes(m, n)
+        return {
+            "mxu_passes": self._passes(spec),
+            # logical MACs actually executed: density * all-planes work.
+            # (Kept un-padded so jnp- and kernel-engine estimates stay
+            # comparable for tier routing; the block-quantized reality
+            # lives in grid_steps / dma_bytes.)
+            "int_macs": int(density * bwn * m * k * n),
+            "acc_hbm_bytes": acc,
+            "grid_steps": mb * nb * kb,
+            # per grid step: all BW digit planes of the A block + the B
+            # block (int8); plus one float out block per (m, n) tile
+            "dma_bytes": int(mb * nb * kb * (bwn * bm * bk + bk * bn)
+                             + mb * nb * bm * bn * 4 + acc),
+        }
 
 
 class PallasFusedEngine(PallasEngine):
@@ -284,8 +349,45 @@ class PallasFusedEngine(PallasEngine):
         return 0                 # only the final float block leaves VMEM
 
 
+class PallasSparseEngine(PallasFusedEngine):
+    """Compacted-schedule sparse dispatch (scalar prefetch): skipped
+    plane-blocks cost zero DMA and zero grid steps.
+
+    ``apply`` routes through ``planned_dense_apply(dispatch='auto')``: the
+    sparse kernels when the plan's density proxy clears
+    ``ops.SPARSE_DENSITY_THRESHOLD`` (or the autotune cache says so), the
+    dense fused kernel otherwise — high-density plans would *pay* for
+    compaction, since the dense grid retires all BW planes of a block in
+    one step."""
+
+    name = "pallas_sparse"
+    dispatch = "auto"
+
+    def cost(self, m, k, n, spec, *, density=None, plan=None):
+        if density is None:
+            density = self._plan_density(plan)
+        bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec)
+        bwn = spec.num_digits
+        if density is None:
+            density = active_planes(spec) / bwn
+        nnz = density * bwn * mb * kb
+        # every m-block row is visited at least once (zero-weight
+        # sentinels keep empty output rows written)
+        steps = max(int(round(nnz)), mb)
+        return {
+            "mxu_passes": self._passes(spec),
+            "int_macs": int(density * bwn * m * k * n),
+            "acc_hbm_bytes": 0,
+            "grid_steps": steps * nb,
+            # per scheduled step: ONE digit plane block + the B block;
+            # plus one float out block per (m, n) tile
+            "dma_bytes": int(steps * nb * (bm * bk + bk * bn)
+                             + mb * nb * bm * bn * 4),
+        }
+
+
 for _engine in (RefEngine(), PlanesEngine(), Int8Engine(), PallasEngine(),
-                PallasFusedEngine()):
+                PallasFusedEngine(), PallasSparseEngine()):
     register(_engine)
 
 assert engine_names() == IMPLS, (engine_names(), IMPLS)

@@ -3,12 +3,19 @@
   quant_gemm      -- baseline tiled INT8 GEMM (the parallel-MAC reference)
   bw_gemm         -- bit-weight decomposed GEMM with digit-plane block skipping
   bw_gemm_fused   -- bw_gemm + in-kernel dequant/bias/activation epilogue
+  bw_gemm_sparse / bw_gemm_sparse_fused
+                  -- the same contracts through a compacted sparse block
+                     schedule (scalar prefetch): skipped plane-blocks cost
+                     zero DMA and zero grid steps
   ops             -- public jitted wrappers (padding, planning cache, masks,
-                     per-shape block selection, the quantized-dense dispatch);
-                     spec-level entry points take a repro.engine.QuantSpec
+                     schedules, per-shape block selection, the
+                     quantized-dense dispatch); spec-level entry points
+                     take a repro.engine.QuantSpec
+  autotune        -- measured block-size / dispatch autotuner + JSON cache
   ref             -- pure-jnp oracles
 """
 from . import ops, ref  # noqa: F401
 from .ops import (bw_gemm, quant_gemm, plan_operand, encode_planes,  # noqa: F401
                   bw_gemm_fused, quant_gemm_fused, quantized_dense,
+                  bw_gemm_sparse, bw_gemm_sparse_fused, build_schedule,
                   plan_params, planned_dense_apply, select_block_sizes)

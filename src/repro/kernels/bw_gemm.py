@@ -30,7 +30,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["bw_gemm", "bw_gemm_fused", "EPILOGUE_ACTIVATIONS"]
+__all__ = ["bw_gemm", "bw_gemm_fused", "bw_gemm_sparse",
+           "bw_gemm_sparse_fused", "EPILOGUE_ACTIVATIONS", "SCHED_COLS"]
+
+# Column layout of the compacted sparse block schedule (int32 [L, 6]): one
+# row per non-zero (plane, m-block, k-block) of the occupancy mask, ordered
+# by m-block row (CSR-of-blocks), plus one zero-weight sentinel per empty
+# m-block row so every output block is visited and written.  WEIGHT is the
+# deferred-shift plane scale radix**plane (0 for sentinels/padding), FIRST /
+# LAST flag the row boundaries that drive accumulator init and the fused
+# epilogue.  ops.build_schedule constructs it from a plane-block mask.
+SCHED_COLS = {"plane": 0, "row": 1, "kblk": 2, "weight": 3,
+              "first": 4, "last": 5}
+_PLANE, _ROW, _KBLK, _WEIGHT, _FIRST, _LAST = range(6)
 
 # Activations the fused epilogue can apply on the dequantised accumulator.
 # Single source of truth: repro.models.layers.activation resolves names
@@ -204,3 +216,179 @@ def bw_gemm_fused(digits, b, mask, scale, bias=None, scale_n=None, *,
         interpret=interpret,
     )(mask, digits, b, scale.astype(jnp.float32),
       scale_n.astype(jnp.float32), bias.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Sparse dispatch: compacted block schedules via scalar prefetch
+# ---------------------------------------------------------------------------
+# The dense kernels above *predicate* an empty plane-block (pl.when skips the
+# MXU pass) but still DMA every BW plane of every block and still walk the
+# full (M/bm, N/bn, K/bk) grid.  The kernels below consume a compacted
+# schedule (SCHED_COLS) through pltpu.PrefetchScalarGridSpec instead: the
+# grid is (N/bn, L) with L = nnz blocks (+ one sentinel per empty row), the
+# digits BlockSpec index_map gathers only the single plane a step actually
+# needs, and the deferred-shift weight is looked up from the schedule -- an
+# all-zero plane-block costs neither bandwidth nor a grid iteration.  The
+# schedule is ordered by m-block row, so each output block is visited in
+# consecutive steps (TPU-legal accumulation: the block stays VMEM-resident
+# between FIRST and LAST and is flushed exactly once).
+
+
+def _sparse_kernel(sched_ref, d_ref, b_ref, o_ref):
+    s = pl.program_id(1)
+
+    @pl.when(sched_ref[s, _FIRST] == 1)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = d_ref[0].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    pp = jax.lax.dot_general(d, b, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32)
+    # deferred shift (OPT2): the plane scale comes from the schedule, so
+    # sentinel/padding steps (weight 0) contribute exact zeros
+    o_ref[...] += pp * sched_ref[s, _WEIGHT]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def bw_gemm_sparse(digits, b, schedule, *, block_m: int = 128,
+                   block_n: int = 128, block_k: int = 256,
+                   interpret: bool = False):
+    """C[M,N] = sum over schedule entries of (digits[plane] @ B) * weight.
+
+    digits:   int8 [BW, M, K] encoded planes of the multiplicand.
+    b:        int8 [K, N].
+    schedule: int32 [L, 6] compacted block schedule (see SCHED_COLS);
+              the radix is baked into the WEIGHT column at build time.
+    """
+    bw_n, m, k = digits.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert schedule.ndim == 2 and schedule.shape[1] == 6, schedule.shape
+    steps = schedule.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block_n, steps),
+        in_specs=[
+            # gather exactly the one digit plane this step needs
+            pl.BlockSpec((1, block_m, block_k),
+                         lambda j, s, sched: (sched[s, _PLANE],
+                                              sched[s, _ROW],
+                                              sched[s, _KBLK])),
+            pl.BlockSpec((block_k, block_n),
+                         lambda j, s, sched: (sched[s, _KBLK], j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda j, s, sched: (sched[s, _ROW], j)),
+    )
+    return pl.pallas_call(
+        _sparse_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(schedule, jnp.int32), digits, b)
+
+
+def _sparse_fused_kernel(sched_ref, d_ref, b_ref, scale_ref, scale_n_ref,
+                         bias_ref, o_ref, acc_ref, *, activation,
+                         has_bias: bool, has_scale_n: bool):
+    """bw_gemm_sparse with the dequant epilogue folded in.
+
+    The int32 accumulator lives in a VMEM scratch block; FIRST zeroes it,
+    LAST runs the epilogue and writes the only HBM output of the row.
+    Padding steps (weight 0, FIRST=LAST=0) are exact no-ops.
+    """
+    s = pl.program_id(1)
+
+    @pl.when(sched_ref[s, _FIRST] == 1)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    d = d_ref[0].astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int32)
+    pp = jax.lax.dot_general(d, b, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.int32)
+    acc_ref[...] += pp * sched_ref[s, _WEIGHT]
+
+    @pl.when(sched_ref[s, _LAST] == 1)
+    def _epilogue():
+        sc = scale_ref[...]
+        if has_scale_n:
+            # combine the scale vectors first so the accumulator is
+            # multiplied by one float (bit-matches the dense fused kernel
+            # and the jnp oracle's `acc * (sx * sw)` ordering)
+            sc = sc * scale_n_ref[...]
+        y = acc_ref[...].astype(jnp.float32) * sc
+        if has_bias:
+            y = y + bias_ref[...]
+        y = EPILOGUE_ACTIVATIONS[activation](y)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "block_k", "interpret", "activation", "out_dtype"))
+def bw_gemm_sparse_fused(digits, b, schedule, scale, bias=None, scale_n=None,
+                         *, block_m: int = 128, block_n: int = 128,
+                         block_k: int = 256, interpret: bool = False,
+                         activation=None, out_dtype=jnp.float32):
+    """Sparse-schedule bw_gemm with the fused dequant epilogue.
+
+    Arguments mirror bw_gemm_fused with epilogue_axis='m' (the planned-
+    weight layout: weight channels on the kernel M axis, tokens on N), but
+    the occupancy mask is replaced by the compacted schedule and the plane
+    loop by one scheduled (plane, m-block, k-block) step per grid
+    iteration.
+
+    scale:   f32 [M, 1] per-row (per-output-channel) scale.
+    bias:    optional f32 [M, 1].
+    scale_n: optional f32 [1, N] per-column vector (per-token act scales).
+    """
+    bw_n, m, k = digits.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert schedule.ndim == 2 and schedule.shape[1] == 6, schedule.shape
+    assert activation in EPILOGUE_ACTIVATIONS, activation
+    assert scale.shape == (m, 1), scale.shape
+    has_scale_n = scale_n is not None
+    if has_scale_n:
+        assert scale_n.shape == (1, n), scale_n.shape
+    else:                               # placeholder so arity is static
+        scale_n = jnp.ones((1, n), jnp.float32)
+    has_bias = bias is not None
+    if not has_bias:                    # placeholder so arity is static
+        bias = jnp.zeros_like(scale)
+    steps = schedule.shape[0]
+    vec_spec = pl.BlockSpec((block_m, 1),
+                            lambda j, s, sched: (sched[s, _ROW], 0))
+    col_spec = pl.BlockSpec((1, block_n), lambda j, s, sched: (0, j))
+    kernel = functools.partial(_sparse_fused_kernel, activation=activation,
+                               has_bias=has_bias, has_scale_n=has_scale_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block_n, steps),
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k),
+                         lambda j, s, sched: (sched[s, _PLANE],
+                                              sched[s, _ROW],
+                                              sched[s, _KBLK])),
+            pl.BlockSpec((block_k, block_n),
+                         lambda j, s, sched: (sched[s, _KBLK], j)),
+            vec_spec,
+            col_spec,
+            vec_spec,
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda j, s, sched: (sched[s, _ROW], j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )(jnp.asarray(schedule, jnp.int32), digits, b,
+      scale.astype(jnp.float32), scale_n.astype(jnp.float32),
+      bias.astype(jnp.float32))

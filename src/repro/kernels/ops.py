@@ -41,7 +41,9 @@ __all__ = ["PlannedOperand", "encode_planes", "plane_block_mask",
            "select_block_sizes", "bw_gemm_fused", "quant_gemm_fused",
            "plan_for", "plan_cache_stats", "plan_cache_clear",
            "quantized_dense", "plan_dense_weight", "planned_dense_apply",
-           "plan_params"]
+           "plan_params", "build_schedule", "pad_schedule",
+           "schedule_stats", "bw_gemm_sparse", "bw_gemm_sparse_fused",
+           "SPARSE_DENSITY_THRESHOLD"]
 
 
 def _interpret() -> bool:
@@ -65,11 +67,12 @@ def encode_planes(a, encoding: str = "ent", bits: int = 8):
 # ---------------------------------------------------------------------------
 # Per-shape block-size selection
 # ---------------------------------------------------------------------------
-# Dispatch table for the kernel execution path: first row whose minimum
-# (M, K, N) thresholds are all met wins.  Bigger blocks amortise grid
-# overhead and raise MXU occupancy on large GEMMs; 128 is the MXU-aligned
-# floor.  Later autotuning PRs refine this table in place -- the seam every
-# caller goes through is select_block_sizes().
+# Static fallback table for the kernel execution path: first row whose
+# minimum (M, K, N) thresholds are all met wins.  Bigger blocks amortise
+# grid overhead and raise MXU occupancy on large GEMMs; 128 is the
+# MXU-aligned floor.  Since the measured autotuner landed, this table is
+# only the *fallback*: select_block_sizes consults the autotune cache
+# (repro.kernels.autotune, REPRO_AUTOTUNE_CACHE) first.
 _BLOCK_TABLE = (
     # (min_m, min_k, min_n)  ->  (block_m, block_k, block_n)
     ((512, 2048, 512), (256, 512, 256)),
@@ -83,14 +86,22 @@ def select_block_sizes(m: int, k: int, n: int,
                        spec: Optional[QuantSpec] = None):
     """(block_m, block_k, block_n) for a logical [M, K] x [K, N] GEMM.
 
-    A spec's explicit block_m/block_k/block_n overrides win component-wise
-    over the dispatch table.
+    Resolution order: (1) a measured winner from the autotune cache for
+    this (shape, spec-plan) key, (2) the static dispatch table — with an
+    AutotuneCacheMissWarning when an explicitly configured cache lacks the
+    shape.  A spec's explicit block_m/block_k/block_n overrides win
+    component-wise over both.
     """
-    sel = _BLOCK_TABLE[-1][1]
-    for (mn_m, mn_k, mn_n), blocks in _BLOCK_TABLE:
-        if m >= mn_m and k >= mn_k and n >= mn_n:
-            sel = blocks
-            break
+    from . import autotune
+    hit = autotune.get_cache().lookup(m, k, n, spec)
+    if hit is not None:
+        sel = (hit["block_m"], hit["block_k"], hit["block_n"])
+    else:
+        sel = _BLOCK_TABLE[-1][1]
+        for (mn_m, mn_k, mn_n), blocks in _BLOCK_TABLE:
+            if m >= mn_m and k >= mn_k and n >= mn_n:
+                sel = blocks
+                break
     if spec is not None:
         sel = (spec.block_m or sel[0], spec.block_k or sel[1],
                spec.block_n or sel[2])
@@ -110,6 +121,83 @@ def plane_density(digits, block_m: int, block_k: int) -> dict:
     return {f"plane{i}": float(mask[i].mean()) for i in range(mask.shape[0])}
 
 
+# ---------------------------------------------------------------------------
+# Compacted sparse block schedules (CSR-of-blocks over the occupancy mask)
+# ---------------------------------------------------------------------------
+# Above this plane-block density the sparse kernels fall back to the dense
+# ones: at high density the compacted schedule runs *more* grid steps than
+# the dense grid (which retires all BW planes of a block in one step), so
+# the DMA savings no longer pay for the extra iterations.  The measured
+# autotuner can override the dispatch per (shape, density-bucket).
+SPARSE_DENSITY_THRESHOLD = 0.5
+
+
+def build_schedule(mask, radix: int) -> np.ndarray:
+    """Compact a plane-block occupancy mask into an int32 [L, 6] schedule.
+
+    mask: bool [BW, Mb, Kb].  One schedule entry per True cell, ordered by
+    m-block row and, within a row, by (k-block, plane) so consecutive steps
+    reuse the same B block (Pallas elides the DMA when the index map result
+    repeats).  Every empty row gets one zero-weight sentinel entry so its
+    output block is still visited, zeroed and written.  Columns are
+    bw_gemm.SCHED_COLS: (plane, row, kblk, weight=radix**plane, first,
+    last); row boundaries drive accumulator init / the fused epilogue.
+    """
+    mask = np.asarray(mask)
+    bw_n, mb, kb = mask.shape
+    entries = []
+    for row in range(mb):
+        cells = np.argwhere(mask[:, row, :])          # (plane, kblk) pairs
+        if cells.size == 0:
+            # sentinel: visit the output block once with weight 0 so the
+            # row is written as exact zeros
+            entries.append([(0, row, 0, 0)])
+            continue
+        order = np.lexsort((cells[:, 0], cells[:, 1]))  # by (kblk, plane)
+        entries.append([(int(p), row, int(kk), radix ** int(p))
+                        for p, kk in cells[order]])
+    sched = np.zeros((sum(len(e) for e in entries), 6), dtype=np.int32)
+    pos = 0
+    for row_entries in entries:
+        n_e = len(row_entries)
+        for i, (p, row, kk, w) in enumerate(row_entries):
+            sched[pos + i] = (p, row, kk, w, int(i == 0), int(i == n_e - 1))
+        pos += n_e
+    return sched
+
+
+def pad_schedule(schedule: np.ndarray, length: int) -> np.ndarray:
+    """Pad a schedule to ``length`` steps with exact no-op entries.
+
+    Padding replicates the final entry with weight 0 and cleared
+    first/last flags, *appended after* it: the output block index stays on
+    the last row, so the padded steps neither re-zero the accumulator nor
+    re-run the epilogue, and the block is flushed once with its correct
+    content.  Needed when per-layer schedules of different lengths are
+    stacked for jax.lax.scan.
+    """
+    sched = np.asarray(schedule)
+    if sched.shape[0] > length:
+        raise ValueError(f"cannot pad a {sched.shape[0]}-step schedule "
+                         f"down to {length}")
+    if sched.shape[0] == length:
+        return sched
+    pad = np.repeat(sched[-1:], length - sched.shape[0], axis=0)
+    pad[:, 3:] = 0                       # weight / first / last cleared
+    return np.concatenate([sched, pad], axis=0)
+
+
+def schedule_stats(schedule, mask) -> dict:
+    """Real (non-sentinel, non-padding) entry count and block density."""
+    sched = np.asarray(schedule)
+    mask = np.asarray(mask)
+    real = int((sched[:, 3] != 0).sum())          # weight 0 = no-op entry
+    total = int(mask.size)
+    return {"steps": int(sched.shape[0]), "nnz_blocks": real,
+            "total_blocks": total,
+            "density": real / total if total else 0.0}
+
+
 @dataclasses.dataclass
 class PlannedOperand:
     """A pre-encoded multiplicand ready for bw_gemm.
@@ -127,6 +215,11 @@ class PlannedOperand:
     block_m: int
     block_k: int
     encoding: str
+    schedule: Optional[np.ndarray] = None   # int32 [L, 6], build_schedule
+
+    def density(self) -> float:
+        """Fraction of non-zero plane blocks (the sparse-dispatch signal)."""
+        return float(np.asarray(self.mask).mean())
 
 
 def plan_operand(a_int8, encoding: str = "ent", block_m: int = 128,
@@ -164,8 +257,9 @@ def plan_operand(a_int8, encoding: str = "ent", block_m: int = 128,
     else:
         digits = kref.encode_planes_ref(a_sorted, encoding, bits)
         mask = plane_block_mask(digits, block_m, block_k)
+    schedule = build_schedule(np.asarray(mask), enc.radix(encoding))
     return PlannedOperand(digits, mask, row_perm, inv_perm, m, k,
-                          block_m, block_k, encoding)
+                          block_m, block_k, encoding, schedule)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret",
@@ -193,6 +287,57 @@ def bw_gemm(planned: PlannedOperand, b, *, block_n: int = 128,
         block_m=planned.block_m, block_k=planned.block_k,
         radix=enc.radix(planned.encoding))
     return out[:planned.m, :n]
+
+
+def bw_gemm_sparse(planned: PlannedOperand, b, *, block_n: int = 128,
+                   interpret: Optional[bool] = None):
+    """C = A @ B through the compacted-schedule kernel (scalar prefetch).
+
+    Bit-identical to bw_gemm on the same plan; an all-zero plane-block
+    costs neither a DMA nor a grid step.  b: int8 [K, N] -> int32 [M, N].
+    """
+    if interpret is None:
+        interpret = _interpret()
+    k, n = b.shape
+    assert k == planned.k, (k, planned.k)
+    assert planned.schedule is not None, "plan has no schedule"
+    b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
+                block_n, 1)
+    out = _bw.bw_gemm_sparse(
+        planned.digits, b, jnp.asarray(planned.schedule),
+        block_m=planned.block_m, block_n=block_n, block_k=planned.block_k,
+        interpret=bool(interpret))
+    return out[jnp.asarray(planned.inv_perm)][:planned.m, :n]
+
+
+def bw_gemm_sparse_fused(planned: PlannedOperand, b, scale, bias=None, *,
+                         activation=None, block_n: int = 128,
+                         out_dtype=jnp.float32,
+                         interpret: Optional[bool] = None):
+    """bw_gemm_fused through the compacted-schedule kernel.
+
+    Same contract as bw_gemm_fused: scale/bias are per-row vectors of
+    length M in the operand's original row order.
+    """
+    if interpret is None:
+        interpret = _interpret()
+    k, n = b.shape
+    assert k == planned.k, (k, planned.k)
+    assert planned.schedule is not None, "plan has no schedule"
+    m_pad = planned.digits.shape[1]
+    row_perm = jnp.asarray(planned.row_perm)
+    scale_rows = _channel_rows(scale, planned.m, m_pad, row_perm)
+    bias_rows = None
+    if bias is not None:
+        bias_rows = _channel_rows(bias, planned.m, m_pad, row_perm)
+    b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
+                block_n, 1)
+    out = _bw.bw_gemm_sparse_fused(
+        planned.digits, b, jnp.asarray(planned.schedule), scale_rows,
+        bias_rows, block_m=planned.block_m, block_n=block_n,
+        block_k=planned.block_k, interpret=bool(interpret),
+        activation=activation, out_dtype=out_dtype)
+    return out[jnp.asarray(planned.inv_perm)][:planned.m, :n]
 
 
 def quant_gemm(a, b, *, block_m: int = 128, block_n: int = 128,
@@ -399,17 +544,43 @@ def plan_dense_weight(w, spec, use_cache: bool = True) -> dict:
     return {
         "digits": planned.digits,                     # int8 [BW, M_pad, K_pad]
         "mask": planned.mask,                         # bool [BW, M/bm, K/bk]
+        "schedule": jnp.asarray(planned.schedule),    # int32 [L, 6]
         "row_perm": row_perm,                         # int32 [M_pad]
         "inv_perm": jnp.asarray(planned.inv_perm),    # int32 [M_pad]
         "sw_rows": _channel_rows(sw.reshape(-1), n, m_pad, row_perm),
     }
 
 
+def _resolve_dispatch(dispatch: str, plan: dict, spec, n_out: int, k: int,
+                      batch: int) -> bool:
+    """True = run the sparse compacted-schedule kernel.
+
+    The decision is *static* (shape-derived, jit/scan-safe): the schedule
+    length L counts nnz blocks + per-empty-row sentinels (+ stack padding),
+    so L / mask.size is a sound density proxy.  'auto' consults the
+    measured autotune cache for a per-(shape, density-bucket) winner and
+    falls back to the SPARSE_DENSITY_THRESHOLD heuristic on a miss.
+    """
+    if dispatch == "dense" or plan.get("schedule") is None:
+        return False
+    if dispatch == "sparse":
+        return True
+    if dispatch != "auto":
+        raise ValueError(f"dispatch must be dense|sparse|auto, "
+                         f"got {dispatch!r}")
+    density = plan["schedule"].shape[0] / max(plan["mask"].size, 1)
+    from . import autotune
+    hit = autotune.get_cache().lookup(n_out, k, batch, spec, density=density)
+    if hit is not None and hit.get("dispatch") in ("sparse", "dense"):
+        return hit["dispatch"] == "sparse"
+    return density <= SPARSE_DENSITY_THRESHOLD
+
+
 def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
                         activation=None, out_dtype=jnp.float32,
                         block_n: Optional[int] = None,
                         interpret: Optional[bool] = None,
-                        fused: bool = True):
+                        fused: bool = True, dispatch: str = "dense"):
     """y = act((x @ w)_int * s_x * s_w + bias) through the bw_gemm kernel.
 
     plan: record from plan_dense_weight (possibly a scan-sliced layer of a
@@ -425,6 +596,12 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
     returns the int32 accumulator and the epilogue runs in jnp.  Traceable
     end to end: safe inside jit / scan (block sizes come from static array
     shapes, radix from the static spec).
+
+    dispatch: 'dense' (the predicated full-grid kernels), 'sparse' (the
+    compacted-schedule scalar-prefetch kernels), or 'auto' (density-based:
+    sparse when the schedule-length density proxy is at most
+    SPARSE_DENSITY_THRESHOLD, with autotune-cache overrides).  The
+    decision is shape-derived, so it stays static under jit/scan.
     """
     spec = QuantSpec.coerce(spec)
     if interpret is None:
@@ -452,21 +629,37 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
     sx_cols = None
     if per_token:                        # one scale per activation row ->
         sx_cols = _pad_to(sx.reshape(1, -1), block_n, 1)  # kernel N axis
+    sparse = _resolve_dispatch(dispatch, plan, spec, n_out, k, batch)
     if fused:
         scale_rows = plan["sw_rows"] if per_token else plan["sw_rows"] * sx
         bias_rows = None
         if bias is not None:
             bias_rows = _channel_rows(bias, n_out, m_pad, plan["row_perm"])
-        out = _bw.bw_gemm_fused(
-            digits, bt, mask, scale_rows, bias_rows, sx_cols,
-            block_m=block_m, block_n=block_n, block_k=block_k,
-            radix=spec.radix, interpret=bool(interpret),
-            activation=activation, epilogue_axis="m", out_dtype=jnp.float32)
+        if sparse:
+            out = _bw.bw_gemm_sparse_fused(
+                digits, bt, plan["schedule"], scale_rows, bias_rows,
+                sx_cols, block_m=block_m, block_n=block_n,
+                block_k=block_k, interpret=bool(interpret),
+                activation=activation, out_dtype=jnp.float32)
+        else:
+            out = _bw.bw_gemm_fused(
+                digits, bt, mask, scale_rows, bias_rows, sx_cols,
+                block_m=block_m, block_n=block_n, block_k=block_k,
+                radix=spec.radix, interpret=bool(interpret),
+                activation=activation, epilogue_axis="m",
+                out_dtype=jnp.float32)
         y = out[plan["inv_perm"]][:n_out, :batch].T
     else:
-        acc = _bw.bw_gemm(
-            digits, bt, mask, block_m=block_m, block_n=block_n,
-            block_k=block_k, radix=spec.radix, interpret=bool(interpret))
+        if sparse:
+            acc = _bw.bw_gemm_sparse(
+                digits, bt, plan["schedule"], block_m=block_m,
+                block_n=block_n, block_k=block_k,
+                interpret=bool(interpret))
+        else:
+            acc = _bw.bw_gemm(
+                digits, bt, mask, block_m=block_m, block_n=block_n,
+                block_k=block_k, radix=spec.radix,
+                interpret=bool(interpret))
         acc = acc[plan["inv_perm"]][:n_out, :batch]
         sw = plan["sw_rows"][plan["inv_perm"]][:n_out]     # original order
         s = sw * (sx.reshape(1, -1) if per_token else sx)
@@ -482,7 +675,7 @@ def quantized_dense(x, w, spec, *, bias=None, activation=None,
                     out_dtype=jnp.float32,
                     block_n: Optional[int] = None,
                     interpret: Optional[bool] = None,
-                    fused: bool = True):
+                    fused: bool = True, dispatch: str = "dense"):
     """Eager kernel-path dense: plan (cached per parameter) + bw_gemm.
 
     x: [..., K] float.  w: [K, N] float (concrete).  bias: optional [N].
@@ -495,7 +688,7 @@ def quantized_dense(x, w, spec, *, bias=None, activation=None,
     return planned_dense_apply(plan, x, spec, w.shape[1], bias=bias,
                                activation=activation, out_dtype=out_dtype,
                                block_n=block_n, interpret=interpret,
-                               fused=fused)
+                               fused=fused, dispatch=dispatch)
 
 
 # Param-dict names whose "w" never flows through the quantized dense path
@@ -542,8 +735,38 @@ def plan_params(params, spec, should_plan=None):
         else:                  # [L, K, N] stacked for the layer scan
             plans = [plan_dense_weight(w[i], spec, use_cache=False)
                      for i in range(w.shape[0])]
+            # per-layer schedules have data-dependent lengths: pad to the
+            # longest with exact no-op entries so the stack scans cleanly
+            max_steps = max(p["schedule"].shape[0] for p in plans)
+            for p in plans:
+                p["schedule"] = jnp.asarray(pad_schedule(
+                    np.asarray(p["schedule"]), max_steps))
             out["w_plan"] = jax.tree.map(lambda *xs: jnp.stack(xs), *plans)
             count += w.shape[0]
         return out
 
     return walk(params, ()), count
+
+
+def plan_tree_density(params) -> Optional[float]:
+    """Aggregate plane-block density over every 'w_plan' record in a
+    planned param tree (plane-block-count weighted); None when the tree
+    holds no plans.  This is the measured-density input to the
+    schedule-aware GemmEngine.cost / serving tier estimates."""
+    nnz = total = 0
+
+    def walk(node):
+        nonlocal nnz, total
+        if not isinstance(node, dict):
+            return
+        plan = node.get("w_plan")
+        if isinstance(plan, dict) and "mask" in plan:
+            mask = np.asarray(plan["mask"])
+            nnz += int(mask.sum())
+            total += int(mask.size)
+        for key, v in node.items():
+            if key != "w_plan":
+                walk(v)
+
+    walk(params)
+    return (nnz / total) if total else None

@@ -344,7 +344,7 @@ def main(argv=None) -> int:
                          "this many EN-T digit planes")
     ap.add_argument("--quant-impl", default="pallas_fused",
                     choices=("ref", "planes", "int8", "pallas",
-                             "pallas_fused"),
+                             "pallas_fused", "pallas_sparse"),
                     help="quantized matmul engine to lower (kernel impls "
                          "use their cost-representative int8 lowering)")
     ap.add_argument("--seq-axis", default=None,

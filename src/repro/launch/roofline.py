@@ -19,7 +19,7 @@ import re
 from typing import Dict, Optional
 
 __all__ = ["HW", "Roofline", "collective_bytes", "roofline_from_compiled",
-           "model_flops"]
+           "model_flops", "quantized_gemm_roofline"]
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # bytes/s / chip
@@ -150,6 +150,31 @@ def roofline_from_compiled(cost: dict, hlo_text: str, chips: int,
     bottleneck = max(terms, key=terms.get)
     return Roofline(flops, byts, cb, coll, chips, t_comp, t_mem, t_coll,
                     bottleneck, model_fl)
+
+
+def quantized_gemm_roofline(cost: dict, chips: int = 1) -> dict:
+    """Roofline terms for a quantized kernel GEMM from its schedule-aware
+    ``GemmEngine.cost`` dict (see repro.engine.registry).
+
+    The compute term prices the integer MACs *actually executed* — the
+    cost model scales them by measured plane-block density, so digit-plane
+    sparsity the sparse dispatch elides shows up as a shorter compute
+    term, not merely a predicated-away MXU pass.  The memory term prices
+    the DMA block traffic the BlockSpecs imply (the dense kernels move
+    every digit plane of every block; the compacted schedule moves only
+    scheduled planes) plus any epilogue accumulator round-trip already
+    folded into ``dma_bytes``.
+    """
+    t_comp = 2.0 * cost["int_macs"] / (chips * PEAK_FLOPS)
+    t_mem = cost["dma_bytes"] / (chips * HBM_BW)
+    return {
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "bottleneck": "compute" if t_comp >= t_mem else "memory",
+        "grid_steps": cost.get("grid_steps", 0),
+        "dma_bytes": cost["dma_bytes"],
+        "int_macs": cost["int_macs"],
+    }
 
 
 def model_flops(cfg, global_batch: int, seq_len: int,

@@ -69,8 +69,9 @@ class ServeEngine:
     jit'd serve step closes over it — engines with different specs coexist
     in one process without interfering.
 
-    With a kernel impl ("pallas" / "pallas_fused") the engine serves
-    through the kernel execution path: every dense weight is pre-planned
+    With a kernel impl ("pallas" / "pallas_fused" / "pallas_sparse") the
+    engine serves through the kernel execution path: every dense weight is
+    pre-planned
     once at init (encode -> digit planes -> occupancy mask ->
     magnitude-ordered channel permutation) and the plan records are
     attached to the param tree, so the jit'd serve step scans/slices them
@@ -108,7 +109,10 @@ class ServeEngine:
         self._state0 = jax.tree.map(jnp.copy, self.state) \
             if self.api.family in RESET_STATE_FAMILIES else None
         self._kernel_path = spec is not None and \
-            spec.impl in ("pallas", "pallas_fused")
+            spec.impl in ("pallas", "pallas_fused", "pallas_sparse")
+        # measured plane-block density of the planned weights (the
+        # schedule-aware cost input); None off the kernel path
+        self.plan_density = None
         if self._kernel_path:
             # one-time planning step: encode every dense weight into digit
             # planes + occupancy mask + channel permutation and attach the
@@ -117,8 +121,11 @@ class ServeEngine:
             # matmul executes the Pallas kernel.
             from repro.kernels import ops
             self.params, planned = ops.plan_params(self.params, spec)
-            self.quant.plan_stats = {"planned_weights": planned,
-                                     **ops.plan_cache_stats()}
+            self.plan_density = ops.plan_tree_density(self.params)
+            self.quant.plan_stats = {
+                "planned_weights": planned,
+                "plane_block_density": self.plan_density,
+                **ops.plan_cache_stats()}
         self.step_fn = jax.jit(make_serve_step(cfg))
         self.slots = SlotAllocator(batch, max_len, audit=audit)
         self.steps = 0

@@ -103,7 +103,12 @@ class AsyncServer:
             for t in self.tiers}
         per_step = {}
         for t in self.tiers:
-            est = max(estimate_step_time(cfg, t.batch, t.spec, design)
+            # schedule-aware estimate: each worker just planned its
+            # weights, so its measured plane-block density prices the
+            # digit-plane sparsity the kernels actually elide
+            density = self.workers[t.name].engine.plan_density
+            est = max(estimate_step_time(cfg, t.batch, t.spec, design,
+                                         density=density)
                       * step_time_scale, 1e-9)
             per_step[t.name] = est
             self.workers[t.name].step_time = est

@@ -86,26 +86,46 @@ def decode_step_gemms(cfg, batch: int) -> List[Tuple[int, int, int]]:
     return per_block * n_blocks + [(batch, d, cfg.padded_vocab)]
 
 
-def step_cost(cfg, batch: int, spec: Optional[QuantSpec]) -> Dict[str, int]:
-    """Aggregate GemmEngine.cost over one decode step's GEMMs."""
-    total = {"int_macs": 0, "mxu_passes": 0, "acc_hbm_bytes": 0}
+def step_cost(cfg, batch: int, spec: Optional[QuantSpec],
+              density: Optional[float] = None) -> Dict[str, int]:
+    """Aggregate GemmEngine.cost over one decode step's GEMMs.
+
+    density: measured plane-block density of the worker's planned weights
+    (``ServeEngine`` exposes it as ``plan_density``); None keeps the
+    pre-sparsity upper bound of the engine's default estimate.
+    """
+    total = {"int_macs": 0, "mxu_passes": 0, "acc_hbm_bytes": 0,
+             "grid_steps": 0, "dma_bytes": 0}
     engine = get_engine(spec.impl) if spec is not None else None
     for m, k, n in decode_step_gemms(cfg, batch):
         if engine is None:       # unquantized: one pass, fused epilogue
             c = {"int_macs": m * k * n, "mxu_passes": 1,
-                 "acc_hbm_bytes": 0}
+                 "acc_hbm_bytes": 0, "grid_steps": 0,
+                 "dma_bytes": m * k + k * n + 4 * m * n}
         else:
-            c = engine.cost(m, k, n, spec)
+            c = engine.cost(m, k, n, spec, density=density)
         for key in total:
             total[key] += c[key]
     return total
 
 
 def estimate_step_time(cfg, batch: int, spec: Optional[QuantSpec],
-                       design: str = "tpu") -> float:
-    """Estimated seconds per decode step on a core.hwmodel array design."""
+                       design: str = "tpu",
+                       density: Optional[float] = None) -> float:
+    """Estimated seconds per decode step on a core.hwmodel array design.
+
+    The compute term prices the integer MACs *actually executed*: the
+    schedule-aware cost model scales them by the measured plane-block
+    density when one is given, so a tier whose plans have sparse high
+    planes is correctly estimated as cheaper than its plane budget alone
+    implies.  The memory term prices the accumulator round-trip of the
+    engine's epilogue placement (the kernels' full DMA block traffic is
+    reported in ``step_cost['dma_bytes']`` and priced by
+    ``launch.roofline.quantized_gemm_roofline``; folding it in here would
+    swamp the smoke-scale models the serving tests drive, where padded
+    block DMA dwarfs the useful work)."""
     d = hw.TABLE7[design]
-    cost = step_cost(cfg, batch, spec)
+    cost = step_cost(cfg, batch, spec, density=density)
     ops_per_s = hw.peak_tops(d) * 1e12
     return (2.0 * cost["int_macs"] / ops_per_s
             + cost["acc_hbm_bytes"] / _NOMINAL_HBM_BPS)

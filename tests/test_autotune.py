@@ -1,0 +1,144 @@
+"""Measured autotuner: JSON cache contract, select_block_sizes backing,
+miss-warning fallback, and a tiny end-to-end measured sweep."""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.engine import QuantSpec
+from repro.kernels import autotune, ops
+
+
+@pytest.fixture
+def fresh_cache():
+    """Isolate the process-wide cache; restore the default afterwards."""
+    yield
+    autotune.reset_cache()
+
+
+def test_cache_roundtrip(tmp_path, fresh_cache):
+    path = str(tmp_path / "cache.json")
+    cache = autotune.AutotuneCache(path)
+    spec = QuantSpec(planes=3)
+    cfg = {"block_m": 256, "block_k": 128, "block_n": 128,
+           "dispatch": "sparse"}
+    cache.record(256, 512, 128, spec, cfg, density=0.3)
+    cache.save()
+    loaded = autotune.AutotuneCache.load(path)
+    # density-bucket entry preferred, shape-level entry as fallback
+    hit = loaded.lookup(256, 512, 128, spec, density=0.28)
+    assert hit["dispatch"] == "sparse" and hit["block_m"] == 256
+    assert loaded.lookup(256, 512, 128, spec) is not None
+    assert loaded.lookup(999, 512, 128, spec) is None
+
+
+def test_cache_rejects_bad_entries(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text(json.dumps({
+        "version": autotune.CACHE_FORMAT_VERSION,
+        "entries": {"8x8x8|default": {"block_m": 100, "block_k": 128,
+                                      "block_n": 128}}}))
+    with pytest.raises(ValueError, match="multiple of 128"):
+        autotune.AutotuneCache.load(str(path))
+    path.write_text(json.dumps({"version": 99, "entries": {}}))
+    with pytest.raises(ValueError, match="format version"):
+        autotune.AutotuneCache.load(str(path))
+
+
+def test_select_block_sizes_consumes_cache(fresh_cache):
+    cache = autotune.AutotuneCache("mem", strict=False)
+    cache.record(640, 768, 128, None,
+                 {"block_m": 256, "block_k": 256, "block_n": 128,
+                  "dispatch": "dense"})
+    autotune.set_cache(cache)
+    assert ops.select_block_sizes(640, 768, 128) == (256, 256, 128)
+    # spec overrides still win component-wise over the tuned entry
+    spec = QuantSpec(planes=3, block_k=512)
+    assert ops.select_block_sizes(640, 768, 128, spec)[1] == 512
+    # a shape the cache misses silently falls back to the static table
+    # (non-strict: the default checked-in cache stays quiet)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert ops.select_block_sizes(64, 64, 64) == (128, 128, 128)
+
+
+def test_strict_cache_warns_once_on_miss(fresh_cache):
+    cache = autotune.AutotuneCache("explicit.json", strict=True)
+    cache.entries["1x1x1|default"] = {"block_m": 128, "block_k": 128,
+                                      "block_n": 128}
+    autotune.set_cache(cache)
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        sel = ops.select_block_sizes(4096, 4096, 512)
+        ops.select_block_sizes(4096, 4096, 512)      # same key: no re-warn
+    assert sel == (256, 512, 256)                    # static table fallback
+    hits = [w for w in rec
+            if issubclass(w.category, autotune.AutotuneCacheMissWarning)]
+    assert len(hits) == 1
+    assert "falling back to the static block table" in str(hits[0].message)
+
+
+def test_env_var_selects_cache(tmp_path, monkeypatch, fresh_cache):
+    path = tmp_path / "env_cache.json"
+    cache = autotune.AutotuneCache(str(path))
+    cache.record(320, 320, 128, None,
+                 {"block_m": 128, "block_k": 256, "block_n": 128,
+                  "dispatch": "dense"})
+    cache.save()
+    monkeypatch.setenv(autotune.ENV_VAR, str(path))
+    autotune.reset_cache()
+    got = autotune.get_cache()
+    assert got.strict is True
+    assert ops.select_block_sizes(320, 320, 128) == (128, 256, 128)
+
+
+def test_checked_in_cache_parses_and_covers_ci_shapes():
+    problems = autotune.validate(autotune.DEFAULT_CACHE_PATH)
+    assert problems == [], problems
+    cache = autotune.AutotuneCache.load(autotune.DEFAULT_CACHE_PATH)
+    assert cache.coverage(autotune.CI_SHAPES) == []
+
+
+def test_measured_sweep_records_winner(tmp_path, fresh_cache):
+    """End-to-end measured autotune on a tiny shape: every candidate runs
+    the real kernels (interpret mode), the winner lands in the cache and
+    select_block_sizes starts serving it."""
+    cache = autotune.AutotuneCache(str(tmp_path / "t.json"))
+    autotune.set_cache(cache)
+    spec = QuantSpec(planes=2)
+    win = autotune.autotune_gemm(128, 128, 128, spec, cache=cache, iters=1)
+    assert win["dispatch"] in ("sparse", "dense")
+    assert win["candidates"] >= 2
+    assert 0.0 <= win["density"] <= 1.0
+    hit = cache.lookup(128, 128, 128, spec)
+    assert (hit["block_m"], hit["block_k"], hit["block_n"]) == \
+        (win["block_m"], win["block_k"], win["block_n"])
+    assert ops.select_block_sizes(128, 128, 128, spec) == \
+        (win["block_m"], win["block_k"], win["block_n"])
+    cache.save()
+    assert json.load(open(cache.path))["version"] == \
+        autotune.CACHE_FORMAT_VERSION
+
+
+def test_auto_dispatch_honors_cache_override(rng, fresh_cache):
+    """dispatch='auto' consults the density-bucket entry: force 'dense'
+    for a low-density plan and check both routes stay bit-identical (the
+    override changes the kernel, never the math)."""
+    import jax.numpy as jnp
+    x = jnp.asarray(rng.normal(0, 1, size=(4, 96)).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 0.05, size=(96, 64)).astype(np.float32))
+    spec = QuantSpec(planes=2, impl="pallas_sparse")
+    plan = ops.plan_dense_weight(w, spec)
+    density = plan["schedule"].shape[0] / plan["mask"].size
+    cache = autotune.AutotuneCache("mem")
+    cache.record(64, 96, 4, spec,
+                 {"block_m": 128, "block_k": 128, "block_n": 128,
+                  "dispatch": "dense"}, density=density)
+    autotune.set_cache(cache)
+    forced = np.asarray(ops.planned_dense_apply(plan, x, spec, 64,
+                                                dispatch="auto"))
+    autotune.reset_cache()
+    free = np.asarray(ops.planned_dense_apply(plan, x, spec, 64,
+                                              dispatch="auto"))
+    np.testing.assert_array_equal(forced, free)

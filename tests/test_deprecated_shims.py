@@ -70,7 +70,8 @@ def test_module_getattr_still_raises_for_typos():
 
 def test_quant_impls_tuple_lists_registered_engines():
     assert L.QUANT_IMPLS == \
-        ("ref", "planes", "int8", "pallas", "pallas_fused")
+        ("ref", "planes", "int8", "pallas", "pallas_fused",
+         "pallas_sparse")
 
 
 def test_quantstate_activate_warns_and_spec_maps_aliases():

@@ -98,7 +98,8 @@ def test_spec_is_hashable_cache_key():
 
 def test_registry_has_all_engines():
     assert engine_names() == IMPLS == \
-        ("ref", "planes", "int8", "pallas", "pallas_fused")
+        ("ref", "planes", "int8", "pallas", "pallas_fused",
+         "pallas_sparse")
     with pytest.raises(ValueError, match="unknown quant impl"):
         get_engine("nope")
 
