@@ -344,6 +344,75 @@ def kernel_bw_gemm_sparse():
     return out
 
 
+def kernel_bw_gemm_pipelined():
+    """v3 double-buffered schedule pipelining + k_major B-reuse ordering
+    vs the v2 sparse kernels on the Table-III-like density sweep: at every
+    density the pipelined kernels (both schedule orders) must be
+    *bit-identical* to v2, while the overlap-aware cost model's
+    grid_steps / dma_bytes drop with density and the k_major order's
+    b_dma_elided counts the B-block DMAs the global k-walk reuses away
+    (positive whenever several m-blocks share a k-block)."""
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core import quant
+    from repro.engine import QuantSpec, get_engine
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    m, k, n = 256, 256, 128
+    b = rng.integers(-128, 128, size=(k, n)).astype(np.int8)
+    scale = rng.uniform(0.5, 2.0, size=(m,)).astype(np.float32)
+    bias = rng.normal(0, 0.1, size=(m,)).astype(np.float32)
+    eng = get_engine("pallas_pipelined")
+    out = {"sweep": {}}
+    for planes in (1, 2, 3, 4):
+        w = (rng.standard_t(4, size=(m, k)) * 0.02).astype(np.float32)
+        qw, _ = quant.quantize_to_planes(jnp.asarray(w), planes=planes)
+        a = np.asarray(qw).astype(np.int8)
+        pm = ops.plan_operand(a, block_m=128, block_k=128, order="m_major")
+        pk = ops.plan_operand(a, block_m=128, block_k=128, order="k_major")
+        v2 = np.asarray(ops.bw_gemm_sparse_fused(
+            pm, jnp.asarray(b), scale, bias, activation="silu",
+            interpret=True))
+        pipe_m = np.asarray(ops.bw_gemm_sparse_fused_pipelined(
+            pm, jnp.asarray(b), scale, bias, activation="silu",
+            interpret=True))
+        pipe_k = np.asarray(ops.bw_gemm_sparse_fused_pipelined(
+            pk, jnp.asarray(b), scale, bias, activation="silu",
+            interpret=True))
+        spec = QuantSpec(planes=planes, block_m=128, block_k=128)
+        # measured (schedule-exact) overlap-aware counters per order
+        cost_k = eng.cost(m, k, n, spec, plan=_plan_record(pk))
+        cost_m = eng.cost(m, k, n, spec, plan=_plan_record(pm))
+        st_k = ops.schedule_stats(pk.schedule, pk.mask)
+        out["sweep"][f"planes{planes}"] = {
+            "bit_identical_m_major": bool((pipe_m == v2).all()),
+            "bit_identical_k_major": bool((pipe_k == v2).all()),
+            "plane_block_density": round(pk.density(), 4),
+            "grid_steps": cost_k["grid_steps"],
+            "dma_bytes": cost_k["dma_bytes"],
+            "b_dma_elided": cost_k["b_dma_elided"],
+            "b_dma_elided_m_major": cost_m["b_dma_elided"],
+            "b_fetches": st_k["b_fetches"],
+        }
+    sweep = [out["sweep"][f"planes{p}"] for p in (1, 2, 3, 4)]
+    out["dma_drops_with_density"] = all(
+        x["dma_bytes"] <= y["dma_bytes"] for x, y in zip(sweep, sweep[1:]))
+    out["steps_drop_with_density"] = all(
+        x["grid_steps"] <= y["grid_steps"]
+        for x, y in zip(sweep, sweep[1:]))
+    # two m-blocks share each k-block here, so the k_major walk must elide
+    out["k_major_elides_b_dma"] = all(
+        x["b_dma_elided"] > 0 for x in sweep)
+    return out
+
+
+def _plan_record(planned):
+    """Adapt a PlannedOperand to the plan-record dict cost() reads."""
+    import numpy as np
+    return {"mask": np.asarray(planned.mask),
+            "schedule": np.asarray(planned.schedule)}
+
+
 def kernel_quant_planes():
     import numpy as np
     import jax.numpy as jnp
@@ -431,6 +500,7 @@ BENCHES = [
     ("kernel.bw_gemm_interpret", kernel_bw_gemm),
     ("kernel.bw_gemm_fused", kernel_bw_gemm_fused),
     ("kernel.bw_gemm_sparse", kernel_bw_gemm_sparse),
+    ("kernel.bw_gemm_pipelined", kernel_bw_gemm_pipelined),
     ("kernel.plane_bounded_quant", kernel_quant_planes),
     ("e2e.train_step_smoke", train_step_smoke),
     ("e2e.quantized_forward_kernel", model_quantized_forward_kernel),
@@ -452,7 +522,7 @@ BENCHES = [
 #   PYTHONPATH=src python -m benchmarks.run --write-baseline
 #
 # benchmarks/check_baseline.py does the tolerance diff (CI bench job).
-BASELINE_VERSION = 4
+BASELINE_VERSION = 5
 
 # wall-time-independent lanes: everything except the e2e timing lanes and
 # the slow QAT ablation (whose losses depend on the accelerator backend)

@@ -27,6 +27,14 @@ Registered engines:
                     prefetch (bw_gemm_sparse_fused): skipped plane-blocks
                     cost zero DMA and zero grid steps; falls back to the
                     dense fused kernel for high-density plans.
+    pallas_pipelined -- the v3 double-buffered kernels on k_major
+                    schedules (bw_gemm_sparse_fused_pipelined): step s+1's
+                    plane gather overlaps step s's MXU pass through manual
+                    DMA + semaphores, and the global k-block visit order
+                    lets consecutive steps reuse the resident B block
+                    without a DMA (cost reports the savings as
+                    ``b_dma_elided``); falls back to the dense fused
+                    kernel for high-density plans.
 
 The kernel engines have three tiers (mirroring the old implicit routing):
 a pre-planned array record (traceable under jit/scan), eager concrete
@@ -200,8 +208,10 @@ class GemmEngine:
         ``int_macs`` (integer MACs actually executed — density-scaled on
         the kernel engines), ``acc_hbm_bytes`` (epilogue-placement HBM
         round-trip), ``grid_steps`` (Pallas grid iterations; 0 for the
-        jnp engines) and ``dma_bytes`` (HBM block traffic the BlockSpecs
-        imply).
+        jnp engines), ``dma_bytes`` (HBM block traffic the BlockSpecs /
+        manual copies imply) and ``b_dma_elided`` (B-block copies the
+        k_major pipelined schedule order skips by operand reuse — already
+        subtracted from ``dma_bytes``; 0 everywhere else).
         """
         passes = self._passes(spec)
         acc = self._acc_hbm_bytes(m, n)
@@ -211,6 +221,7 @@ class GemmEngine:
             "acc_hbm_bytes": acc,
             "grid_steps": 0,     # jnp engines: one fused XLA dot, no grid
             "dma_bytes": m * k + k * n + 4 * m * n + acc,
+            "b_dma_elided": 0,
         }
 
     @staticmethod
@@ -268,10 +279,11 @@ class PallasEngine(GemmEngine):
     uses_plans = True
     fused = False
     dispatch = "dense"           # sparse-schedule routing (pallas_sparse)
+    order = "m_major"            # schedule visit order the plans carry
 
     def plan(self, w, spec):
         from repro.kernels import ops
-        return ops.plan_dense_weight(w, spec)
+        return ops.plan_dense_weight(w, spec, order=self.order)
 
     def apply(self, plan_or_w, x, spec, *, n_out=None, bias=None,
               activation=None, out_dtype=jnp.float32, interpret=None):
@@ -283,7 +295,7 @@ class PallasEngine(GemmEngine):
             return ops.planned_dense_apply(
                 plan_or_w, x, spec, n_out, bias=bias, activation=activation,
                 out_dtype=out_dtype, interpret=interpret, fused=self.fused,
-                dispatch=self.dispatch)
+                dispatch=self.dispatch, order=self.order)
         w = plan_or_w
         if _is_traced(x, w):
             # traced without a plan (dry-run cost analysis, jit'd train
@@ -295,7 +307,7 @@ class PallasEngine(GemmEngine):
         return ops.quantized_dense(
             x, w, spec, bias=bias, activation=activation,
             out_dtype=out_dtype, interpret=interpret, fused=self.fused,
-            dispatch=self.dispatch)
+            dispatch=self.dispatch, order=self.order)
 
     def _passes(self, spec):
         return active_planes(spec)
@@ -336,6 +348,7 @@ class PallasEngine(GemmEngine):
             # block (int8); plus one float out block per (m, n) tile
             "dma_bytes": int(mb * nb * kb * (bwn * bm * bk + bk * bn)
                              + mb * nb * bm * bn * 4 + acc),
+            "b_dma_elided": 0,
         }
 
 
@@ -383,11 +396,86 @@ class PallasSparseEngine(PallasFusedEngine):
             # plus one float out block per (m, n) tile
             "dma_bytes": int(steps * nb * (bm * bk + bk * bn)
                              + mb * nb * bm * bn * 4),
+            "b_dma_elided": 0,
+        }
+
+
+class PallasPipelinedEngine(PallasSparseEngine):
+    """v3 double-buffered schedule pipelining on k_major schedules.
+
+    ``plan`` builds schedules in k_major order (global k-block walk:
+    consecutive steps share a B block across output rows, so the kernel
+    reuses the resident VMEM buffer instead of re-DMAing it) and ``apply``
+    routes through ``planned_dense_apply(dispatch='auto',
+    order='k_major')`` — the pipelined kernels when the density proxy (or
+    a measured autotune winner) says sparse pays, the dense fused kernel
+    otherwise.
+
+    The cost model is *overlap-aware*: the double buffering issues step
+    s+1's gather under step s's MXU pass, so ``dma_bytes`` counts only
+    the copies actually issued — real scheduled plane-blocks (sentinels
+    and padding issue nothing) plus one B fetch per k-block *run* rather
+    than per step; the B copies saved by the reuse are reported as
+    ``b_dma_elided``.  With a plan record in hand both counters are exact
+    (read off the schedule's B_FETCH column); without one they are
+    estimated from the density.
+    """
+
+    name = "pallas_pipelined"
+    order = "k_major"
+
+    @staticmethod
+    def _plan_schedule(plan):
+        if plan is None:
+            return None
+        sched = plan["schedule"] if isinstance(plan, dict) \
+            else getattr(plan, "schedule", None)
+        if sched is None:
+            return None
+        import numpy as np
+        sched = np.asarray(sched)
+        # stacked per-layer plans ([layers, L, 9]) fall back to the
+        # density estimate: per-layer counters would need per-layer shapes
+        if sched.ndim != 2 or sched.shape[1] < 9:
+            return None
+        return sched
+
+    def cost(self, m, k, n, spec, *, density=None, plan=None):
+        if density is None:
+            density = self._plan_density(plan)
+        bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec)
+        bwn = spec.num_digits
+        if density is None:
+            density = active_planes(spec) / bwn
+        sched = self._plan_schedule(plan)
+        if sched is not None:             # measured: exact schedule counts
+            steps = sched.shape[0]
+            real = int((sched[:, 3] != 0).sum())      # weight column
+            b_fetches = int(sched[:, 8].sum())        # B_FETCH column
+        else:                             # estimated from density
+            real = max(int(round(density * bwn * mb * kb)), 0)
+            steps = max(real, mb)         # sentinels keep empty rows alive
+            # one B fetch per k-block visited (the k_major walk touches
+            # each k-block in one contiguous run per j iteration)
+            b_fetches = min(kb, real)
+        return {
+            "mxu_passes": self._passes(spec),
+            "int_macs": int(density * bwn * m * k * n),
+            "acc_hbm_bytes": 0,
+            "grid_steps": steps * nb,
+            # per real step: ONE digit plane block; B blocks only on the
+            # k-block boundaries the schedule did not elide; one float out
+            # block per (m, n) tile (sentinel rows included — their zeros
+            # are still flushed)
+            "dma_bytes": int(real * nb * bm * bk + b_fetches * nb * bk * bn
+                             + mb * nb * bm * bn * 4),
+            "b_dma_elided": max(real - b_fetches, 0) * nb,
         }
 
 
 for _engine in (RefEngine(), PlanesEngine(), Int8Engine(), PallasEngine(),
-                PallasFusedEngine(), PallasSparseEngine()):
+                PallasFusedEngine(), PallasSparseEngine(),
+                PallasPipelinedEngine()):
     register(_engine)
 
 assert engine_names() == IMPLS, (engine_names(), IMPLS)

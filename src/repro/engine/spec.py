@@ -30,7 +30,8 @@ __all__ = ["QuantSpec", "IMPLS", "ACT_QUANT_POLICIES"]
 
 # Registered GemmEngine strategy names (repro.engine.registry registers one
 # engine per entry; the registry asserts this tuple stays in sync).
-IMPLS = ("ref", "planes", "int8", "pallas", "pallas_fused", "pallas_sparse")
+IMPLS = ("ref", "planes", "int8", "pallas", "pallas_fused", "pallas_sparse",
+         "pallas_pipelined")
 
 # How activations are quantized at matmul time:
 #   per_tensor -- one scale for the whole activation tensor (folds into the

@@ -7,15 +7,23 @@
                   -- the same contracts through a compacted sparse block
                      schedule (scalar prefetch): skipped plane-blocks cost
                      zero DMA and zero grid steps
+  bw_gemm_sparse_pipelined / bw_gemm_sparse_fused_pipelined
+                  -- v3 double-buffered pipelining: manual async copies +
+                     DMA semaphores overlap step s+1's gather with step
+                     s's MXU pass, and the k_major schedule order reuses
+                     resident B blocks across output rows
   ops             -- public jitted wrappers (padding, planning cache, masks,
-                     schedules, per-shape block selection, the
-                     quantized-dense dispatch); spec-level entry points
-                     take a repro.engine.QuantSpec
-  autotune        -- measured block-size / dispatch autotuner + JSON cache
+                     schedules + visit orders, per-shape block selection,
+                     the quantized-dense dispatch); spec-level entry
+                     points take a repro.engine.QuantSpec
+  autotune        -- measured block-size / dispatch / (order, pipelined)
+                     autotuner + backend-tagged JSON cache
   ref             -- pure-jnp oracles
 """
 from . import ops, ref  # noqa: F401
 from .ops import (bw_gemm, quant_gemm, plan_operand, encode_planes,  # noqa: F401
                   bw_gemm_fused, quant_gemm_fused, quantized_dense,
-                  bw_gemm_sparse, bw_gemm_sparse_fused, build_schedule,
-                  plan_params, planned_dense_apply, select_block_sizes)
+                  bw_gemm_sparse, bw_gemm_sparse_fused,
+                  bw_gemm_sparse_pipelined, bw_gemm_sparse_fused_pipelined,
+                  build_schedule, plan_params, planned_dense_apply,
+                  select_block_sizes)

@@ -3,11 +3,19 @@
 ``select_block_sizes``' static dispatch table guesses block shapes from
 (M, K, N) thresholds; this module replaces guessing with measurement, in
 the spirit of the AWQ kernel work's measured-autotune discipline: sweep
-``(block_m, block_k, block_n, sparse-vs-dense dispatch)`` candidates on
-the real kernels (interpret mode off-TPU, compiled on TPU), time them,
-and persist the winners to a JSON cache keyed by
+``(block_m, block_k, block_n, dispatch, schedule order, pipelined)``
+candidates on the real kernels (interpret mode off-TPU, compiled on
+TPU), time them, and persist the winners to a JSON cache keyed by
 
-    (M, K, N) x spec.plan_key() x density-bucket
+    (M, K, N) x spec.plan_key() x measuring backend x density-bucket
+
+Every key (and entry) carries the **measuring backend** — ``interpret``
+off-TPU, the platform string (e.g. ``tpu``) on real hardware — so one
+cache file can hold interpret-mode CI winners *and* TPU-measured winners
+side by side: lookups only ever see entries measured on the backend they
+will run on, and a TPU tuning run appends to the same file the CI lane
+validates.  Entries without a backend tag fail validation (and loading —
+the cache format version was bumped when tags landed).
 
 The cache then *backs* the two dispatch seams of the execution path:
 
@@ -43,13 +51,14 @@ import numpy as np
 
 __all__ = ["AutotuneCache", "AutotuneCacheMissWarning", "get_cache",
            "set_cache", "reset_cache", "cache_key", "density_bucket",
-           "candidate_configs", "autotune_gemm", "CI_SHAPES",
-           "DEFAULT_CACHE_PATH", "ENV_VAR"]
+           "candidate_configs", "autotune_gemm", "current_backend",
+           "CI_SHAPES", "DEFAULT_CACHE_PATH", "ENV_VAR"]
 
 ENV_VAR = "REPRO_AUTOTUNE_CACHE"
 DEFAULT_CACHE_PATH = os.path.join(os.path.dirname(__file__),
                                   "autotune_cache.json")
-CACHE_FORMAT_VERSION = 1
+# v2: backend-tagged keys/entries + (order, pipelined) config knobs
+CACHE_FORMAT_VERSION = 2
 
 # Upper edges of the plane-block density buckets a measurement is filed
 # under (density = nnz plane-blocks / total plane-blocks of the plan).
@@ -68,6 +77,19 @@ CI_SHAPES = (
 class AutotuneCacheMissWarning(UserWarning):
     """An explicitly configured autotune cache had no entry for a shape;
     the static block-size table was used instead."""
+
+
+def current_backend() -> str:
+    """The measuring-backend tag for this process.
+
+    ``interpret`` anywhere the kernels run in interpret mode (any non-TPU
+    backend: interpret timings rank scheduled *work*, not MXU wall time),
+    else the platform string so distinct TPU generations could in
+    principle carry distinct entries.
+    """
+    import jax
+    backend = jax.default_backend()
+    return backend if backend == "tpu" else "interpret"
 
 
 def density_bucket(density: float) -> float:
@@ -89,9 +111,11 @@ def _plan_part(spec=None) -> str:
 
 
 def cache_key(m: int, k: int, n: int, spec=None,
-              density: Optional[float] = None) -> str:
-    """Cache key: shape x spec plan fields x optional density bucket."""
-    key = f"{m}x{k}x{n}|{_plan_part(spec)}"
+              density: Optional[float] = None,
+              backend: Optional[str] = None) -> str:
+    """Cache key: shape x spec plan fields x measuring backend x optional
+    density bucket.  backend=None uses this process's backend tag."""
+    key = f"{m}x{k}x{n}|{_plan_part(spec)}|{backend or current_backend()}"
     if density is not None:
         key += f"|d{density_bucket(float(density))}"
     return key
@@ -136,14 +160,25 @@ class AutotuneCache:
                 raise ValueError(
                     f"autotune cache entry {key!r}: {field}={v!r} is not a "
                     f"positive multiple of 128")
-        if entry.get("dispatch") not in (None, "sparse", "dense"):
+        if entry.get("dispatch") not in (None, "sparse", "dense",
+                                         "pipelined"):
             raise ValueError(f"autotune cache entry {key!r}: bad dispatch "
                              f"{entry.get('dispatch')!r}")
+        if entry.get("order") not in (None, "m_major", "k_major"):
+            raise ValueError(f"autotune cache entry {key!r}: bad order "
+                             f"{entry.get('order')!r}")
+        backend = entry.get("backend")
+        if not isinstance(backend, str) or not backend:
+            raise ValueError(
+                f"autotune cache entry {key!r} is missing its measuring-"
+                f"backend tag (re-measure with --sweep; one cache file "
+                f"carries interpret and TPU entries side by side)")
 
     def lookup(self, m: int, k: int, n: int, spec=None,
                density: Optional[float] = None) -> Optional[dict]:
-        """Best entry for a GEMM: the density-bucket key when a density is
-        given (falling back to the shape-level key), else the shape key."""
+        """Best entry for a GEMM *measured on this backend*: the
+        density-bucket key when a density is given (falling back to the
+        shape-level key), else the shape key."""
         keys = []
         if density is not None:
             keys.append(cache_key(m, k, n, spec, density))
@@ -161,16 +196,23 @@ class AutotuneCache:
         return None
 
     def record(self, m: int, k: int, n: int, spec, config: dict,
-               density: Optional[float] = None) -> None:
-        self.entries[cache_key(m, k, n, spec)] = dict(config)
+               density: Optional[float] = None,
+               backend: Optional[str] = None) -> None:
+        backend = backend or current_backend()
+        config = dict(config, backend=config.get("backend") or backend)
+        self.entries[cache_key(m, k, n, spec, backend=backend)] = \
+            dict(config)
         if density is not None:
-            self.entries[cache_key(m, k, n, spec, density)] = dict(config)
+            self.entries[cache_key(m, k, n, spec, density,
+                                   backend=backend)] = dict(config)
 
-    def coverage(self, shapes: Iterable[Tuple[int, int, int]],
-                 spec=None) -> List[Tuple[int, int, int]]:
-        """Shapes with no shape-level entry (CI coverage check)."""
+    def coverage(self, shapes: Iterable[Tuple[int, int, int]], spec=None,
+                 backend: Optional[str] = None) -> \
+            List[Tuple[int, int, int]]:
+        """Shapes with no shape-level entry for ``backend`` (CI check)."""
         return [s for s in shapes
-                if cache_key(*s, spec=spec) not in self.entries]
+                if cache_key(*s, spec=spec, backend=backend)
+                not in self.entries]
 
     def save(self, path: Optional[str] = None) -> str:
         path = path or self.path
@@ -223,8 +265,21 @@ def reset_cache() -> None:
 # Measured sweep
 # ---------------------------------------------------------------------------
 
+# (dispatch, order, pipelined) route combos the sweep measures per block
+# shape.  order/pipelined are first-class knobs: an m_major pipelined
+# route prices pure double-buffering, the k_major one adds B-block reuse
+# (the v2 'sparse' route requires m_major; 'dense' ignores the schedule).
+ROUTE_CANDIDATES = (
+    ("dense", "m_major", False),
+    ("sparse", "m_major", False),
+    ("pipelined", "m_major", True),
+    ("pipelined", "k_major", True),
+)
+
+
 def candidate_configs(m: int, k: int, n: int) -> List[dict]:
-    """Candidate (block_m, block_k, block_n, dispatch) points.
+    """Candidate (block_m, block_k, block_n, dispatch, order, pipelined)
+    points.
 
     Blocks stay MXU-aligned (multiples of 128) and never exceed the padded
     problem dims by more than one block (bigger would be pure padding).
@@ -238,9 +293,10 @@ def candidate_configs(m: int, k: int, n: int) -> List[dict]:
     for bm in sizes(m, (128, 256)):
         for bk in sizes(k):
             for bn in sizes(n, (128, 256)):
-                for dispatch in ("dense", "sparse"):
+                for dispatch, order, pipelined in ROUTE_CANDIDATES:
                     out.append({"block_m": bm, "block_k": bk, "block_n": bn,
-                                "dispatch": dispatch})
+                                "dispatch": dispatch, "order": order,
+                                "pipelined": pipelined})
     return out
 
 
@@ -291,13 +347,16 @@ def autotune_gemm(m: int, k: int, n: int, spec=None, a=None, b=None, *,
     bits = spec.bits if spec is not None else 8
     scale = np.ones((m,), np.float32)
 
+    runners = {"dense": ops.bw_gemm_fused,
+               "sparse": ops.bw_gemm_sparse_fused,
+               "pipelined": ops.bw_gemm_sparse_fused_pipelined}
     results = []
     for config in candidate_configs(m, k, n):
         planned = ops.plan_operand(a, encoding=encoding,
                                    block_m=config["block_m"],
-                                   block_k=config["block_k"], bits=bits)
-        run = (ops.bw_gemm_sparse_fused if config["dispatch"] == "sparse"
-               else ops.bw_gemm_fused)
+                                   block_k=config["block_k"], bits=bits,
+                                   order=config["order"])
+        run = runners[config["dispatch"]]
 
         def fn(planned=planned, run=run, bn=config["block_n"]):
             return run(planned, b, scale, block_n=bn, interpret=interpret)
@@ -312,7 +371,7 @@ def autotune_gemm(m: int, k: int, n: int, spec=None, a=None, b=None, *,
         results.append((secs, config, proxy))
     secs, config, density = min(results, key=lambda r: r[0])
     winner = dict(config, us=round(secs * 1e6), density=round(density, 4),
-                  candidates=len(results))
+                  candidates=len(results), backend=current_backend())
     cache = cache if cache is not None else get_cache()
     cache.record(m, k, n, spec, winner, density=density)
     return winner
@@ -323,17 +382,26 @@ def autotune_gemm(m: int, k: int, n: int, spec=None, a=None, b=None, *,
 # ---------------------------------------------------------------------------
 
 def validate(path: Optional[str] = None) -> List[str]:
-    """Parse the cache and check CI-shape coverage; returns problems."""
+    """Parse the cache and check CI-shape coverage; returns problems.
+
+    Loading already rejects entries without a measuring-backend tag (the
+    CI autotune-cache lane fails on any untagged entry); the coverage
+    check asks for interpret-mode entries — the ones CI itself can
+    exercise — regardless of the validating host's backend.
+    """
     path = path or os.environ.get(ENV_VAR) or DEFAULT_CACHE_PATH
     try:
+        # load is the tag gatekeeper: _check_entry raises on any entry
+        # missing its measuring-backend tag, so an untagged cache surfaces
+        # here as a parse failure naming the offending entry
         cache = AutotuneCache.load(path)
     except (ValueError, OSError, json.JSONDecodeError) as e:
         return [f"cache {path!r} failed to parse: {e}"]
     if not cache.entries:
         return [f"cache {path!r} is missing or empty"]
     return [f"cache {path!r} does not cover CI benchmark shape {shape} "
-            f"({len(cache.entries)} entries)"
-            for shape in cache.coverage(CI_SHAPES)]
+            f"for backend 'interpret' ({len(cache.entries)} entries)"
+            for shape in cache.coverage(CI_SHAPES, backend="interpret")]
 
 
 def main(argv=None) -> int:
@@ -357,6 +425,7 @@ def main(argv=None) -> int:
         if os.path.exists(path):
             cache = AutotuneCache.load(path)
             cache.path = path
+        backend = current_backend()
         for m, k, n in CI_SHAPES:
             # tune the default plan grid (spec=None) plus the spec'd grids
             # the benches sweep: one entry per density bucket reached
@@ -364,10 +433,10 @@ def main(argv=None) -> int:
                 spec = QuantSpec(planes=planes)
                 win = autotune_gemm(m, k, n, spec, cache=cache,
                                     iters=args.iters, seed=0)
-                print(f"{m}x{k}x{n} planes={planes}: {win}")
+                print(f"[{backend}] {m}x{k}x{n} planes={planes}: {win}")
             win = autotune_gemm(m, k, n, None, cache=cache,
                                 iters=args.iters, seed=0)
-            print(f"{m}x{k}x{n} default: {win}")
+            print(f"[{backend}] {m}x{k}x{n} default: {win}")
         cache.save(path)
         print(f"wrote {path} ({len(cache.entries)} entries)")
         return 0

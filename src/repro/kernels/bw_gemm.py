@@ -31,18 +31,29 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["bw_gemm", "bw_gemm_fused", "bw_gemm_sparse",
-           "bw_gemm_sparse_fused", "EPILOGUE_ACTIVATIONS", "SCHED_COLS"]
+           "bw_gemm_sparse_fused", "bw_gemm_sparse_pipelined",
+           "bw_gemm_sparse_fused_pipelined", "EPILOGUE_ACTIVATIONS",
+           "SCHED_COLS"]
 
-# Column layout of the compacted sparse block schedule (int32 [L, 6]): one
-# row per non-zero (plane, m-block, k-block) of the occupancy mask, ordered
-# by m-block row (CSR-of-blocks), plus one zero-weight sentinel per empty
-# m-block row so every output block is visited and written.  WEIGHT is the
-# deferred-shift plane scale radix**plane (0 for sentinels/padding), FIRST /
-# LAST flag the row boundaries that drive accumulator init and the fused
-# epilogue.  ops.build_schedule constructs it from a plane-block mask.
+# Column layout of the compacted sparse block schedule (int32 [L, 9]): one
+# row per non-zero (plane, m-block, k-block) of the occupancy mask, plus one
+# zero-weight sentinel per empty m-block row so every output block is
+# visited and written.  WEIGHT is the deferred-shift plane scale
+# radix**plane (0 for sentinels/padding); FIRST / LAST flag each output
+# row's overall first/last scheduled step, driving accumulator init and the
+# (fused) epilogue.  The last three columns exist for the *pipelined*
+# kernels and are baked in by ops.build_schedule's annotation pass:
+# D_SLOT / B_SLOT name which of the two double-buffered VMEM scratch slots
+# a step's digit plane / B block live in (alternating per fetch), and
+# B_FETCH is 1 only when the step's k-block differs from the currently
+# resident one — consecutive same-k steps reuse the resident B buffer and
+# skip the DMA entirely (the "k_major" schedule order maximises those
+# runs).  The v2 kernels (bw_gemm_sparse[_fused]) read only the first six
+# columns.
 SCHED_COLS = {"plane": 0, "row": 1, "kblk": 2, "weight": 3,
-              "first": 4, "last": 5}
-_PLANE, _ROW, _KBLK, _WEIGHT, _FIRST, _LAST = range(6)
+              "first": 4, "last": 5, "d_slot": 6, "b_slot": 7, "b_fetch": 8}
+(_PLANE, _ROW, _KBLK, _WEIGHT, _FIRST, _LAST,
+ _DSLOT, _BSLOT, _BFETCH) = range(9)
 
 # Activations the fused epilogue can apply on the dequantised accumulator.
 # Single source of truth: repro.models.layers.activation resolves names
@@ -259,14 +270,15 @@ def bw_gemm_sparse(digits, b, schedule, *, block_m: int = 128,
 
     digits:   int8 [BW, M, K] encoded planes of the multiplicand.
     b:        int8 [K, N].
-    schedule: int32 [L, 6] compacted block schedule (see SCHED_COLS);
-              the radix is baked into the WEIGHT column at build time.
+    schedule: int32 [L, >=6] compacted block schedule in "m_major" order
+              (see SCHED_COLS); the radix is baked into the WEIGHT column
+              at build time.  Only the first six columns are read.
     """
     bw_n, m, k = digits.shape
     k2, n = b.shape
     assert k == k2
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    assert schedule.ndim == 2 and schedule.shape[1] == 6, schedule.shape
+    assert schedule.ndim == 2 and schedule.shape[1] >= 6, schedule.shape
     steps = schedule.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -349,7 +361,7 @@ def bw_gemm_sparse_fused(digits, b, schedule, scale, bias=None, scale_n=None,
     k2, n = b.shape
     assert k == k2
     assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    assert schedule.ndim == 2 and schedule.shape[1] == 6, schedule.shape
+    assert schedule.ndim == 2 and schedule.shape[1] >= 6, schedule.shape
     assert activation in EPILOGUE_ACTIVATIONS, activation
     assert scale.shape == (m, 1), scale.shape
     has_scale_n = scale_n is not None
@@ -383,6 +395,297 @@ def bw_gemm_sparse_fused(digits, b, schedule, scale, bias=None, scale_n=None,
         out_specs=pl.BlockSpec((block_m, block_n),
                                lambda j, s, sched: (sched[s, _ROW], j)),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.dtype(out_dtype)),
+        interpret=interpret,
+    )(jnp.asarray(schedule, jnp.int32), digits, b,
+      scale.astype(jnp.float32), scale_n.astype(jnp.float32),
+      bias.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# v3: double-buffered schedule pipelining (manual DMA + semaphores)
+# ---------------------------------------------------------------------------
+# The v2 kernels above compact the schedule, but the walk is still serial:
+# each grid step's single-plane BlockSpec gather must land before the MXU
+# pass can start, so the sparsity win is bounded by DMA *latency* rather
+# than bandwidth.  The pipelined kernels keep PrefetchScalarGridSpec for
+# the schedule but take digits / B / out in ANY (HBM) memory space and
+# stage blocks through double-buffered VMEM scratch themselves: while step
+# s runs on the MXU out of slot p, step s+1's gather is already in flight
+# into slot 1-p (pltpu.make_async_copy + per-slot DMA semaphores; the
+# schedule's D_SLOT/B_SLOT/B_FETCH columns bake the slot rotation and the
+# B-reuse elision in, so the kernel body is pure pl.when plumbing).
+#
+# Accumulation moves from the out BlockSpec to a VMEM-resident panel of
+# ALL m-block accumulators ([M_pad, block_n] int32 scratch).  That lifts
+# the v2 kernels' TPU-legality constraint that an output block may only be
+# revisited in *consecutive* grid steps — which is exactly what the
+# "k_major" schedule order violates (it walks k-blocks globally so
+# consecutive steps share a B block across different output rows).  FIRST
+# zeroes a row's panel slice at its overall first scheduled step, LAST
+# flushes it (running the fused epilogue first) through a staging buffer
+# to HBM — the FIRST/LAST protocol survives the software-pipeline skew
+# because the flags travel in the same prefetched schedule the DMA
+# issue/wait predicates read.  Sentinel and padding steps (weight 0,
+# B_FETCH 0) issue no DMA and wait on nothing: a skipped plane-block costs
+# zero bandwidth, zero semaphore traffic and zero MXU work.
+
+
+def _pipelined_dma_plumbing(sched_ref, d_hbm, b_hbm, d_buf, b_buf, d_sem,
+                            b_sem, *, block_m, block_n, block_k, steps):
+    """Shared prologue: warm-up + next-step prefetch, current-step waits.
+
+    Returns (d, b) int32 VMEM tiles for the current step (garbage on
+    weight-0 steps — callers must predicate the MXU pass)."""
+    j = pl.program_id(0)
+    s = pl.program_id(1)
+
+    def d_copy(step):
+        slot = sched_ref[step, _DSLOT]
+        return pltpu.make_async_copy(
+            d_hbm.at[sched_ref[step, _PLANE],
+                     pl.ds(sched_ref[step, _ROW] * block_m, block_m),
+                     pl.ds(sched_ref[step, _KBLK] * block_k, block_k)],
+            d_buf.at[slot], d_sem.at[slot])
+
+    def b_copy(step):
+        slot = sched_ref[step, _BSLOT]
+        return pltpu.make_async_copy(
+            b_hbm.at[pl.ds(sched_ref[step, _KBLK] * block_k, block_k),
+                     pl.ds(j * block_n, block_n)],
+            b_buf.at[slot], b_sem.at[slot])
+
+    @pl.when(s == 0)
+    def _warmup():                       # step 0 has no predecessor
+        @pl.when(sched_ref[0, _WEIGHT] != 0)
+        def _():
+            d_copy(0).start()
+
+        @pl.when(sched_ref[0, _BFETCH] == 1)
+        def _():
+            b_copy(0).start()
+
+    @pl.when(s + 1 < steps)
+    def _prefetch():                     # issue s+1's gather under s's MXU
+        @pl.when(sched_ref[s + 1, _WEIGHT] != 0)
+        def _():
+            d_copy(s + 1).start()
+
+        @pl.when(sched_ref[s + 1, _BFETCH] == 1)
+        def _():
+            b_copy(s + 1).start()
+
+    # wait only for what was started: the issue predicates at step s-1 (or
+    # the warm-up) read the same schedule cells, so starts and waits pair
+    # exactly once per slot
+    @pl.when(sched_ref[s, _WEIGHT] != 0)
+    def _wait_d():
+        d_copy(s).wait()
+
+    @pl.when(sched_ref[s, _BFETCH] == 1)
+    def _wait_b():
+        b_copy(s).wait()
+
+    d = d_buf[sched_ref[s, _DSLOT]].astype(jnp.int32)
+    b = b_buf[sched_ref[s, _BSLOT]].astype(jnp.int32)
+    return d, b
+
+
+def _sparse_pipelined_kernel(sched_ref, d_hbm, b_hbm, o_hbm, acc_ref, d_buf,
+                             b_buf, stage_ref, d_sem, b_sem, o_sem, *,
+                             block_m: int, block_n: int, block_k: int,
+                             steps: int):
+    j = pl.program_id(0)
+    s = pl.program_id(1)
+    d, b = _pipelined_dma_plumbing(
+        sched_ref, d_hbm, b_hbm, d_buf, b_buf, d_sem, b_sem,
+        block_m=block_m, block_n=block_n, block_k=block_k, steps=steps)
+    row = sched_ref[s, _ROW]
+
+    @pl.when(sched_ref[s, _FIRST] == 1)
+    def _init():
+        acc_ref[pl.ds(row * block_m, block_m), :] = jnp.zeros(
+            (block_m, block_n), jnp.int32)
+
+    @pl.when(sched_ref[s, _WEIGHT] != 0)
+    def _compute():
+        pp = jax.lax.dot_general(d, b, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)
+        # deferred shift (OPT2): plane scale from the schedule
+        acc_ref[pl.ds(row * block_m, block_m), :] += \
+            pp * sched_ref[s, _WEIGHT]
+
+    @pl.when(sched_ref[s, _LAST] == 1)
+    def _flush():                        # row complete: write its only HBM
+        stage_ref[...] = acc_ref[pl.ds(row * block_m, block_m), :]
+        cp = pltpu.make_async_copy(
+            stage_ref,
+            o_hbm.at[pl.ds(row * block_m, block_m),
+                     pl.ds(j * block_n, block_n)],
+            o_sem)
+        cp.start()
+        cp.wait()
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def bw_gemm_sparse_pipelined(digits, b, schedule, *, block_m: int = 128,
+                             block_n: int = 128, block_k: int = 256,
+                             interpret: bool = False):
+    """bw_gemm_sparse with double-buffered manual DMA pipelining.
+
+    Bit-identical to ``bw_gemm_sparse`` on the same plan (int32
+    accumulation is order-independent), but accepts schedules in *either*
+    order — ``m_major`` like v2, or ``k_major`` whose global k-block walk
+    revisits output blocks non-consecutively (legal here because the
+    accumulators live in a VMEM panel, not the out BlockSpec).
+
+    schedule: int32 [L, 9] annotated schedule (all SCHED_COLS columns).
+    """
+    bw_n, m, k = digits.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert schedule.ndim == 2 and schedule.shape[1] == len(SCHED_COLS), \
+        schedule.shape
+    steps = schedule.shape[0]
+    kernel = functools.partial(_sparse_pipelined_kernel, block_m=block_m,
+                               block_n=block_n, block_k=block_k, steps=steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block_n, steps),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),    # digits (HBM)
+                  pl.BlockSpec(memory_space=pltpu.ANY)],   # B (HBM)
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((m, block_n), jnp.int32),           # acc panel
+            pltpu.VMEM((2, block_m, block_k), jnp.int8),   # digit dbl-buf
+            pltpu.VMEM((2, block_k, block_n), jnp.int8),   # B dbl-buf
+            pltpu.VMEM((block_m, block_n), jnp.int32),     # flush staging
+            pltpu.SemaphoreType.DMA((2,)),                 # digit sems
+            pltpu.SemaphoreType.DMA((2,)),                 # B sems
+            pltpu.SemaphoreType.DMA(()),                   # flush sem
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(schedule, jnp.int32), digits, b)
+
+
+def _sparse_fused_pipelined_kernel(sched_ref, d_hbm, b_hbm, scale_ref,
+                                   scale_n_ref, bias_ref, o_hbm, acc_ref,
+                                   d_buf, b_buf, stage_ref, d_sem, b_sem,
+                                   o_sem, *, block_m: int, block_n: int,
+                                   block_k: int, steps: int, activation,
+                                   has_bias: bool, has_scale_n: bool):
+    j = pl.program_id(0)
+    s = pl.program_id(1)
+    d, b = _pipelined_dma_plumbing(
+        sched_ref, d_hbm, b_hbm, d_buf, b_buf, d_sem, b_sem,
+        block_m=block_m, block_n=block_n, block_k=block_k, steps=steps)
+    row = sched_ref[s, _ROW]
+
+    @pl.when(sched_ref[s, _FIRST] == 1)
+    def _init():
+        acc_ref[pl.ds(row * block_m, block_m), :] = jnp.zeros(
+            (block_m, block_n), jnp.int32)
+
+    @pl.when(sched_ref[s, _WEIGHT] != 0)
+    def _compute():
+        pp = jax.lax.dot_general(d, b, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.int32)
+        acc_ref[pl.ds(row * block_m, block_m), :] += \
+            pp * sched_ref[s, _WEIGHT]
+
+    @pl.when(sched_ref[s, _LAST] == 1)
+    def _epilogue():
+        sc = scale_ref[pl.ds(row * block_m, block_m), :]
+        if has_scale_n:
+            # combine the scale vectors first so the accumulator is
+            # multiplied by one float (bit-matches the dense fused kernel
+            # and the jnp oracle's `acc * (sx * sw)` ordering)
+            sc = sc * scale_n_ref[...]
+        y = acc_ref[pl.ds(row * block_m, block_m), :].astype(jnp.float32) \
+            * sc
+        if has_bias:
+            y = y + bias_ref[pl.ds(row * block_m, block_m), :]
+        y = EPILOGUE_ACTIVATIONS[activation](y)
+        stage_ref[...] = y.astype(stage_ref.dtype)
+        cp = pltpu.make_async_copy(
+            stage_ref,
+            o_hbm.at[pl.ds(row * block_m, block_m),
+                     pl.ds(j * block_n, block_n)],
+            o_sem)
+        cp.start()
+        cp.wait()
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "block_k", "interpret", "activation", "out_dtype"))
+def bw_gemm_sparse_fused_pipelined(digits, b, schedule, scale, bias=None,
+                                   scale_n=None, *, block_m: int = 128,
+                                   block_n: int = 128, block_k: int = 256,
+                                   interpret: bool = False, activation=None,
+                                   out_dtype=jnp.float32):
+    """bw_gemm_sparse_fused with double-buffered manual DMA pipelining.
+
+    Same contract as bw_gemm_sparse_fused (scale [M, 1], optional bias
+    [M, 1], optional per-column scale_n [1, N]); accepts either schedule
+    order.  The epilogue runs once per output row at its LAST scheduled
+    step, on the VMEM-resident accumulator panel slice, and the float
+    result is staged and DMA'd straight to HBM — bit-identical to the v2
+    fused kernel on the same plan.
+    """
+    bw_n, m, k = digits.shape
+    k2, n = b.shape
+    assert k == k2
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    assert schedule.ndim == 2 and schedule.shape[1] == len(SCHED_COLS), \
+        schedule.shape
+    assert activation in EPILOGUE_ACTIVATIONS, activation
+    assert scale.shape == (m, 1), scale.shape
+    has_scale_n = scale_n is not None
+    if has_scale_n:
+        assert scale_n.shape == (1, n), scale_n.shape
+    else:                               # placeholder so arity is static
+        scale_n = jnp.ones((1, n), jnp.float32)
+    has_bias = bias is not None
+    if not has_bias:                    # placeholder so arity is static
+        bias = jnp.zeros_like(scale)
+    steps = schedule.shape[0]
+    kernel = functools.partial(
+        _sparse_fused_pipelined_kernel, block_m=block_m, block_n=block_n,
+        block_k=block_k, steps=steps, activation=activation,
+        has_bias=has_bias, has_scale_n=has_scale_n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n // block_n, steps),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),          # digits (HBM)
+            pl.BlockSpec(memory_space=pltpu.ANY),          # B (HBM)
+            # the per-row vectors are tiny: keep them whole in VMEM and
+            # slice the LAST row's span in the epilogue
+            pl.BlockSpec((m, 1), lambda j, s, sched: (0, 0)),
+            pl.BlockSpec((1, block_n), lambda j, s, sched: (0, j)),
+            pl.BlockSpec((m, 1), lambda j, s, sched: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((m, block_n), jnp.int32),           # acc panel
+            pltpu.VMEM((2, block_m, block_k), jnp.int8),   # digit dbl-buf
+            pltpu.VMEM((2, block_k, block_n), jnp.int8),   # B dbl-buf
+            pltpu.VMEM((block_m, block_n), jnp.dtype(out_dtype)),
+            pltpu.SemaphoreType.DMA((2,)),                 # digit sems
+            pltpu.SemaphoreType.DMA((2,)),                 # B sems
+            pltpu.SemaphoreType.DMA(()),                   # flush sem
+        ],
     )
     return pl.pallas_call(
         kernel,

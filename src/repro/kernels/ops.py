@@ -43,7 +43,8 @@ __all__ = ["PlannedOperand", "encode_planes", "plane_block_mask",
            "quantized_dense", "plan_dense_weight", "planned_dense_apply",
            "plan_params", "build_schedule", "pad_schedule",
            "schedule_stats", "bw_gemm_sparse", "bw_gemm_sparse_fused",
-           "SPARSE_DENSITY_THRESHOLD"]
+           "bw_gemm_sparse_pipelined", "bw_gemm_sparse_fused_pipelined",
+           "SPARSE_DENSITY_THRESHOLD", "SCHEDULE_ORDERS", "DISPATCHES"]
 
 
 def _interpret() -> bool:
@@ -131,39 +132,96 @@ def plane_density(digits, block_m: int, block_k: int) -> dict:
 # autotuner can override the dispatch per (shape, density-bucket).
 SPARSE_DENSITY_THRESHOLD = 0.5
 
+# Schedule visit orders (build_schedule order=):
+#   m_major -- by m-block row, within a row by (k-block, plane): each output
+#              block is visited in consecutive steps, as the v2 sparse
+#              kernels' out-BlockSpec accumulation requires.
+#   k_major -- by k-block globally, within a k-block by (row, plane):
+#              consecutive steps across *different* output rows share a B
+#              block so the pipelined kernels elide its DMA entirely;
+#              output blocks are revisited non-consecutively, which only
+#              the pipelined kernels' VMEM accumulator panel supports.
+SCHEDULE_ORDERS = ("m_major", "k_major")
 
-def build_schedule(mask, radix: int) -> np.ndarray:
-    """Compact a plane-block occupancy mask into an int32 [L, 6] schedule.
+# planned_dense_apply dispatch values ('auto' resolves to one of the rest)
+DISPATCHES = ("dense", "sparse", "pipelined", "auto")
 
-    mask: bool [BW, Mb, Kb].  One schedule entry per True cell, ordered by
-    m-block row and, within a row, by (k-block, plane) so consecutive steps
-    reuse the same B block (Pallas elides the DMA when the index map result
-    repeats).  Every empty row gets one zero-weight sentinel entry so its
-    output block is still visited, zeroed and written.  Columns are
-    bw_gemm.SCHED_COLS: (plane, row, kblk, weight=radix**plane, first,
-    last); row boundaries drive accumulator init / the fused epilogue.
+
+def _annotate_schedule(entries) -> np.ndarray:
+    """(plane, row, kblk, weight) tuples -> int32 [L, 9] SCHED_COLS rows.
+
+    Derives the flags the kernels consume from the visit sequence alone:
+    FIRST/LAST mark each output row's overall first/last step (accumulator
+    init / flush boundaries — correct in any visit order because the
+    pipelined kernels keep every row's accumulator VMEM-resident for the
+    whole walk); D_SLOT/B_SLOT alternate per *fetch* so an in-flight copy
+    can never target the buffer the current step is reading; B_FETCH is 0
+    whenever the step's k-block is already resident (consecutive same-k
+    steps — zero-weight steps fetch nothing and leave residency alone).
     """
+    first_step, last_step = {}, {}
+    for i, (_p, row, _kk, _w) in enumerate(entries):
+        first_step.setdefault(row, i)
+        last_step[row] = i
+    sched = np.zeros((len(entries), 9), dtype=np.int32)
+    resident_k = None
+    n_dfetch = n_bfetch = 0
+    for i, (p, row, kk, w) in enumerate(entries):
+        d_slot = b_slot = b_fetch = 0
+        if w != 0:
+            d_slot = n_dfetch % 2
+            n_dfetch += 1
+            if kk != resident_k:
+                b_fetch = 1
+                b_slot = n_bfetch % 2
+                n_bfetch += 1
+                resident_k = kk
+            else:
+                b_slot = (n_bfetch - 1) % 2
+        sched[i] = (p, row, kk, w, int(first_step[row] == i),
+                    int(last_step[row] == i), d_slot, b_slot, b_fetch)
+    return sched
+
+
+def build_schedule(mask, radix: int, order: str = "m_major") -> np.ndarray:
+    """Compact a plane-block occupancy mask into an int32 [L, 9] schedule.
+
+    mask: bool [BW, Mb, Kb].  One schedule entry per True cell, in the
+    requested visit ``order`` (see SCHEDULE_ORDERS); every empty row gets
+    one zero-weight sentinel entry so its output block is still visited,
+    zeroed and written.  Columns are bw_gemm.SCHED_COLS: (plane, row,
+    kblk, weight=radix**plane, first, last, d_slot, b_slot, b_fetch); the
+    first six drive the v2 kernels, the last three bake the pipelined
+    kernels' double-buffer rotation and B-reuse elision in (see
+    _annotate_schedule).
+    """
+    if order not in SCHEDULE_ORDERS:
+        raise ValueError(f"order must be one of {SCHEDULE_ORDERS}, "
+                         f"got {order!r}")
     mask = np.asarray(mask)
     bw_n, mb, kb = mask.shape
     entries = []
-    for row in range(mb):
-        cells = np.argwhere(mask[:, row, :])          # (plane, kblk) pairs
-        if cells.size == 0:
-            # sentinel: visit the output block once with weight 0 so the
-            # row is written as exact zeros
-            entries.append([(0, row, 0, 0)])
-            continue
-        order = np.lexsort((cells[:, 0], cells[:, 1]))  # by (kblk, plane)
-        entries.append([(int(p), row, int(kk), radix ** int(p))
-                        for p, kk in cells[order]])
-    sched = np.zeros((sum(len(e) for e in entries), 6), dtype=np.int32)
-    pos = 0
-    for row_entries in entries:
-        n_e = len(row_entries)
-        for i, (p, row, kk, w) in enumerate(row_entries):
-            sched[pos + i] = (p, row, kk, w, int(i == 0), int(i == n_e - 1))
-        pos += n_e
-    return sched
+    if order == "m_major":
+        for row in range(mb):
+            cells = np.argwhere(mask[:, row, :])      # (plane, kblk) pairs
+            if cells.size == 0:
+                # sentinel: visit the output block once with weight 0 so
+                # the row is written as exact zeros
+                entries.append((0, row, 0, 0))
+                continue
+            o = np.lexsort((cells[:, 0], cells[:, 1]))  # by (kblk, plane)
+            entries.extend((int(p), row, int(kk), radix ** int(p))
+                           for p, kk in cells[o])
+    else:                                # k_major: global B-block reuse
+        for row in range(mb):
+            if not mask[:, row, :].any():
+                entries.append((0, row, 0, 0))        # sentinels up front
+        for kk in range(kb):
+            cells = np.argwhere(mask[:, :, kk])       # (plane, row) pairs
+            o = np.lexsort((cells[:, 0], cells[:, 1]))  # by (row, plane)
+            entries.extend((int(p), int(row), kk, radix ** int(p))
+                           for p, row in cells[o])
+    return _annotate_schedule(entries)
 
 
 def pad_schedule(schedule: np.ndarray, length: int) -> np.ndarray:
@@ -173,7 +231,9 @@ def pad_schedule(schedule: np.ndarray, length: int) -> np.ndarray:
     first/last flags, *appended after* it: the output block index stays on
     the last row, so the padded steps neither re-zero the accumulator nor
     re-run the epilogue, and the block is flushed once with its correct
-    content.  Needed when per-layer schedules of different lengths are
+    content.  The pipelined-kernel columns are cleared too (B_FETCH 0, no
+    slot rotation), so padding steps issue no DMA and wait on no
+    semaphore.  Needed when per-layer schedules of different lengths are
     stacked for jax.lax.scan.
     """
     sched = np.asarray(schedule)
@@ -183,7 +243,7 @@ def pad_schedule(schedule: np.ndarray, length: int) -> np.ndarray:
     if sched.shape[0] == length:
         return sched
     pad = np.repeat(sched[-1:], length - sched.shape[0], axis=0)
-    pad[:, 3:] = 0                       # weight / first / last cleared
+    pad[:, 3:] = 0          # weight/first/last + slot/fetch cols cleared
     return np.concatenate([sched, pad], axis=0)
 
 
@@ -193,9 +253,14 @@ def schedule_stats(schedule, mask) -> dict:
     mask = np.asarray(mask)
     real = int((sched[:, 3] != 0).sum())          # weight 0 = no-op entry
     total = int(mask.size)
-    return {"steps": int(sched.shape[0]), "nnz_blocks": real,
-            "total_blocks": total,
-            "density": real / total if total else 0.0}
+    out = {"steps": int(sched.shape[0]), "nnz_blocks": real,
+           "total_blocks": total,
+           "density": real / total if total else 0.0}
+    if sched.shape[1] >= 9:              # annotated: B-reuse accounting
+        fetches = int(sched[:, 8].sum())
+        out["b_fetches"] = fetches
+        out["b_dma_elided"] = real - fetches
+    return out
 
 
 @dataclasses.dataclass
@@ -215,7 +280,8 @@ class PlannedOperand:
     block_m: int
     block_k: int
     encoding: str
-    schedule: Optional[np.ndarray] = None   # int32 [L, 6], build_schedule
+    schedule: Optional[np.ndarray] = None   # int32 [L, 9], build_schedule
+    order: str = "m_major"                  # the schedule's visit order
 
     def density(self) -> float:
         """Fraction of non-zero plane blocks (the sparse-dispatch signal)."""
@@ -224,12 +290,15 @@ class PlannedOperand:
 
 def plan_operand(a_int8, encoding: str = "ent", block_m: int = 128,
                  block_k: int = 256, reorder_rows: bool = True,
-                 encode_impl: str = "ref", bits: int = 8) -> PlannedOperand:
+                 encode_impl: str = "ref", bits: int = 8,
+                 order: str = "m_major") -> PlannedOperand:
     """Encode + (optionally) magnitude-order the multiplicand rows.
 
     a_int8: int8 [M, K] (e.g. a transposed weight matrix).
     encode_impl: 'ref' (jnp oracle) or 'kernel' (the fused Pallas EN-T
     encoder, repro.kernels.encode — interpret mode off-TPU).
+    order: schedule visit order (SCHEDULE_ORDERS); 'k_major' schedules
+    require the pipelined kernels.
     """
     a = jnp.asarray(a_int8, jnp.int8)
     m, k = a.shape
@@ -257,9 +326,9 @@ def plan_operand(a_int8, encoding: str = "ent", block_m: int = 128,
     else:
         digits = kref.encode_planes_ref(a_sorted, encoding, bits)
         mask = plane_block_mask(digits, block_m, block_k)
-    schedule = build_schedule(np.asarray(mask), enc.radix(encoding))
+    schedule = build_schedule(np.asarray(mask), enc.radix(encoding), order)
     return PlannedOperand(digits, mask, row_perm, inv_perm, m, k,
-                          block_m, block_k, encoding, schedule)
+                          block_m, block_k, encoding, schedule, order)
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret",
@@ -301,6 +370,12 @@ def bw_gemm_sparse(planned: PlannedOperand, b, *, block_n: int = 128,
     k, n = b.shape
     assert k == planned.k, (k, planned.k)
     assert planned.schedule is not None, "plan has no schedule"
+    # the v2 out-BlockSpec accumulates only across *consecutive* revisits;
+    # a k_major plan would silently clobber partial sums on real TPUs
+    # (interpret mode hides it), so refuse it here, not just in dispatch
+    assert planned.order == "m_major", \
+        f"bw_gemm_sparse requires an m_major plan, got {planned.order!r} " \
+        f"(use bw_gemm_sparse_pipelined)"
     b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
                 block_n, 1)
     out = _bw.bw_gemm_sparse(
@@ -324,6 +399,10 @@ def bw_gemm_sparse_fused(planned: PlannedOperand, b, scale, bias=None, *,
     k, n = b.shape
     assert k == planned.k, (k, planned.k)
     assert planned.schedule is not None, "plan has no schedule"
+    # see bw_gemm_sparse: v2 accumulation is only legal on m_major plans
+    assert planned.order == "m_major", \
+        f"bw_gemm_sparse_fused requires an m_major plan, got " \
+        f"{planned.order!r} (use bw_gemm_sparse_fused_pipelined)"
     m_pad = planned.digits.shape[1]
     row_perm = jnp.asarray(planned.row_perm)
     scale_rows = _channel_rows(scale, planned.m, m_pad, row_perm)
@@ -333,6 +412,60 @@ def bw_gemm_sparse_fused(planned: PlannedOperand, b, scale, bias=None, *,
     b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
                 block_n, 1)
     out = _bw.bw_gemm_sparse_fused(
+        planned.digits, b, jnp.asarray(planned.schedule), scale_rows,
+        bias_rows, block_m=planned.block_m, block_n=block_n,
+        block_k=planned.block_k, interpret=bool(interpret),
+        activation=activation, out_dtype=out_dtype)
+    return out[jnp.asarray(planned.inv_perm)][:planned.m, :n]
+
+
+def bw_gemm_sparse_pipelined(planned: PlannedOperand, b, *,
+                             block_n: int = 128,
+                             interpret: Optional[bool] = None):
+    """C = A @ B through the double-buffered pipelined kernel.
+
+    Bit-identical to bw_gemm_sparse on the same plan in either schedule
+    order; step s+1's plane gather overlaps step s's MXU pass and
+    consecutive same-k steps reuse the resident B block without a DMA.
+    """
+    if interpret is None:
+        interpret = _interpret()
+    k, n = b.shape
+    assert k == planned.k, (k, planned.k)
+    assert planned.schedule is not None, "plan has no schedule"
+    b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
+                block_n, 1)
+    out = _bw.bw_gemm_sparse_pipelined(
+        planned.digits, b, jnp.asarray(planned.schedule),
+        block_m=planned.block_m, block_n=block_n, block_k=planned.block_k,
+        interpret=bool(interpret))
+    return out[jnp.asarray(planned.inv_perm)][:planned.m, :n]
+
+
+def bw_gemm_sparse_fused_pipelined(planned: PlannedOperand, b, scale,
+                                   bias=None, *, activation=None,
+                                   block_n: int = 128,
+                                   out_dtype=jnp.float32,
+                                   interpret: Optional[bool] = None):
+    """bw_gemm_sparse_fused through the double-buffered pipelined kernel.
+
+    Same contract as bw_gemm_fused: scale/bias are per-row vectors of
+    length M in the operand's original row order.
+    """
+    if interpret is None:
+        interpret = _interpret()
+    k, n = b.shape
+    assert k == planned.k, (k, planned.k)
+    assert planned.schedule is not None, "plan has no schedule"
+    m_pad = planned.digits.shape[1]
+    row_perm = jnp.asarray(planned.row_perm)
+    scale_rows = _channel_rows(scale, planned.m, m_pad, row_perm)
+    bias_rows = None
+    if bias is not None:
+        bias_rows = _channel_rows(bias, planned.m, m_pad, row_perm)
+    b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
+                block_n, 1)
+    out = _bw.bw_gemm_sparse_fused_pipelined(
         planned.digits, b, jnp.asarray(planned.schedule), scale_rows,
         bias_rows, block_m=planned.block_m, block_n=block_n,
         block_k=planned.block_k, interpret=bool(interpret),
@@ -478,14 +611,16 @@ def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
 
 
-def plan_for(w, spec):
+def plan_for(w, spec, order: str = "m_major"):
     """Quantize + plan a dense weight for the kernel path, with caching.
 
     w: float [K, N] (d_in, d_out).  spec: QuantSpec (or legacy int plane
-    budget).  Returns (PlannedOperand of W^T with [N, K] layout -- output
-    channels as kernel rows -- and the per-channel weight scale sw of
-    shape [1, N]).  Cache entries key on (weight, spec.plan_key()): the
-    same weight planned under two specs coexists as two entries.
+    budget).  order: schedule visit order (SCHEDULE_ORDERS).  Returns
+    (PlannedOperand of W^T with [N, K] layout -- output channels as
+    kernel rows -- and the per-channel weight scale sw of shape [1, N]).
+    Cache entries key on (weight, spec.plan_key(), order): the same
+    weight planned under two specs or two schedule orders coexists as
+    independent entries.
     """
     if isinstance(w, jax.core.Tracer):
         raise TypeError(
@@ -494,13 +629,13 @@ def plan_for(w, spec):
     spec = QuantSpec.coerce(spec)
     k, n = w.shape
     block_m, block_k, _ = select_block_sizes(n, k, 128, spec)
-    params = spec.plan_key() + (int(block_m), int(block_k), k, n)
+    params = spec.plan_key() + (int(block_m), int(block_k), k, n, order)
 
     def build():
         qw, sw = quantlib.quantize_for_spec(
             jnp.asarray(w).astype(jnp.float32), spec, axis=0)
         planned = plan_operand(qw.T, encoding=spec.encoding, block_m=block_m,
-                               block_k=block_k, bits=spec.bits)
+                               block_k=block_k, bits=spec.bits, order=order)
         return planned, jnp.asarray(sw, jnp.float32)
 
     return _PLAN_CACHE.lookup(w, params, build)
@@ -513,7 +648,8 @@ def _channel_rows(vec, n: int, m_pad: int, row_perm) -> jax.Array:
     return full[row_perm].reshape(-1, 1)
 
 
-def plan_dense_weight(w, spec, use_cache: bool = True) -> dict:
+def plan_dense_weight(w, spec, use_cache: bool = True,
+                      order: str = "m_major") -> dict:
     """Quantize + plan a dense weight into a pure-array plan record.
 
     The record is a pytree of arrays only (digit planes, occupancy mask,
@@ -522,21 +658,24 @@ def plan_dense_weight(w, spec, use_cache: bool = True) -> dict:
     fed to the fused kernel *under tracing* -- the planning itself happens
     here, eagerly, once per weight.
 
-    The record does not carry the encoding name: planned_dense_apply takes
-    the same QuantSpec and reconstructs the radix from it (and checks the
-    plane count against the record's shapes, so an ent plan applied under a
-    bit-serial spec fails loudly instead of decoding silently wrong).
+    The record does not carry the encoding name or the schedule order:
+    planned_dense_apply takes the same QuantSpec (reconstructing the radix
+    from it, and checking the plane count against the record's shapes, so
+    an ent plan applied under a bit-serial spec fails loudly instead of
+    decoding silently wrong) and the same ``order`` (which only gates the
+    sparse-vs-pipelined dispatch — the pipelined kernels themselves run
+    any annotated schedule correctly).
     """
     spec = QuantSpec.coerce(spec)
     if use_cache:
-        planned, sw = plan_for(w, spec)
+        planned, sw = plan_for(w, spec, order=order)
     else:
         k, n = w.shape
         block_m, block_k, _ = select_block_sizes(n, k, 128, spec)
         qw, sw = quantlib.quantize_for_spec(
             jnp.asarray(w).astype(jnp.float32), spec, axis=0)
         planned = plan_operand(qw.T, encoding=spec.encoding, block_m=block_m,
-                               block_k=block_k, bits=spec.bits)
+                               block_k=block_k, bits=spec.bits, order=order)
         sw = jnp.asarray(sw, jnp.float32)
     n = w.shape[1]
     m_pad = planned.digits.shape[1]
@@ -552,35 +691,67 @@ def plan_dense_weight(w, spec, use_cache: bool = True) -> dict:
 
 
 def _resolve_dispatch(dispatch: str, plan: dict, spec, n_out: int, k: int,
-                      batch: int) -> bool:
-    """True = run the sparse compacted-schedule kernel.
+                      batch: int, order: str) -> str:
+    """Resolve to a concrete kernel route: 'dense'|'sparse'|'pipelined'.
 
     The decision is *static* (shape-derived, jit/scan-safe): the schedule
     length L counts nnz blocks + per-empty-row sentinels (+ stack padding),
     so L / mask.size is a sound density proxy.  'auto' consults the
     measured autotune cache for a per-(shape, density-bucket) winner and
-    falls back to the SPARSE_DENSITY_THRESHOLD heuristic on a miss.
+    falls back to the SPARSE_DENSITY_THRESHOLD heuristic on a miss —
+    sparse routes become 'sparse' (the v2 scalar-prefetch kernels) for
+    m_major schedules and 'pipelined' for k_major ones, whose
+    non-consecutive output revisits only the pipelined kernels support.
     """
+    if order not in SCHEDULE_ORDERS:
+        raise ValueError(f"order must be one of {SCHEDULE_ORDERS}, "
+                         f"got {order!r}")
     if dispatch == "dense" or plan.get("schedule") is None:
-        return False
+        return "dense"
     if dispatch == "sparse":
-        return True
+        if order == "k_major":
+            raise ValueError(
+                "dispatch='sparse' (the v2 kernels) requires an m_major "
+                "schedule: k_major revisits output blocks non-consecutively"
+                " — use dispatch='pipelined' (or 'auto')")
+        return "sparse"
+    if dispatch == "pipelined":
+        return "pipelined"
     if dispatch != "auto":
-        raise ValueError(f"dispatch must be dense|sparse|auto, "
+        raise ValueError(f"dispatch must be one of {DISPATCHES}, "
                          f"got {dispatch!r}")
+    sparse_route = "pipelined" if order == "k_major" else "sparse"
     density = plan["schedule"].shape[0] / max(plan["mask"].size, 1)
     from . import autotune
     hit = autotune.get_cache().lookup(n_out, k, batch, spec, density=density)
-    if hit is not None and hit.get("dispatch") in ("sparse", "dense"):
-        return hit["dispatch"] == "sparse"
-    return density <= SPARSE_DENSITY_THRESHOLD
+    if hit is not None and hit.get("dispatch") in ("sparse", "dense",
+                                                   "pipelined"):
+        won = hit["dispatch"]
+        if won == "dense":
+            return "dense"
+        # a measured sparse-route winner only transfers when it was
+        # measured under *this plan's* schedule order (a k_major-measured
+        # pipelined win says nothing about an m_major schedule's walk);
+        # pre-tag entries (order absent) are trusted as order-agnostic
+        if hit.get("order") in (None, order):
+            if won == "pipelined":
+                return "pipelined"
+            if order == "m_major":                    # won == "sparse"
+                return "sparse"
+        elif won in ("sparse", "pipelined") and order == "k_major":
+            # a sparse-route win that cannot run v2 on this plan: the
+            # nearest legal sparse route is still measured-informed
+            return "pipelined"
+        # otherwise the ranking does not transfer: fall through
+    return sparse_route if density <= SPARSE_DENSITY_THRESHOLD else "dense"
 
 
 def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
                         activation=None, out_dtype=jnp.float32,
                         block_n: Optional[int] = None,
                         interpret: Optional[bool] = None,
-                        fused: bool = True, dispatch: str = "dense"):
+                        fused: bool = True, dispatch: str = "dense",
+                        order: str = "m_major"):
     """y = act((x @ w)_int * s_x * s_w + bias) through the bw_gemm kernel.
 
     plan: record from plan_dense_weight (possibly a scan-sliced layer of a
@@ -598,9 +769,12 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
     shapes, radix from the static spec).
 
     dispatch: 'dense' (the predicated full-grid kernels), 'sparse' (the
-    compacted-schedule scalar-prefetch kernels), or 'auto' (density-based:
-    sparse when the schedule-length density proxy is at most
-    SPARSE_DENSITY_THRESHOLD, with autotune-cache overrides).  The
+    v2 compacted-schedule scalar-prefetch kernels), 'pipelined' (the
+    double-buffered manual-DMA kernels), or 'auto' (density-based: a
+    sparse route when the schedule-length density proxy is at most
+    SPARSE_DENSITY_THRESHOLD, with autotune-cache overrides).  order
+    names the plan's schedule visit order: 'k_major' plans (built for
+    B-block reuse) can only take the dense or pipelined routes.  The
     decision is shape-derived, so it stays static under jit/scan.
     """
     spec = QuantSpec.coerce(spec)
@@ -629,13 +803,19 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
     sx_cols = None
     if per_token:                        # one scale per activation row ->
         sx_cols = _pad_to(sx.reshape(1, -1), block_n, 1)  # kernel N axis
-    sparse = _resolve_dispatch(dispatch, plan, spec, n_out, k, batch)
+    route = _resolve_dispatch(dispatch, plan, spec, n_out, k, batch, order)
     if fused:
         scale_rows = plan["sw_rows"] if per_token else plan["sw_rows"] * sx
         bias_rows = None
         if bias is not None:
             bias_rows = _channel_rows(bias, n_out, m_pad, plan["row_perm"])
-        if sparse:
+        if route == "pipelined":
+            out = _bw.bw_gemm_sparse_fused_pipelined(
+                digits, bt, plan["schedule"], scale_rows, bias_rows,
+                sx_cols, block_m=block_m, block_n=block_n,
+                block_k=block_k, interpret=bool(interpret),
+                activation=activation, out_dtype=jnp.float32)
+        elif route == "sparse":
             out = _bw.bw_gemm_sparse_fused(
                 digits, bt, plan["schedule"], scale_rows, bias_rows,
                 sx_cols, block_m=block_m, block_n=block_n,
@@ -650,7 +830,12 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
                 out_dtype=jnp.float32)
         y = out[plan["inv_perm"]][:n_out, :batch].T
     else:
-        if sparse:
+        if route == "pipelined":
+            acc = _bw.bw_gemm_sparse_pipelined(
+                digits, bt, plan["schedule"], block_m=block_m,
+                block_n=block_n, block_k=block_k,
+                interpret=bool(interpret))
+        elif route == "sparse":
             acc = _bw.bw_gemm_sparse(
                 digits, bt, plan["schedule"], block_m=block_m,
                 block_n=block_n, block_k=block_k,
@@ -675,20 +860,22 @@ def quantized_dense(x, w, spec, *, bias=None, activation=None,
                     out_dtype=jnp.float32,
                     block_n: Optional[int] = None,
                     interpret: Optional[bool] = None,
-                    fused: bool = True, dispatch: str = "dense"):
+                    fused: bool = True, dispatch: str = "dense",
+                    order: str = "m_major"):
     """Eager kernel-path dense: plan (cached per parameter) + bw_gemm.
 
     x: [..., K] float.  w: [K, N] float (concrete).  bias: optional [N].
-    spec: QuantSpec (or legacy int plane budget).  Under tracing use
-    plan_params + planned_dense_apply instead (the model layer routes this
-    automatically).
+    spec: QuantSpec (or legacy int plane budget).  order: schedule visit
+    order the weight is planned with (SCHEDULE_ORDERS).  Under tracing
+    use plan_params + planned_dense_apply instead (the model layer routes
+    this automatically).
     """
     spec = QuantSpec.coerce(spec)
-    plan = plan_dense_weight(w, spec)
+    plan = plan_dense_weight(w, spec, order=order)
     return planned_dense_apply(plan, x, spec, w.shape[1], bias=bias,
                                activation=activation, out_dtype=out_dtype,
                                block_n=block_n, interpret=interpret,
-                               fused=fused, dispatch=dispatch)
+                               fused=fused, dispatch=dispatch, order=order)
 
 
 # Param-dict names whose "w" never flows through the quantized dense path
@@ -701,7 +888,7 @@ _NO_PLAN_KEYS = frozenset({
 })
 
 
-def plan_params(params, spec, should_plan=None):
+def plan_params(params, spec, should_plan=None, order: Optional[str] = None):
     """Attach a 'w_plan' record next to every dense weight in a param tree.
 
     2-D weights get a single plan; 3-D weights (layer-stacked for scan) get
@@ -713,8 +900,16 @@ def plan_params(params, spec, should_plan=None):
     should_plan: optional (path_tuple, w) -> bool to narrow which weights
     get plans.  The default plans every dense "w" except dicts named in
     _NO_PLAN_KEYS (known raw-matmul consumers like the MoE router).
+
+    order: schedule visit order; None derives it from the spec's engine
+    (the pallas_pipelined engine plans k_major schedules for B-block
+    reuse, everything else m_major) so the plans match the order the
+    engine's apply() will dispatch under.
     """
     spec = QuantSpec.coerce(spec)
+    if order is None:
+        order = "k_major" if spec is not None and \
+            spec.impl == "pallas_pipelined" else "m_major"
     count = 0
     if should_plan is None:
         def should_plan(path, _w):
@@ -730,10 +925,11 @@ def plan_params(params, spec, should_plan=None):
         if ndim not in (2, 3) or not should_plan(path, w):
             return out
         if ndim == 2:
-            out["w_plan"] = plan_dense_weight(w, spec)
+            out["w_plan"] = plan_dense_weight(w, spec, order=order)
             count += 1
         else:                  # [L, K, N] stacked for the layer scan
-            plans = [plan_dense_weight(w[i], spec, use_cache=False)
+            plans = [plan_dense_weight(w[i], spec, use_cache=False,
+                                       order=order)
                      for i in range(w.shape[0])]
             # per-layer schedules have data-dependent lengths: pad to the
             # longest with exact no-op entries so the stack scans cleanly

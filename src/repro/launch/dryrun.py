@@ -342,9 +342,8 @@ def main(argv=None) -> int:
     ap.add_argument("--quant-planes", type=int, default=0,
                     help="enable the paper's BW-decomposed int8 path with "
                          "this many EN-T digit planes")
-    ap.add_argument("--quant-impl", default="pallas_fused",
-                    choices=("ref", "planes", "int8", "pallas",
-                             "pallas_fused", "pallas_sparse"),
+    from repro.engine import IMPLS
+    ap.add_argument("--quant-impl", default="pallas_fused", choices=IMPLS,
                     help="quantized matmul engine to lower (kernel impls "
                          "use their cost-representative int8 lowering)")
     ap.add_argument("--seq-axis", default=None,

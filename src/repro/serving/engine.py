@@ -109,7 +109,8 @@ class ServeEngine:
         self._state0 = jax.tree.map(jnp.copy, self.state) \
             if self.api.family in RESET_STATE_FAMILIES else None
         self._kernel_path = spec is not None and \
-            spec.impl in ("pallas", "pallas_fused", "pallas_sparse")
+            spec.impl in ("pallas", "pallas_fused", "pallas_sparse",
+                          "pallas_pipelined")
         # measured plane-block density of the planned weights (the
         # schedule-aware cost input); None off the kernel path
         self.plan_density = None

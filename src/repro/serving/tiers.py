@@ -95,13 +95,14 @@ def step_cost(cfg, batch: int, spec: Optional[QuantSpec],
     pre-sparsity upper bound of the engine's default estimate.
     """
     total = {"int_macs": 0, "mxu_passes": 0, "acc_hbm_bytes": 0,
-             "grid_steps": 0, "dma_bytes": 0}
+             "grid_steps": 0, "dma_bytes": 0, "b_dma_elided": 0}
     engine = get_engine(spec.impl) if spec is not None else None
     for m, k, n in decode_step_gemms(cfg, batch):
         if engine is None:       # unquantized: one pass, fused epilogue
             c = {"int_macs": m * k * n, "mxu_passes": 1,
                  "acc_hbm_bytes": 0, "grid_steps": 0,
-                 "dma_bytes": m * k + k * n + 4 * m * n}
+                 "dma_bytes": m * k + k * n + 4 * m * n,
+                 "b_dma_elided": 0}
         else:
             c = engine.cost(m, k, n, spec, density=density)
         for key in total:

@@ -29,7 +29,31 @@ import itertools
 
 import numpy as np
 
-__all__ = ["given", "settings", "strategies"]
+__all__ = ["given", "settings", "strategies", "assert_cross_context_close"]
+
+# jit-compiled and eager activation quantization of the *same* values can
+# differ by 1 float LSB (XLA fuses the scale/round chain differently), so
+# comparisons that cross a jit/eager (or scan/eager) boundary must not
+# demand bit-equality.  This tolerance is that single documented quirk —
+# wide enough for the LSB, tight enough that a real numeric bug (wrong
+# scale, missing plane, permutation slip) still fails.  Same-context
+# kernel parity stays np.testing.assert_array_equal (bit-exact).
+CROSS_CONTEXT_RTOL = 1e-6
+CROSS_CONTEXT_ATOL = 1e-6
+
+
+def assert_cross_context_close(got, want, *, err_msg: str = "",
+                               rtol: float = CROSS_CONTEXT_RTOL,
+                               atol: float = CROSS_CONTEXT_ATOL) -> None:
+    """Compare kernel outputs across jit/eager contexts.
+
+    The shared replacement for the ad-hoc ``allclose(…, 1e-6)`` calls the
+    kernel-parity tests grew: one place owns the jit-vs-eager 1-LSB
+    activation-quant tolerance (see CHANGES.md PR 4 gotcha) so it cannot
+    silently drift looser test by test.
+    """
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=atol, err_msg=err_msg)
 
 _DEFAULT_MAX_EXAMPLES = 100
 

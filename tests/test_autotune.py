@@ -37,13 +37,52 @@ def test_cache_rejects_bad_entries(tmp_path):
     path = tmp_path / "bad.json"
     path.write_text(json.dumps({
         "version": autotune.CACHE_FORMAT_VERSION,
-        "entries": {"8x8x8|default": {"block_m": 100, "block_k": 128,
-                                      "block_n": 128}}}))
+        "entries": {"8x8x8|default|interpret": {
+            "block_m": 100, "block_k": 128, "block_n": 128,
+            "backend": "interpret"}}}))
     with pytest.raises(ValueError, match="multiple of 128"):
         autotune.AutotuneCache.load(str(path))
     path.write_text(json.dumps({"version": 99, "entries": {}}))
     with pytest.raises(ValueError, match="format version"):
         autotune.AutotuneCache.load(str(path))
+
+
+def test_cache_rejects_untagged_entries(tmp_path):
+    """Every entry must carry its measuring backend: an untagged entry
+    fails the load (and therefore the CI autotune-cache lane)."""
+    path = tmp_path / "untagged.json"
+    path.write_text(json.dumps({
+        "version": autotune.CACHE_FORMAT_VERSION,
+        "entries": {"128x128x128|default|interpret": {
+            "block_m": 128, "block_k": 128, "block_n": 128,
+            "dispatch": "sparse"}}}))          # no "backend" field
+    with pytest.raises(ValueError, match="backend tag"):
+        autotune.AutotuneCache.load(str(path))
+    problems = autotune.validate(str(path))
+    assert problems and "backend" in problems[0]
+
+
+def test_one_cache_carries_both_backends(fresh_cache):
+    """Interpret-mode CI winners and TPU-measured winners coexist in one
+    file: keys are backend-qualified and lookups only see entries measured
+    on the running backend (here: interpret)."""
+    cache = autotune.AutotuneCache("mem")
+    cfg = {"block_m": 128, "block_k": 128, "block_n": 128,
+           "dispatch": "sparse", "order": "m_major", "pipelined": False}
+    cache.record(256, 512, 128, None, cfg, backend="interpret")
+    cache.record(256, 512, 128, None,
+                 dict(cfg, block_k=512, dispatch="pipelined",
+                      order="k_major", pipelined=True), backend="tpu")
+    assert len(cache.entries) == 2
+    assert autotune.current_backend() == "interpret"     # CPU test host
+    hit = cache.lookup(256, 512, 128)
+    assert hit["backend"] == "interpret" and hit["block_k"] == 128
+    tpu_key = autotune.cache_key(256, 512, 128, backend="tpu")
+    assert cache.entries[tpu_key]["pipelined"] is True
+    # coverage is per-backend too
+    assert cache.coverage([(256, 512, 128)], backend="tpu") == []
+    assert cache.coverage([(640, 640, 128)], backend="tpu") == \
+        [(640, 640, 128)]
 
 
 def test_select_block_sizes_consumes_cache(fresh_cache):
@@ -108,7 +147,10 @@ def test_measured_sweep_records_winner(tmp_path, fresh_cache):
     autotune.set_cache(cache)
     spec = QuantSpec(planes=2)
     win = autotune.autotune_gemm(128, 128, 128, spec, cache=cache, iters=1)
-    assert win["dispatch"] in ("sparse", "dense")
+    assert win["dispatch"] in ("sparse", "dense", "pipelined")
+    assert win["order"] in ("m_major", "k_major")
+    assert isinstance(win["pipelined"], bool)
+    assert win["backend"] == autotune.current_backend()
     assert win["candidates"] >= 2
     assert 0.0 <= win["density"] <= 1.0
     hit = cache.lookup(128, 128, 128, spec)

@@ -71,7 +71,7 @@ def test_module_getattr_still_raises_for_typos():
 def test_quant_impls_tuple_lists_registered_engines():
     assert L.QUANT_IMPLS == \
         ("ref", "planes", "int8", "pallas", "pallas_fused",
-         "pallas_sparse")
+         "pallas_sparse", "pallas_pipelined")
 
 
 def test_quantstate_activate_warns_and_spec_maps_aliases():

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _propcheck import assert_cross_context_close
 from repro.core import encodings as enc
 from repro.core import quant as quantlib
 from repro.engine import (ACT_QUANT_POLICIES, IMPLS, QuantSpec,
@@ -99,7 +100,7 @@ def test_spec_is_hashable_cache_key():
 def test_registry_has_all_engines():
     assert engine_names() == IMPLS == \
         ("ref", "planes", "int8", "pallas", "pallas_fused",
-         "pallas_sparse")
+         "pallas_sparse", "pallas_pipelined")
     with pytest.raises(ValueError, match="unknown quant impl"):
         get_engine("nope")
 
@@ -159,7 +160,7 @@ def test_kernel_engines_per_token_act_quant(rng):
         got = np.asarray(get_engine(impl).apply(
             w, x, spec.replace(impl=impl), interpret=True,
             out_dtype=jnp.float32))
-        np.testing.assert_allclose(got, oracle, rtol=1e-6, atol=1e-6)
+        assert_cross_context_close(got, oracle)
     # batch-independence: scaling row 1 must not change row 0's output
     # bitwise (per-tensor couples rows through the shared max-abs scale)
     y = np.asarray(get_engine("pallas_fused").apply(
