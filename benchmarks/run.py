@@ -486,6 +486,42 @@ def encoding_width_scaling():
     return out
 
 
+def analysis_static_passes():
+    """Wall time + verdicts of the repro.analysis static passes on a real
+    plan: the schedule verifier / DMA-hazard walk over both orders, the
+    VMEM budget pass at a grok-scale shape (must reject with a fallback
+    suggestion), and the cost-model cross-check on every route.  Not a
+    baseline lane (prefix 'analysis.'): wall times vary per host."""
+    import numpy as np
+    from repro import analysis
+    from repro.engine.spec import QuantSpec
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    spec = QuantSpec(planes=3)
+    m, k, n = 256, 256, 128
+    w = (rng.standard_t(4, size=(k, m)) * 0.02).astype(np.float32)
+    out = {}
+    for order in ("m_major", "k_major"):
+        planned, _ = ops.plan_for(w, spec, order=order)
+        us, report = _timed(
+            lambda p=planned, o=order: analysis.verify_plan(p, spec.radix, o))
+        out[f"verify_{order}"] = {"us": round(us, 1), "clean": report.ok,
+                                  "steps": int(planned.schedule.shape[0])}
+    plan_m, _ = ops.plan_for(w, spec, order="m_major")
+    plan_k, _ = ops.plan_for(w, spec, order="k_major")
+    cc = analysis.Report("bench crosscheck")
+    for impl, plan in (("pallas_fused", plan_m), ("pallas_sparse", plan_m),
+                       ("pallas_pipelined", plan_k)):
+        analysis.crosscheck_cost(impl, m, k, n, spec, plan, report=cc)
+    out["cost_crosscheck_exact"] = cc.ok
+    grok = analysis.check_vmem("pipelined", 32768, 6144, 128, block_m=128,
+                               block_k=256, block_n=128, n_planes=4)
+    out["vmem_grok_rejected"] = not grok.ok
+    out["vmem_grok_suggestion"] = \
+        grok.errors[0].suggestion if grok.errors else None
+    return out
+
+
 BENCHES = [
     ("table2.numpp_census", table2_numpp_census),
     ("table3.avg_numpps", table3_avg_numpps),
@@ -507,6 +543,7 @@ BENCHES = [
     ("e2e.serve_throughput", serve_throughput),
     ("beyond.qat_planes_ablation", qat_planes_ablation),
     ("beyond.encoding_width_scaling", encoding_width_scaling),
+    ("analysis.static_passes", analysis_static_passes),
 ]
 
 

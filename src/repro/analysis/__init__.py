@@ -1,0 +1,99 @@
+"""repro.analysis — static analysis for the bit-weight kernel stack.
+
+Three analyzers that run *before* any Pallas call (all pure
+numpy — no kernel launch, no tracing):
+
+- :func:`verify_schedule` (``analysis.schedule``) — every SCHED_COLS
+  invariant ``ops.build_schedule`` guarantees: coverage, deferred-shift
+  weights, FIRST/LAST protocol, sentinels/padding, order legality,
+  B_FETCH residency;
+- :func:`check_dma_hazards` (``analysis.dma``) — a symbolic replay of the
+  v3 double-buffer slot machine flagging WAR hazards, stale slot reads
+  and semaphore unbalance;
+- :func:`check_vmem` / :func:`filter_vmem_configs` (``analysis.vmem``) —
+  the dtype-aware resident-footprint budget pass (the ROADMAP's VMEM
+  budget guard) with machine-actionable clamp suggestions, used by the
+  autotuner as a hard candidate filter;
+
+plus :func:`crosscheck_cost` (``analysis.cost``), which re-derives the
+``GemmEngine.cost()`` counters from a symbolic schedule walk so the cost
+model cannot drift from kernel reality.
+
+Execution-path wiring: ``ops.plan_for`` / ``ops.planned_dense_apply``
+accept ``verify=`` (default: the ``REPRO_VERIFY`` env toggle; the test
+suite turns it on globally) and raise :class:`AnalysisError` on any
+error-severity finding.  ``python -m repro.analysis`` audits the
+checked-in autotune cache, the config registry, and the CI-shape plans.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .diagnostics import (AnalysisError, CODES, Diagnostic, ERROR, INFO,
+                          Report, WARNING)
+from .schedule import verify_schedule
+from .dma import check_dma_hazards
+from .vmem import (DEFAULT_VMEM_BUDGET, check_vmem, clamp_suggestion,
+                   filter_vmem_configs, vmem_budget, vmem_footprint)
+from .cost import ENGINE_ROUTES, crosscheck_cost, symbolic_counters
+
+__all__ = [
+    "AnalysisError", "CODES", "Diagnostic", "Report",
+    "ERROR", "WARNING", "INFO",
+    "verify_schedule", "check_dma_hazards", "verify_plan",
+    "DEFAULT_VMEM_BUDGET", "vmem_budget", "vmem_footprint", "check_vmem",
+    "clamp_suggestion", "filter_vmem_configs",
+    "ENGINE_ROUTES", "symbolic_counters", "crosscheck_cost",
+]
+
+_SCHED_COLS_CHECKED = False
+
+
+def _check_sched_cols() -> None:
+    """One-time guard: the analyzers' hard-coded column indices must match
+    the kernel module's SCHED_COLS layout (lazy so the numpy-only passes
+    stay importable without jax)."""
+    global _SCHED_COLS_CHECKED
+    if _SCHED_COLS_CHECKED:
+        return
+    from repro.kernels.bw_gemm import SCHED_COLS
+    expected = {"plane": 0, "row": 1, "kblk": 2, "weight": 3, "first": 4,
+                "last": 5, "d_slot": 6, "b_slot": 7, "b_fetch": 8}
+    if SCHED_COLS != expected:
+        raise RuntimeError(
+            f"repro.analysis is out of sync with bw_gemm.SCHED_COLS: "
+            f"{SCHED_COLS} != {expected}; update the analyzers' column "
+            f"indices together with the kernel layout")
+    _SCHED_COLS_CHECKED = True
+
+
+def verify_plan(plan, radix: int, order: str = "m_major", *,
+                report: Optional[Report] = None) -> Report:
+    """Run the schedule verifier (+ DMA-hazard walk when annotated) over a
+    plan.
+
+    plan: an ``ops.PlannedOperand`` or a plan record dict from
+    ``ops.plan_dense_weight`` (must carry concrete ``schedule`` and
+    ``mask`` arrays — callers skip verification under tracing).  radix:
+    the encoding radix baked into the schedule's WEIGHT column.  Returns
+    the combined Report; callers raise via ``report.raise_if_errors()``.
+    """
+    import numpy as np
+
+    _check_sched_cols()
+    report = report if report is not None else Report("plan")
+    if isinstance(plan, dict):
+        schedule, mask = plan.get("schedule"), plan.get("mask")
+    else:
+        schedule = getattr(plan, "schedule", None)
+        mask = getattr(plan, "mask", None)
+        order = getattr(plan, "order", order)
+    if schedule is None or mask is None:
+        report.add("SCHED_BAD_SHAPE",
+                   "plan carries no schedule/mask to verify")
+        return report
+    schedule = np.asarray(schedule)
+    verify_schedule(schedule, np.asarray(mask), radix, order, report=report)
+    if schedule.ndim == 2 and schedule.shape[1] == 9:
+        check_dma_hazards(schedule, report=report)
+    return report

@@ -7,7 +7,7 @@ tests.  Shapes are the four assigned input-shape cells.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 from repro.engine.spec import QuantSpec
 

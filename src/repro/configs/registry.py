@@ -6,7 +6,7 @@ with a reduced same-family config for CPU tests.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 from .base import ModelConfig, ShapeConfig, SHAPES
 

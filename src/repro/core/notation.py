@@ -37,7 +37,7 @@ MAC), OPT1, OPT2, OPT3, OPT4C, OPT4E.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

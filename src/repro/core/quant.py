@@ -9,12 +9,10 @@ Includes a straight-through estimator so the path is trainable (QAT).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 __all__ = [
     "symmetric_scale",

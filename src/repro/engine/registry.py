@@ -319,10 +319,28 @@ class PallasEngine(GemmEngine):
 
     # -- schedule-aware cost -------------------------------------------------
 
-    def _geometry(self, m, k, n, spec):
+    def _geometry(self, m, k, n, spec, plan=None):
+        """(bm, bk, bn, mb, kb, nb) for the cost model.
+
+        With a plan record / PlannedOperand in hand the block grid is
+        read off its arrays (the plan may have been built under different
+        block sizes than select_block_sizes would pick today — e.g. an
+        autotune-cache update between planning and costing), so the
+        counters describe the schedule that will actually run."""
         from repro.kernels import ops
         bm, bk, bn = ops.select_block_sizes(m, k, n, spec)
-        return (bm, bk, bn, -(-m // bm), -(-k // bk), -(-n // bn))
+        mb, kb = -(-m // bm), -(-k // bk)
+        if plan is not None:
+            mask = plan.get("mask") if isinstance(plan, dict) \
+                else getattr(plan, "mask", None)
+            digits = plan.get("digits") if isinstance(plan, dict) \
+                else getattr(plan, "digits", None)
+            if getattr(mask, "ndim", 0) == 3 and \
+                    getattr(digits, "ndim", 0) == 3:
+                _, mb, kb = mask.shape
+                bm = digits.shape[1] // mb
+                bk = digits.shape[2] // kb
+        return (bm, bk, bn, mb, kb, -(-n // bn))
 
     def cost(self, m, k, n, spec, *, density=None, plan=None):
         """Dense predicated kernel: the full (M/bm, N/bn, K/bk) grid is
@@ -330,7 +348,7 @@ class PallasEngine(GemmEngine):
         *MXU passes* of empty plane-blocks are skipped (pl.when)."""
         if density is None:
             density = self._plan_density(plan)
-        bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec)
+        bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec, plan)
         bwn = spec.num_digits
         if density is None:
             density = active_planes(spec) / bwn
@@ -376,17 +394,43 @@ class PallasSparseEngine(PallasFusedEngine):
     name = "pallas_sparse"
     dispatch = "auto"
 
+    @staticmethod
+    def _plan_schedule(plan, min_cols: int = 6):
+        """The plan's concrete [L, >=min_cols] schedule, or None (no plan,
+        stacked per-layer plans, or a schedule missing the columns the
+        caller's counters need)."""
+        if plan is None:
+            return None
+        sched = plan.get("schedule") if isinstance(plan, dict) \
+            else getattr(plan, "schedule", None)
+        if sched is None:
+            return None
+        import numpy as np
+        sched = np.asarray(sched)
+        # stacked per-layer plans ([layers, L, 9]) fall back to the
+        # density estimate: per-layer counters would need per-layer shapes
+        if sched.ndim != 2 or sched.shape[1] < min_cols:
+            return None
+        return sched
+
     def cost(self, m, k, n, spec, *, density=None, plan=None):
         if density is None:
             density = self._plan_density(plan)
-        bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec)
+        bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec, plan)
         bwn = spec.num_digits
         if density is None:
             density = active_planes(spec) / bwn
-        nnz = density * bwn * mb * kb
-        # every m-block row is visited at least once (zero-weight
-        # sentinels keep empty output rows written)
-        steps = max(int(round(nnz)), mb)
+        sched = self._plan_schedule(plan)
+        if sched is not None:
+            # measured: the schedule length (nnz + sentinels + padding) IS
+            # the walk — the estimate below would under-count whenever
+            # sentinel/padding steps outnumber the rounding slack
+            steps = sched.shape[0]
+        else:
+            nnz = density * bwn * mb * kb
+            # every m-block row is visited at least once (zero-weight
+            # sentinels keep empty output rows written)
+            steps = max(int(round(nnz)), mb)
         return {
             "mxu_passes": self._passes(spec),
             "int_macs": int(density * bwn * m * k * n),
@@ -424,30 +468,14 @@ class PallasPipelinedEngine(PallasSparseEngine):
     name = "pallas_pipelined"
     order = "k_major"
 
-    @staticmethod
-    def _plan_schedule(plan):
-        if plan is None:
-            return None
-        sched = plan["schedule"] if isinstance(plan, dict) \
-            else getattr(plan, "schedule", None)
-        if sched is None:
-            return None
-        import numpy as np
-        sched = np.asarray(sched)
-        # stacked per-layer plans ([layers, L, 9]) fall back to the
-        # density estimate: per-layer counters would need per-layer shapes
-        if sched.ndim != 2 or sched.shape[1] < 9:
-            return None
-        return sched
-
     def cost(self, m, k, n, spec, *, density=None, plan=None):
         if density is None:
             density = self._plan_density(plan)
-        bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec)
+        bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec, plan)
         bwn = spec.num_digits
         if density is None:
             density = active_planes(spec) / bwn
-        sched = self._plan_schedule(plan)
+        sched = self._plan_schedule(plan, 9)   # B_FETCH column required
         if sched is not None:             # measured: exact schedule counts
             steps = sched.shape[0]
             real = int((sched[:, 3] != 0).sum())      # weight column

@@ -350,8 +350,16 @@ def autotune_gemm(m: int, k: int, n: int, spec=None, a=None, b=None, *,
     runners = {"dense": ops.bw_gemm_fused,
                "sparse": ops.bw_gemm_sparse_fused,
                "pipelined": ops.bw_gemm_sparse_fused_pipelined}
+    # hard VMEM gate: candidates whose resident footprint cannot fit a TPU
+    # core are never measured (interpret mode would happily "win" with a
+    # config that OOMs on hardware); the filter never empties the pool
+    from repro import analysis
+    from repro.core import encodings as enc
+    all_configs = candidate_configs(m, k, n)
+    candidates, _ = analysis.filter_vmem_configs(
+        m, k, n, all_configs, n_planes=enc.num_digits(encoding, bits))
     results = []
-    for config in candidate_configs(m, k, n):
+    for config in candidates:
         planned = ops.plan_operand(a, encoding=encoding,
                                    block_m=config["block_m"],
                                    block_k=config["block_k"], bits=bits,
@@ -371,7 +379,9 @@ def autotune_gemm(m: int, k: int, n: int, spec=None, a=None, b=None, *,
         results.append((secs, config, proxy))
     secs, config, density = min(results, key=lambda r: r[0])
     winner = dict(config, us=round(secs * 1e6), density=round(density, 4),
-                  candidates=len(results), backend=current_backend())
+                  candidates=len(results),
+                  vmem_rejected=len(all_configs) - len(candidates),
+                  backend=current_backend())
     cache = cache if cache is not None else get_cache()
     cache.record(m, k, n, spec, winner, density=density)
     return winner

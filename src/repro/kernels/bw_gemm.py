@@ -66,6 +66,57 @@ EPILOGUE_ACTIVATIONS = {
 }
 
 
+def _check_dims(fn: str, m: int, k: int, k2: int, n: int, block_m: int,
+                block_n: int, block_k: int) -> None:
+    """Real validation, not ``assert`` (which vanishes under ``python -O``
+    and reports nothing useful)."""
+    if k != k2:
+        raise ValueError(
+            f"{fn}: digits have inner dim K={k} but b has K={k2} rows")
+    for dim, name, blk, bname in ((m, "M", block_m, "block_m"),
+                                  (n, "N", block_n, "block_n"),
+                                  (k, "K", block_k, "block_k")):
+        if dim % blk:
+            raise ValueError(
+                f"{fn}: {name}={dim} is not a multiple of {bname}={blk}; "
+                f"pad the operands first (the ops.* wrappers do this)")
+
+
+def _check_mask(fn: str, mask, bw_n: int, mb: int, kb: int) -> None:
+    if mask.shape != (bw_n, mb, kb):
+        raise ValueError(
+            f"{fn}: mask shape {tuple(mask.shape)} != expected "
+            f"({bw_n}, {mb}, {kb}) = [BW, M/block_m, K/block_k]")
+
+
+def _check_schedule(fn: str, schedule, *, annotated: bool = False) -> None:
+    want = len(SCHED_COLS) if annotated else 6
+    ok = (schedule.ndim == 2
+          and (schedule.shape[1] == want if annotated
+               else schedule.shape[1] >= want))
+    if not ok:
+        rel = "exactly" if annotated else "at least"
+        raise ValueError(
+            f"{fn}: schedule must be a 2-D int array with {rel} {want} "
+            f"columns (SCHED_COLS), got shape {tuple(schedule.shape)}")
+
+
+def _check_epilogue(fn: str, activation, scale, scale_shape, scale_n,
+                    n: int) -> None:
+    if activation not in EPILOGUE_ACTIVATIONS:
+        raise ValueError(
+            f"{fn}: unknown activation {activation!r}; expected one of "
+            f"{sorted(a for a in EPILOGUE_ACTIVATIONS if a)} or None")
+    if scale.shape != scale_shape:
+        raise ValueError(
+            f"{fn}: scale shape {tuple(scale.shape)} != expected "
+            f"{scale_shape}")
+    if scale_n is not None and scale_n.shape != (1, n):
+        raise ValueError(
+            f"{fn}: scale_n shape {tuple(scale_n.shape)} != expected "
+            f"(1, {n})")
+
+
 def _kernel(mask_ref, d_ref, b_ref, o_ref, *, n_planes: int, radix: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -96,10 +147,8 @@ def bw_gemm(digits, b, mask, *, block_m: int = 128, block_n: int = 128,
     """
     bw_n, m, k = digits.shape
     k2, n = b.shape
-    assert k == k2
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    assert mask.shape == (bw_n, m // block_m, k // block_k), (
-        mask.shape, (bw_n, m // block_m, k // block_k))
+    _check_dims("bw_gemm", m, k, k2, n, block_m, block_n, block_k)
+    _check_mask("bw_gemm", mask, bw_n, m // block_m, k // block_k)
     grid = (m // block_m, n // block_n, k // block_k)
     kernel = functools.partial(_kernel, n_planes=bw_n, radix=radix)
     return pl.pallas_call(
@@ -183,25 +232,26 @@ def bw_gemm_fused(digits, b, mask, scale, bias=None, scale_n=None, *,
     """
     bw_n, m, k = digits.shape
     k2, n = b.shape
-    assert k == k2
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    assert mask.shape == (bw_n, m // block_m, k // block_k), (
-        mask.shape, (bw_n, m // block_m, k // block_k))
-    assert epilogue_axis in ("m", "n")
-    assert activation in EPILOGUE_ACTIVATIONS, activation
+    _check_dims("bw_gemm_fused", m, k, k2, n, block_m, block_n, block_k)
+    _check_mask("bw_gemm_fused", mask, bw_n, m // block_m, k // block_k)
+    if epilogue_axis not in ("m", "n"):
+        raise ValueError(f"bw_gemm_fused: epilogue_axis must be 'm' or "
+                         f"'n', got {epilogue_axis!r}")
     if epilogue_axis == "m":
-        assert scale.shape == (m, 1), scale.shape
+        _check_epilogue("bw_gemm_fused", activation, scale, (m, 1),
+                        scale_n, n)
         vec_spec = pl.BlockSpec((block_m, 1), lambda i, j, kk: (i, 0))
         col_spec = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
     else:
-        assert scale.shape == (1, n), scale.shape
-        assert scale_n is None, "scale_n only supports epilogue_axis='m'"
+        if scale_n is not None:
+            raise ValueError("bw_gemm_fused: scale_n only supports "
+                             "epilogue_axis='m'")
+        _check_epilogue("bw_gemm_fused", activation, scale, (1, n),
+                        scale_n, n)
         vec_spec = pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j))
         col_spec = vec_spec
     has_scale_n = scale_n is not None
-    if has_scale_n:
-        assert scale_n.shape == (1, n), scale_n.shape
-    else:                               # placeholder so arity is static
+    if not has_scale_n:                 # placeholder so arity is static
         scale_n = jnp.ones((1, n), jnp.float32)
     has_bias = bias is not None
     if not has_bias:                    # placeholder so arity is static
@@ -276,9 +326,8 @@ def bw_gemm_sparse(digits, b, schedule, *, block_m: int = 128,
     """
     bw_n, m, k = digits.shape
     k2, n = b.shape
-    assert k == k2
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    assert schedule.ndim == 2 and schedule.shape[1] >= 6, schedule.shape
+    _check_dims("bw_gemm_sparse", m, k, k2, n, block_m, block_n, block_k)
+    _check_schedule("bw_gemm_sparse", schedule)
     steps = schedule.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -359,15 +408,13 @@ def bw_gemm_sparse_fused(digits, b, schedule, scale, bias=None, scale_n=None,
     """
     bw_n, m, k = digits.shape
     k2, n = b.shape
-    assert k == k2
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    assert schedule.ndim == 2 and schedule.shape[1] >= 6, schedule.shape
-    assert activation in EPILOGUE_ACTIVATIONS, activation
-    assert scale.shape == (m, 1), scale.shape
+    _check_dims("bw_gemm_sparse_fused", m, k, k2, n, block_m, block_n,
+                block_k)
+    _check_schedule("bw_gemm_sparse_fused", schedule)
+    _check_epilogue("bw_gemm_sparse_fused", activation, scale, (m, 1),
+                    scale_n, n)
     has_scale_n = scale_n is not None
-    if has_scale_n:
-        assert scale_n.shape == (1, n), scale_n.shape
-    else:                               # placeholder so arity is static
+    if not has_scale_n:                 # placeholder so arity is static
         scale_n = jnp.ones((1, n), jnp.float32)
     has_bias = bias is not None
     if not has_bias:                    # placeholder so arity is static
@@ -548,10 +595,9 @@ def bw_gemm_sparse_pipelined(digits, b, schedule, *, block_m: int = 128,
     """
     bw_n, m, k = digits.shape
     k2, n = b.shape
-    assert k == k2
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    assert schedule.ndim == 2 and schedule.shape[1] == len(SCHED_COLS), \
-        schedule.shape
+    _check_dims("bw_gemm_sparse_pipelined", m, k, k2, n, block_m, block_n,
+                block_k)
+    _check_schedule("bw_gemm_sparse_pipelined", schedule, annotated=True)
     steps = schedule.shape[0]
     kernel = functools.partial(_sparse_pipelined_kernel, block_m=block_m,
                                block_n=block_n, block_k=block_k, steps=steps)
@@ -645,16 +691,14 @@ def bw_gemm_sparse_fused_pipelined(digits, b, schedule, scale, bias=None,
     """
     bw_n, m, k = digits.shape
     k2, n = b.shape
-    assert k == k2
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
-    assert schedule.ndim == 2 and schedule.shape[1] == len(SCHED_COLS), \
-        schedule.shape
-    assert activation in EPILOGUE_ACTIVATIONS, activation
-    assert scale.shape == (m, 1), scale.shape
+    _check_dims("bw_gemm_sparse_fused_pipelined", m, k, k2, n, block_m,
+                block_n, block_k)
+    _check_schedule("bw_gemm_sparse_fused_pipelined", schedule,
+                    annotated=True)
+    _check_epilogue("bw_gemm_sparse_fused_pipelined", activation, scale,
+                    (m, 1), scale_n, n)
     has_scale_n = scale_n is not None
-    if has_scale_n:
-        assert scale_n.shape == (1, n), scale_n.shape
-    else:                               # placeholder so arity is static
+    if not has_scale_n:                 # placeholder so arity is static
         scale_n = jnp.ones((1, n), jnp.float32)
     has_bias = bias is not None
     if not has_bias:                    # placeholder so arity is static

@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import hashlib
+import os
 import weakref
 from typing import Optional
 
@@ -44,11 +45,60 @@ __all__ = ["PlannedOperand", "encode_planes", "plane_block_mask",
            "plan_params", "build_schedule", "pad_schedule",
            "schedule_stats", "bw_gemm_sparse", "bw_gemm_sparse_fused",
            "bw_gemm_sparse_pipelined", "bw_gemm_sparse_fused_pipelined",
-           "SPARSE_DENSITY_THRESHOLD", "SCHEDULE_ORDERS", "DISPATCHES"]
+           "SPARSE_DENSITY_THRESHOLD", "SCHEDULE_ORDERS", "DISPATCHES",
+           "verification_enabled", "ENV_VERIFY"]
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Static verification (repro.analysis) at the planning/apply seams
+# ---------------------------------------------------------------------------
+# REPRO_VERIFY=1 turns the schedule verifier + DMA-hazard walk on by
+# default at every plan build and (pre-kernel) at planned_dense_apply; the
+# test suite enables it globally in tests/conftest.py.  Verified schedules
+# are memoized by identity (weakref-evicted) so eager serving loops pay
+# the pure-python walk once per plan, not once per matmul.
+
+ENV_VERIFY = "REPRO_VERIFY"
+
+_VERIFIED_SCHEDULES: dict = {}
+
+
+def _verify_enabled(verify: Optional[bool]) -> bool:
+    if verify is not None:
+        return bool(verify)
+    return os.environ.get(ENV_VERIFY, "0").lower() not in (
+        "", "0", "false", "off", "no")
+
+
+def verification_enabled() -> bool:
+    """True when plan verification is on by default ($REPRO_VERIFY)."""
+    return _verify_enabled(None)
+
+
+def _schedule_verified(sched) -> bool:
+    ref = _VERIFIED_SCHEDULES.get(id(sched))
+    return ref is not None and ref() is sched
+
+
+def _mark_schedule_verified(sched) -> None:
+    try:
+        _VERIFIED_SCHEDULES[id(sched)] = weakref.ref(
+            sched, lambda _r, key=id(sched):
+            _VERIFIED_SCHEDULES.pop(key, None))
+    except TypeError:
+        pass                  # not weakref-able: skip the memo, stay correct
+
+
+def _verify_planned(planned: "PlannedOperand") -> None:
+    """Run the static analyzers over a freshly built plan (plan_for &co)."""
+    from repro import analysis
+    analysis.verify_plan(planned, enc.radix(planned.encoding),
+                         planned.order).raise_if_errors()
+    _mark_schedule_verified(planned.schedule)
 
 
 def _pad_to(x, mult, axis):
@@ -63,6 +113,29 @@ def _pad_to(x, mult, axis):
 def encode_planes(a, encoding: str = "ent", bits: int = 8):
     """int8 A [M, K] -> digit planes int8 [BW, M, K]."""
     return kref.encode_planes_ref(a, encoding, bits)
+
+
+def _check_operand_k(k: int, planned_k: int) -> None:
+    """Real validation (asserts vanish under ``python -O``)."""
+    if k != planned_k:
+        raise ValueError(
+            f"b has K={k} rows but the planned operand was built with "
+            f"K={planned_k}; re-plan the weight or fix the activation "
+            f"reshape")
+
+
+def _check_gemm_k(k: int, k2: int) -> None:
+    if k != k2:
+        raise ValueError(
+            f"inner-dim mismatch: a has K={k} columns but b has K={k2} "
+            f"rows")
+
+
+def _check_has_schedule(planned: "PlannedOperand") -> None:
+    if planned.schedule is None:
+        raise ValueError(
+            "plan has no schedule; build it with plan_operand / "
+            "build_schedule before calling a sparse kernel")
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +420,7 @@ def bw_gemm(planned: PlannedOperand, b, *, block_n: int = 128,
     if interpret is None:
         interpret = _interpret()
     k, n = b.shape
-    assert k == planned.k, (k, planned.k)
+    _check_operand_k(k, planned.k)
     b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
                 block_n, 1)
     out = _bw_gemm_padded(
@@ -368,14 +441,15 @@ def bw_gemm_sparse(planned: PlannedOperand, b, *, block_n: int = 128,
     if interpret is None:
         interpret = _interpret()
     k, n = b.shape
-    assert k == planned.k, (k, planned.k)
-    assert planned.schedule is not None, "plan has no schedule"
+    _check_operand_k(k, planned.k)
+    _check_has_schedule(planned)
     # the v2 out-BlockSpec accumulates only across *consecutive* revisits;
     # a k_major plan would silently clobber partial sums on real TPUs
     # (interpret mode hides it), so refuse it here, not just in dispatch
-    assert planned.order == "m_major", \
-        f"bw_gemm_sparse requires an m_major plan, got {planned.order!r} " \
-        f"(use bw_gemm_sparse_pipelined)"
+    if planned.order != "m_major":
+        raise ValueError(
+            f"bw_gemm_sparse requires an m_major plan, got "
+            f"{planned.order!r} (use bw_gemm_sparse_pipelined)")
     b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
                 block_n, 1)
     out = _bw.bw_gemm_sparse(
@@ -397,12 +471,13 @@ def bw_gemm_sparse_fused(planned: PlannedOperand, b, scale, bias=None, *,
     if interpret is None:
         interpret = _interpret()
     k, n = b.shape
-    assert k == planned.k, (k, planned.k)
-    assert planned.schedule is not None, "plan has no schedule"
+    _check_operand_k(k, planned.k)
+    _check_has_schedule(planned)
     # see bw_gemm_sparse: v2 accumulation is only legal on m_major plans
-    assert planned.order == "m_major", \
-        f"bw_gemm_sparse_fused requires an m_major plan, got " \
-        f"{planned.order!r} (use bw_gemm_sparse_fused_pipelined)"
+    if planned.order != "m_major":
+        raise ValueError(
+            f"bw_gemm_sparse_fused requires an m_major plan, got "
+            f"{planned.order!r} (use bw_gemm_sparse_fused_pipelined)")
     m_pad = planned.digits.shape[1]
     row_perm = jnp.asarray(planned.row_perm)
     scale_rows = _channel_rows(scale, planned.m, m_pad, row_perm)
@@ -431,8 +506,8 @@ def bw_gemm_sparse_pipelined(planned: PlannedOperand, b, *,
     if interpret is None:
         interpret = _interpret()
     k, n = b.shape
-    assert k == planned.k, (k, planned.k)
-    assert planned.schedule is not None, "plan has no schedule"
+    _check_operand_k(k, planned.k)
+    _check_has_schedule(planned)
     b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), planned.block_k, 0),
                 block_n, 1)
     out = _bw.bw_gemm_sparse_pipelined(
@@ -455,8 +530,8 @@ def bw_gemm_sparse_fused_pipelined(planned: PlannedOperand, b, scale,
     if interpret is None:
         interpret = _interpret()
     k, n = b.shape
-    assert k == planned.k, (k, planned.k)
-    assert planned.schedule is not None, "plan has no schedule"
+    _check_operand_k(k, planned.k)
+    _check_has_schedule(planned)
     m_pad = planned.digits.shape[1]
     row_perm = jnp.asarray(planned.row_perm)
     scale_rows = _channel_rows(scale, planned.m, m_pad, row_perm)
@@ -480,7 +555,7 @@ def quant_gemm(a, b, *, block_m: int = 128, block_n: int = 128,
         interpret = _interpret()
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2
+    _check_gemm_k(k, k2)
     a = _pad_to(_pad_to(jnp.asarray(a, jnp.int8), block_m, 0), block_k, 1)
     b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), block_k, 0), block_n, 1)
     out = _qg.quant_gemm(a, b, block_m=block_m, block_n=block_n,
@@ -500,7 +575,7 @@ def bw_gemm_fused(planned: PlannedOperand, b, scale, bias=None, *,
     if interpret is None:
         interpret = _interpret()
     k, n = b.shape
-    assert k == planned.k, (k, planned.k)
+    _check_operand_k(k, planned.k)
     m_pad = planned.digits.shape[1]
     row_perm = jnp.asarray(planned.row_perm)
     scale_rows = _channel_rows(scale, planned.m, m_pad, row_perm)
@@ -529,7 +604,7 @@ def quant_gemm_fused(a, b, scale, bias=None, *, activation=None,
         interpret = _interpret()
     m, k = a.shape
     k2, n = b.shape
-    assert k == k2
+    _check_gemm_k(k, k2)
     a = _pad_to(_pad_to(jnp.asarray(a, jnp.int8), block_m, 0), block_k, 1)
     b = _pad_to(_pad_to(jnp.asarray(b, jnp.int8), block_k, 0), block_n, 1)
     scale = _pad_to(jnp.asarray(scale, jnp.float32).reshape(1, n), block_n, 1)
@@ -611,7 +686,8 @@ def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
 
 
-def plan_for(w, spec, order: str = "m_major"):
+def plan_for(w, spec, order: str = "m_major",
+             verify: Optional[bool] = None):
     """Quantize + plan a dense weight for the kernel path, with caching.
 
     w: float [K, N] (d_in, d_out).  spec: QuantSpec (or legacy int plane
@@ -621,6 +697,11 @@ def plan_for(w, spec, order: str = "m_major"):
     Cache entries key on (weight, spec.plan_key(), order): the same
     weight planned under two specs or two schedule orders coexists as
     independent entries.
+
+    verify: run the repro.analysis schedule verifier + DMA-hazard walk on
+    the freshly built plan and raise ``AnalysisError`` on any violation
+    (None: the ``REPRO_VERIFY`` env toggle; cached plans were verified at
+    build time and are not re-checked).
     """
     if isinstance(w, jax.core.Tracer):
         raise TypeError(
@@ -636,6 +717,8 @@ def plan_for(w, spec, order: str = "m_major"):
             jnp.asarray(w).astype(jnp.float32), spec, axis=0)
         planned = plan_operand(qw.T, encoding=spec.encoding, block_m=block_m,
                                block_k=block_k, bits=spec.bits, order=order)
+        if _verify_enabled(verify):
+            _verify_planned(planned)
         return planned, jnp.asarray(sw, jnp.float32)
 
     return _PLAN_CACHE.lookup(w, params, build)
@@ -649,7 +732,8 @@ def _channel_rows(vec, n: int, m_pad: int, row_perm) -> jax.Array:
 
 
 def plan_dense_weight(w, spec, use_cache: bool = True,
-                      order: str = "m_major") -> dict:
+                      order: str = "m_major",
+                      verify: Optional[bool] = None) -> dict:
     """Quantize + plan a dense weight into a pure-array plan record.
 
     The record is a pytree of arrays only (digit planes, occupancy mask,
@@ -668,7 +752,7 @@ def plan_dense_weight(w, spec, use_cache: bool = True,
     """
     spec = QuantSpec.coerce(spec)
     if use_cache:
-        planned, sw = plan_for(w, spec, order=order)
+        planned, sw = plan_for(w, spec, order=order, verify=verify)
     else:
         k, n = w.shape
         block_m, block_k, _ = select_block_sizes(n, k, 128, spec)
@@ -676,6 +760,8 @@ def plan_dense_weight(w, spec, use_cache: bool = True,
             jnp.asarray(w).astype(jnp.float32), spec, axis=0)
         planned = plan_operand(qw.T, encoding=spec.encoding, block_m=block_m,
                                block_k=block_k, bits=spec.bits, order=order)
+        if _verify_enabled(verify):
+            _verify_planned(planned)
         sw = jnp.asarray(sw, jnp.float32)
     n = w.shape[1]
     m_pad = planned.digits.shape[1]
@@ -746,12 +832,36 @@ def _resolve_dispatch(dispatch: str, plan: dict, spec, n_out: int, k: int,
     return sparse_route if density <= SPARSE_DENSITY_THRESHOLD else "dense"
 
 
+def _maybe_verify_plan(plan: dict, spec, order: str,
+                       verify: Optional[bool]) -> None:
+    """planned_dense_apply's pre-kernel verification seam.
+
+    Skipped under tracing (schedule/mask are tracers inside scan over
+    stacked plans — the eager plan build already verified them), for
+    stacked [layers, L, 9] schedules, and for schedules this process has
+    already verified (identity memo)."""
+    if not _verify_enabled(verify):
+        return
+    sched, mask = plan.get("schedule"), plan.get("mask")
+    if sched is None or isinstance(sched, jax.core.Tracer) or \
+            isinstance(mask, jax.core.Tracer):
+        return
+    if getattr(sched, "ndim", 0) != 2 or _schedule_verified(sched):
+        return
+    from repro import analysis
+    analysis.verify_plan(
+        {"schedule": sched, "mask": mask}, spec.radix,
+        order).raise_if_errors()
+    _mark_schedule_verified(sched)
+
+
 def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
                         activation=None, out_dtype=jnp.float32,
                         block_n: Optional[int] = None,
                         interpret: Optional[bool] = None,
                         fused: bool = True, dispatch: str = "dense",
-                        order: str = "m_major"):
+                        order: str = "m_major",
+                        verify: Optional[bool] = None):
     """y = act((x @ w)_int * s_x * s_w + bias) through the bw_gemm kernel.
 
     plan: record from plan_dense_weight (possibly a scan-sliced layer of a
@@ -776,6 +886,12 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
     names the plan's schedule visit order: 'k_major' plans (built for
     B-block reuse) can only take the dense or pipelined routes.  The
     decision is shape-derived, so it stays static under jit/scan.
+
+    verify: run the static schedule verifier + DMA-hazard walk before
+    dispatching the kernel (None: the ``REPRO_VERIFY`` env toggle); a
+    corrupt schedule raises ``repro.analysis.AnalysisError`` instead of
+    silently miscomputing.  Skipped under tracing, where the schedule is
+    a tracer (the eager plan build already verified it).
     """
     spec = QuantSpec.coerce(spec)
     if interpret is None:
@@ -787,6 +903,10 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
             f"plan record has {bw_n} digit planes but spec "
             f"{spec.encoding!r}/{spec.bits}b implies {spec.num_digits}; "
             f"was the plan built under a different spec?")
+    # verify only after the spec/plan compatibility check: a plan applied
+    # under a foreign spec should fail with the specific message above,
+    # not with the verifier's radix-mismatch diagnostics
+    _maybe_verify_plan(plan, spec, order, verify)
     block_m = m_pad // mask.shape[1]
     block_k = k_pad // mask.shape[2]
     k = x.shape[-1]

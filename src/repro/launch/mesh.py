@@ -6,7 +6,7 @@ before the first jax device query.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 

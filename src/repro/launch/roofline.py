@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 __all__ = ["HW", "Roofline", "collective_bytes", "roofline_from_compiled",
            "model_flops", "quantized_gemm_roofline"]

@@ -17,12 +17,10 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.registry import ARCHS, get_config
 from repro.launch import mesh as meshlib

@@ -15,7 +15,7 @@ embeddings per the assignment's modality-stub rule).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp

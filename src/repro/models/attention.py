@@ -4,8 +4,6 @@ preallocated KV cache.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

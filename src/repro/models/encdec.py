@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.parallel.sharding import Boxed, box, constrain, unbox
+from repro.parallel.sharding import Boxed, constrain
 from . import layers as L
 from . import attention as A
 from .transformer import (norm_init, norm_apply, mlp_init, mlp_apply,

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.parallel.sharding import Boxed, box, constrain
+from repro.parallel.sharding import box, constrain
 from repro import engine as englib
 from repro.engine import _compat as _quant_compat
 from repro.engine.spec import QuantSpec

@@ -7,14 +7,11 @@ stays compact at 80+ layers.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.parallel.sharding import Boxed, box, constrain
+from repro.parallel.sharding import Boxed, constrain
 from . import layers as L
 from . import attention as A
 from . import moe as M

@@ -126,6 +126,7 @@ class ServeEngine:
             self.quant.plan_stats = {
                 "planned_weights": planned,
                 "plane_block_density": self.plan_density,
+                "schedules_verified": ops.verification_enabled(),
                 **ops.plan_cache_stats()}
         self.step_fn = jax.jit(make_serve_step(cfg))
         self.slots = SlotAllocator(batch, max_len, audit=audit)

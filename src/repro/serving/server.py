@@ -31,7 +31,7 @@ from .engine import ServeEngine
 from .metrics import ServerMetrics
 from .request import ServeRequest
 from .scheduler import Scheduler
-from .slots import SlotAllocator  # noqa: F401  (re-exported surface)
+from .slots import SlotAllocator  # noqa: F401  (re-exported surface
 from .tiers import Tier, TierRouter, default_tiers, estimate_step_time
 
 __all__ = ["TierWorker", "AsyncServer"]

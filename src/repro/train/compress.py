@@ -17,8 +17,6 @@ Two integration modes:
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

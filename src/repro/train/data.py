@@ -19,10 +19,8 @@ stream (the assignment's modality stub).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["DataConfig", "SyntheticStream", "make_batch"]

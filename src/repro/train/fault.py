@@ -20,8 +20,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import statistics
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Tuple
 
 __all__ = ["HeartbeatMonitor", "ElasticPolicy", "StragglerReport"]
 

@@ -15,16 +15,14 @@ AxisRules.  Batch inputs use the 'batch' rule on dim 0.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.api import get_api, loss_fn, frontend_len
+from repro.models.api import get_api, loss_fn
 from repro.parallel import sharding as sh
 from . import optimizer as opt
 from . import compress as comp

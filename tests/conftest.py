@@ -9,6 +9,10 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+# the static schedule verifier (repro.analysis) is always-on under the test
+# suite: any plan a test builds is checked before a kernel sees it
+os.environ.setdefault("REPRO_VERIFY", "1")
+
 
 @pytest.fixture(scope="session")
 def rng():

@@ -1,0 +1,264 @@
+"""repro.analysis: the static verifier stack on *valid* artifacts, the
+VMEM budget pass, the cost-model cross-check, the execution-path wiring
+(plan_for / planned_dense_apply ``verify=``), and the audit CLI.
+
+Corruption coverage (each SCHED_COLS column mutated -> a distinct
+diagnostic code) lives in test_analysis_mutations.py.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.analysis.__main__ import main as analysis_main
+from repro.engine.spec import QuantSpec
+from repro.kernels import ops
+from repro.kernels.autotune import CI_SHAPES
+
+RADIX = 4
+
+
+def _llmish(rng, k, m):
+    w = (rng.standard_t(4, size=(k, m)) * 0.02).astype(np.float32)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# valid plans are clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", ["m_major", "k_major"])
+@pytest.mark.parametrize("shape", [(256, 256), (256, 192)])
+def test_valid_plans_verify_clean(rng, order, shape):
+    k, m = shape
+    planned, _ = ops.plan_for(_llmish(rng, k, m), QuantSpec(planes=3),
+                              order=order)
+    report = analysis.verify_plan(planned, RADIX, order)
+    assert report.ok, str(report)
+    assert report.diagnostics == []
+
+
+# ---------------------------------------------------------------------------
+# build_schedule edge cases (satellite: all-sentinel / single-row /
+# single-kblk / pad_schedule)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("order", ["m_major", "k_major"])
+def test_all_sentinel_schedule_clean(order):
+    mask = np.zeros((4, 3, 2), bool)        # every row empty
+    sched = ops.build_schedule(mask, RADIX, order=order)
+    assert sched.shape == (3, 9)            # one sentinel per row
+    report = analysis.verify_schedule(sched, mask, RADIX, order)
+    assert report.ok, str(report)
+    assert analysis.check_dma_hazards(sched).ok
+
+
+@pytest.mark.parametrize("order", ["m_major", "k_major"])
+@pytest.mark.parametrize("mask_shape", [(4, 1, 3), (4, 3, 1), (1, 1, 1)])
+def test_single_row_and_single_kblk_clean(rng, order, mask_shape):
+    mask = rng.random(mask_shape) < 0.6
+    sched = ops.build_schedule(mask, RADIX, order=order)
+    report = analysis.verify_schedule(sched, mask, RADIX, order)
+    assert report.ok, str(report)
+    assert analysis.check_dma_hazards(sched).ok
+
+
+@pytest.mark.parametrize("order", ["m_major", "k_major"])
+def test_pad_schedule_stays_clean(rng, order):
+    mask = rng.random((4, 2, 2)) < 0.5
+    mask[:, 1, :] = False                   # keep a sentinel in the mix
+    sched = ops.build_schedule(mask, RADIX, order=order)
+    padded = ops.pad_schedule(sched, sched.shape[0] + 5)
+    report = analysis.verify_schedule(padded, mask, RADIX, order)
+    assert report.ok, str(report)
+    assert analysis.check_dma_hazards(padded).ok
+
+
+# ---------------------------------------------------------------------------
+# VMEM budget pass
+# ---------------------------------------------------------------------------
+
+def test_vmem_grok_pipelined_over_budget_suggests_fallback():
+    # grok-1 d_ff x d_model decode GEMM: the (M_pad, block_n) acc panel
+    # alone exceeds 16 MiB at any block shape -> route fallback
+    report = analysis.check_vmem("pipelined", 32768, 6144, 128,
+                                 block_m=128, block_k=256, block_n=128,
+                                 n_planes=4)
+    assert not report.ok
+    (diag,) = report.errors
+    assert diag.code == "VMEM_OVER_BUDGET"
+    assert diag.suggestion == {"route": "sparse", "order": "m_major"}
+
+
+def test_vmem_clamp_suggestion_fits():
+    # a tight budget where shrinking blocks *does* fit: the suggestion
+    # must itself pass the footprint check
+    budget = 600_000
+    suggestion = analysis.clamp_suggestion(
+        "dense", 1024, 1024, 1024, block_m=256, block_k=512, block_n=256,
+        n_planes=4, budget=budget)
+    assert set(suggestion) == {"block_m", "block_k", "block_n"}
+    parts = analysis.vmem_footprint("dense", 1024, 1024, 1024,
+                                    n_planes=4, **suggestion)
+    assert parts["total"] <= budget
+
+
+def test_vmem_in_budget_is_silent():
+    report = analysis.check_vmem("sparse", 256, 256, 128, block_m=128,
+                                 block_k=128, block_n=128, n_planes=4)
+    assert report.ok and report.diagnostics == []
+
+
+def test_filter_vmem_configs_rejects_grok_pipelined():
+    from repro.kernels.autotune import candidate_configs
+    m, k, n = 32768, 6144, 128
+    configs = candidate_configs(m, k, n)
+    kept, report = analysis.filter_vmem_configs(m, k, n, configs,
+                                                n_planes=4)
+    assert kept and len(kept) < len(configs)
+    assert all(c["dispatch"] != "pipelined" for c in kept)
+    assert "VMEM_OVER_BUDGET" in report.codes()
+    assert report.ok                        # rejections are info, not errors
+
+
+def test_filter_vmem_configs_never_empties_pool():
+    configs = [{"block_m": 256, "block_k": 512, "block_n": 256,
+                "dispatch": "dense"},
+               {"block_m": 128, "block_k": 128, "block_n": 128,
+                "dispatch": "sparse"}]
+    kept, report = analysis.filter_vmem_configs(256, 256, 128, configs,
+                                                n_planes=4, budget=1000)
+    assert kept == [configs[1]]             # smallest footprint survives
+    assert not report.ok                    # ...but flagged as an error
+
+
+def test_autotune_rejects_vmem_hogs(rng, tmp_path, monkeypatch):
+    # the sweep itself must skip over-budget candidates: with a budget
+    # only the smallest blocks fit, the winner records the rejections
+    from repro.kernels import autotune
+    monkeypatch.setenv(analysis.vmem.ENV_BUDGET, str(300_000))
+    cache = autotune.AutotuneCache(str(tmp_path / "cache.json"))
+    winner = autotune.autotune_gemm(256, 256, 128, cache=cache, iters=1)
+    assert winner["vmem_rejected"] > 0
+    assert winner["candidates"] + winner["vmem_rejected"] == \
+        len(autotune.candidate_configs(256, 256, 128))
+
+
+# ---------------------------------------------------------------------------
+# cost-model cross-check
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mkn", list(CI_SHAPES))
+def test_cost_crosscheck_exact_on_ci_shapes(rng, mkn):
+    m, k, n = mkn
+    spec = QuantSpec(planes=3)
+    w = _llmish(rng, k, m)
+    report = analysis.Report(f"crosscheck {m}x{k}x{n}")
+    planned, _ = ops.plan_for(w, spec, order="m_major")
+    for impl in ("pallas_fused", "pallas_sparse"):
+        analysis.crosscheck_cost(impl, m, k, n, spec, planned,
+                                 report=report)
+    pk, _ = ops.plan_for(w, spec, order="k_major")
+    analysis.crosscheck_cost("pallas_pipelined", m, k, n, spec, pk,
+                             report=report)
+    assert report.ok, str(report)
+
+
+def test_cost_crosscheck_flags_drift(rng, monkeypatch):
+    from repro.engine import registry
+    m, k, n = CI_SHAPES[0]
+    spec = QuantSpec(planes=3)
+    planned, _ = ops.plan_for(_llmish(rng, k, m), spec, order="m_major")
+    real_cost = registry.PallasSparseEngine.cost
+
+    def lying_cost(self, *a, **kw):
+        c = real_cost(self, *a, **kw)
+        c["grid_steps"] += 7
+        return c
+
+    monkeypatch.setattr(registry.PallasSparseEngine, "cost", lying_cost)
+    report = analysis.crosscheck_cost("pallas_sparse", m, k, n, spec,
+                                      planned)
+    assert "COST_MODEL_DRIFT" in {d.code for d in report.errors}
+
+
+# ---------------------------------------------------------------------------
+# execution-path wiring
+# ---------------------------------------------------------------------------
+
+def _corrupt_record(rec):
+    sched = np.array(rec["schedule"], copy=True)
+    real = np.flatnonzero(sched[:, 3] != 0)
+    sched[real[0], 3] *= 3                  # weight no longer radix**plane
+    return dict(rec, schedule=sched)
+
+
+def test_planned_dense_apply_verify_raises_on_corrupt_plan(rng):
+    spec = QuantSpec(planes=3)
+    w = _llmish(rng, 256, 256)
+    rec = ops.plan_dense_weight(w, spec, use_cache=False, verify=False)
+    x = rng.standard_normal((4, 256)).astype(np.float32)
+    bad = _corrupt_record(rec)
+    with pytest.raises(analysis.AnalysisError, match="SCHED_BAD_WEIGHT"):
+        ops.planned_dense_apply(bad, x, spec, 256, verify=True)
+    # verify=False still runs (wrong numbers, but no verifier in the way)
+    out = ops.planned_dense_apply(bad, x, spec, 256, verify=False)
+    assert out.shape == (4, 256)
+
+
+def test_plan_for_verify_memoizes(rng):
+    spec = QuantSpec(planes=3)
+    planned, _ = ops.plan_for(_llmish(rng, 256, 256), spec, verify=True)
+    assert ops._schedule_verified(planned.schedule)
+
+
+def test_verify_env_toggle(monkeypatch):
+    monkeypatch.delenv(ops.ENV_VERIFY, raising=False)
+    assert not ops.verification_enabled()
+    monkeypatch.setenv(ops.ENV_VERIFY, "1")
+    assert ops.verification_enabled()
+    monkeypatch.setenv(ops.ENV_VERIFY, "off")
+    assert not ops.verification_enabled()
+
+
+# ---------------------------------------------------------------------------
+# audit CLI (the CI analysis-audit lane)
+# ---------------------------------------------------------------------------
+
+def test_cli_clean_on_checked_in_artifacts(capsys):
+    assert analysis_main(["--skip-plans"]) == 0
+    out = capsys.readouterr().out
+    assert "0 error(s)" in out
+
+
+def test_cli_fails_on_corrupted_cache(tmp_path, capsys):
+    from repro.kernels.autotune import DEFAULT_CACHE_PATH
+    with open(DEFAULT_CACHE_PATH) as f:
+        payload = json.load(f)
+    key = next(iter(payload["entries"]))
+    payload["entries"][key]["block_m"] = 96     # not a multiple of 128
+    bad = tmp_path / "corrupt_cache.json"
+    bad.write_text(json.dumps(payload))
+    assert analysis_main(["--cache", str(bad), "--skip-plans"]) == 1
+    assert "AUDIT_BAD_ARTIFACT" in capsys.readouterr().out
+
+
+def test_cli_fails_on_over_budget_cache_entry(tmp_path):
+    payload = {"version": 2, "entries": {
+        "32768x6144x128|default|interpret": {
+            "backend": "interpret", "block_m": 128, "block_k": 256,
+            "block_n": 128, "dispatch": "pipelined", "order": "k_major"},
+    }}
+    bad = tmp_path / "over_budget_cache.json"
+    bad.write_text(json.dumps(payload))
+    assert analysis_main(["--cache", str(bad), "--skip-plans"]) == 1
+
+
+def test_cli_json_output(capsys):
+    assert analysis_main(["--skip-plans", "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["errors"] == 0
+    if payload["diagnostics"]:
+        assert {"code", "severity", "message"} <= set(
+            payload["diagnostics"][0])

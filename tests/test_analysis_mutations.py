@@ -1,0 +1,194 @@
+"""Schedule-corruption suite: every SCHED_COLS column is mutated and the
+verifier must answer with the *right* diagnostic code — catching "a"
+problem is not enough, the codes are the machine contract the execution
+seams and the CI audit lane consume.
+
+Each mutation returns (schedule, mask, expected_code); the suite asserts
+the expected code is present and (at the end) that the corruption kinds
+map to >= 8 distinct codes.
+"""
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.kernels import ops
+
+RADIX = 4
+
+# column indices (checked against bw_gemm.SCHED_COLS by repro.analysis)
+PLANE, ROW, KBLK, WEIGHT, FIRST, LAST, DSLOT, BSLOT, BFETCH = range(9)
+
+
+def _mask(rng):
+    """Occupancy with >= 2 rows of real work and one empty (sentinel) row."""
+    m = rng.random((4, 4, 3)) < 0.55
+    m[:, 2, :] = False                   # row 2 is empty -> sentinel
+    m[0, 0, 0] = m[0, 0, 1] = True       # row 0 has >= 2 steps
+    m[1, 1, 0] = m[1, 3, 2] = True       # rows 1 and 3 non-empty
+    return m
+
+
+@pytest.fixture(scope="module", params=["m_major", "k_major"])
+def plan(request):
+    rng = np.random.default_rng(7)
+    mask = _mask(rng)
+    sched = ops.build_schedule(mask, RADIX, order=request.param)
+    return sched, mask, request.param
+
+
+def _verify(sched, mask, order):
+    report = analysis.verify_schedule(np.asarray(sched), mask, RADIX, order)
+    if np.asarray(sched).ndim == 2 and np.asarray(sched).shape[1] == 9:
+        analysis.check_dma_hazards(np.asarray(sched), report=report)
+    return report
+
+
+def _real_steps(sched):
+    return np.flatnonzero(sched[:, WEIGHT] != 0)
+
+
+def _row_steps(sched, row):
+    return np.flatnonzero((sched[:, ROW] == row)
+                          & (sched[:, WEIGHT] != 0))
+
+
+# -- one mutation per corruption kind ---------------------------------------
+
+def mut_flip_first(s, m):
+    steps = _row_steps(s, 0)
+    s[steps[1], FIRST] = 1               # second step claims FIRST too
+    return "SCHED_BAD_FIRST"
+
+
+def mut_drop_last(s, m):
+    steps = _row_steps(s, 0)
+    s[steps[-1], LAST] = 0               # row never flushed
+    return "SCHED_BAD_LAST"
+
+
+def mut_duplicate_visit(s, m, out):
+    i = _real_steps(s)[0]
+    out.append(np.vstack([s, s[i:i + 1]]))
+    return "SCHED_DUPLICATE_VISIT"
+
+
+def mut_missing_visit(s, m, out):
+    # drop a mid-row step (not FIRST/LAST) so only coverage breaks
+    steps = _row_steps(s, 0)
+    victim = next((i for i in steps
+                   if not s[i, FIRST] and not s[i, LAST]), steps[0])
+    out.append(np.delete(s, victim, axis=0))
+    return "SCHED_MISSING_VISIT"
+
+
+def mut_phantom_visit(s, m):
+    i = _real_steps(s)[0]
+    m[s[i, PLANE], s[i, ROW], s[i, KBLK]] = False
+    return "SCHED_PHANTOM_VISIT"
+
+
+def mut_bad_weight(s, m):
+    s[_real_steps(s)[0], WEIGHT] *= 3    # no longer radix**plane
+    return "SCHED_BAD_WEIGHT"
+
+
+def mut_out_of_range(s, m):
+    s[_real_steps(s)[0], ROW] = m.shape[1] + 7
+    return "SCHED_OUT_OF_RANGE"
+
+
+def mut_drop_sentinel(s, m, out):
+    sentinel = np.flatnonzero((s[:, WEIGHT] == 0) & (s[:, FIRST] == 1))
+    out.append(np.delete(s, sentinel[0], axis=0))
+    return "SCHED_BAD_SENTINEL"
+
+
+def mut_dirty_padding(s, m, out):
+    padded = ops.pad_schedule(s, s.shape[0] + 3)
+    pad_row = padded[-1:].copy()
+    # a zero-weight no-flag step *before* its row's LAST is not padding
+    out.append(np.vstack([pad_row, padded[:-1]]))
+    return "SCHED_BAD_PADDING"
+
+
+def mut_bfetch_dropped(s, m):
+    fetches = np.flatnonzero(s[:, BFETCH] == 1)
+    s[fetches[-1], BFETCH] = 0           # stale B block gets consumed
+    return "SCHED_BAD_BFETCH"
+
+
+def mut_dslot_war(s, m):
+    reals = _real_steps(s)
+    pairs = [(a, b) for a, b in zip(reals, reals[1:]) if b == a + 1]
+    a, b = pairs[0]
+    s[b, DSLOT] = s[a, DSLOT]            # prefetch overwrites live buffer
+    return "DMA_WAR_HAZARD"
+
+
+MUTATIONS = [mut_flip_first, mut_drop_last, mut_duplicate_visit,
+             mut_missing_visit, mut_phantom_visit, mut_bad_weight,
+             mut_out_of_range, mut_drop_sentinel, mut_dirty_padding,
+             mut_bfetch_dropped, mut_dslot_war]
+
+
+def _apply(mutation, sched, mask):
+    s = np.array(sched, copy=True)
+    m = np.array(mask, copy=True)
+    out = []
+    if mutation.__code__.co_argcount == 3:     # structural: returns via out
+        code = mutation(s, m, out)
+    else:                                      # in-place cell corruption
+        code = mutation(s, m)
+    return (out[0] if out else s), m, code
+
+
+@pytest.mark.parametrize("mutation", MUTATIONS,
+                         ids=lambda f: f.__name__[4:])
+def test_mutation_yields_expected_code(plan, mutation):
+    sched, mask, order = plan
+    bad_sched, bad_mask, code = _apply(mutation, sched, mask)
+    report = _verify(bad_sched, bad_mask, order)
+    assert not report.ok, f"{mutation.__name__} went undetected"
+    assert code in report.codes(), \
+        f"{mutation.__name__}: wanted {code}, got {sorted(report.codes())}" \
+        f"\n{report}"
+
+
+def test_clean_baseline(plan):
+    sched, mask, order = plan
+    report = _verify(sched, mask, order)
+    assert report.ok and not report.diagnostics, str(report)
+
+
+def test_at_least_eight_distinct_codes(plan):
+    sched, mask, _ = plan
+    codes = {_apply(f, sched, mask)[2] for f in MUTATIONS}
+    assert len(codes) >= 8, sorted(codes)
+
+
+def test_order_violation_detected():
+    # claimed-m_major schedule whose row runs are split: the v2 kernels'
+    # out-BlockSpec accumulation would clobber partial sums on hardware
+    rng = np.random.default_rng(3)
+    mask = _mask(rng)
+    sched = ops.build_schedule(mask, RADIX, order="m_major")
+    row0 = _row_steps(sched, 0)
+    split = np.vstack([np.delete(sched, row0[-1], axis=0),
+                       sched[row0[-1]:row0[-1] + 1]])
+    report = analysis.verify_schedule(split, mask, RADIX, "m_major")
+    assert "SCHED_ORDER_VIOLATION" in report.codes()
+    assert not report.ok
+
+
+def test_stale_read_detected():
+    # corrupt a B slot so a step consumes the wrong resident k-block
+    rng = np.random.default_rng(5)
+    mask = _mask(rng)
+    sched = np.array(ops.build_schedule(mask, RADIX, order="k_major"),
+                     copy=True)
+    fetches = np.flatnonzero(sched[:, BFETCH] == 1)
+    sched[fetches[-1], BSLOT] ^= 1       # fetch lands in the other buffer
+    report = analysis.check_dma_hazards(sched)
+    assert not report.ok
+    assert report.codes() & {"DMA_STALE_READ", "DMA_WAR_HAZARD",
+                             "DMA_SEM_UNBALANCED"}

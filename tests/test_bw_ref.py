@@ -6,7 +6,7 @@ try:
 except ImportError:    # offline: deterministic fallback (tests/_propcheck)
     from _propcheck import given, settings, strategies as hst
 
-from repro.core import bw_ref, encodings as enc
+from repro.core import bw_ref
 
 
 @given(hst.lists(hst.integers(-2**40, 2**40), min_size=3, max_size=3))

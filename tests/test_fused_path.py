@@ -7,7 +7,7 @@ import pytest
 
 from repro.core import bw_ref, quant as quantlib
 from repro.engine import QuantSpec
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.kernels.bw_gemm import EPILOGUE_ACTIVATIONS
 
 

@@ -1,6 +1,4 @@
 """SMIC-28nm cost model: Table VII efficiency ratios = the paper's abstract."""
-import numpy as np
-import pytest
 
 from repro.core import hwmodel as hw
 from repro.core import notation as nt

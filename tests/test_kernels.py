@@ -1,6 +1,5 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
 sweeps with exact integer equality."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

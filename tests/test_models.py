@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.configs.registry import ARCHS, get_config
-from repro.models.api import get_api, loss_fn
+from repro.models.api import get_api
 from repro.parallel.sharding import unbox
 
 KEY = jax.random.PRNGKey(0)

@@ -8,7 +8,6 @@ masks, adversarial sparse-high-plane inputs, and non-block-divisible
 shapes through the padded path — while an all-zero plane-block costs
 neither a DMA nor a grid step (schedule-length / cost-model checks).
 """
-import dataclasses
 
 import numpy as np
 import jax

@@ -1,6 +1,5 @@
 """Sparsity statistics: Table III + Eq. (7)/(8) synchronization model."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as hst
 except ImportError:    # offline: deterministic fallback (tests/_propcheck)

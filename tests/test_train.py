@@ -1,6 +1,5 @@
 """Training substrate: optimizer math, schedules, data determinism,
 checkpoint/resume, gradient compression, loss-goes-down integration."""
-import os
 
 import jax
 import jax.numpy as jnp
