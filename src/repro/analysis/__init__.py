@@ -41,6 +41,7 @@ __all__ = [
     "AnalysisError", "CODES", "Diagnostic", "Report",
     "ERROR", "WARNING", "INFO",
     "verify_schedule", "check_dma_hazards", "verify_plan",
+    "verify_sharded_plan",
     "DEFAULT_VMEM_BUDGET", "vmem_budget", "vmem_footprint", "check_vmem",
     "clamp_suggestion", "filter_vmem_configs",
     "ENGINE_ROUTES", "symbolic_counters", "crosscheck_cost",
@@ -96,4 +97,65 @@ def verify_plan(plan, radix: int, order: str = "m_major", *,
     verify_schedule(schedule, np.asarray(mask), radix, order, report=report)
     if schedule.ndim == 2 and schedule.shape[1] == 9:
         check_dma_hazards(schedule, report=report)
+    return report
+
+
+def verify_sharded_plan(splan, *, report: Optional[Report] = None) -> Report:
+    """Verify a ``repro.parallel.plan.ShardedPlan`` shard by shard.
+
+    Two layers of checks (pure numpy, no devices needed):
+
+    1. every shard's [L_s, 9] schedule is run through the full schedule
+       verifier + DMA-hazard walk against its *shard-local* mask slab
+       (re-derived FIRST/LAST, sentinels, B_FETCH residency — the same
+       invariants the single-device plans carry);
+    2. the shard schedules' real (non-sentinel) visits, offset back to
+       global block coordinates, must *exactly* partition the global
+       occupancy mask: a plane-block scheduled on no shard (missing
+       work), two shards (double-counted partial sums) or an empty one
+       (phantom DMA) is reported as ``SHARD_BAD_PARTITION``.
+    """
+    import numpy as np
+
+    _check_sched_cols()
+    report = report if report is not None else Report("sharded plan")
+    mask = np.asarray(splan.plan["mask"])
+    scheds = np.asarray(splan.schedules)
+    s_model, s_data = splan.s_model, splan.s_data
+    bw_n, mb, kb = mask.shape
+    if scheds.ndim != 4 or scheds.shape[:2] != (s_model, s_data) or \
+            mb % s_model or kb % s_data:
+        report.add("SHARD_BAD_SHAPE",
+                   f"schedule table {scheds.shape} / mask block grid "
+                   f"({mb}, {kb}) do not match the shard grid "
+                   f"(model={s_model}, data={s_data})")
+        return report
+    mb_s, kb_s = mb // s_model, kb // s_data
+    visits = np.zeros(mask.shape, dtype=np.int64)
+    for i in range(s_model):
+        for j in range(s_data):
+            local = mask[:, i * mb_s:(i + 1) * mb_s,
+                         j * kb_s:(j + 1) * kb_s]
+            shard = Report(f"shard[model={i},data={j}]")
+            verify_plan({"schedule": scheds[i, j], "mask": local},
+                        splan.radix, splan.order, report=shard)
+            for d in shard.diagnostics:
+                report.add(d.code, d.message, severity=d.severity,
+                           step=d.step,
+                           where=f"shard[model={i},data={j}]"
+                                 + (f" {d.where}" if d.where else ""),
+                           suggestion=d.suggestion)
+            real = scheds[i, j][scheds[i, j][:, 3] != 0]
+            np.add.at(visits, (real[:, 0], i * mb_s + real[:, 1],
+                               j * kb_s + real[:, 2]), 1)
+    want = mask.astype(np.int64)
+    if not np.array_equal(visits, want):
+        missing = int((want & (visits == 0)).sum())
+        dup = int((visits > 1).sum())
+        phantom = int(((visits > 0) & (want == 0)).sum())
+        report.add("SHARD_BAD_PARTITION",
+                   f"shard schedules vs global mask: {missing} non-zero "
+                   f"plane-block(s) scheduled on no shard, {dup} visited "
+                   f"more than once, {phantom} phantom visit(s) to empty "
+                   f"blocks")
     return report

@@ -16,7 +16,12 @@ Three audit stages (all offline, no TPU needed):
 3. **CI-shape plans** — real plans are built for the autotuner's
    CI_SHAPES in both schedule orders and run through the schedule
    verifier, the DMA-hazard walk, and the ``GemmEngine.cost()``
-   cross-check.
+   cross-check;
+4. **sharded plans** — the CI-shape plans are partitioned over
+   representative (s_data, s_model) shard grids and each shard's
+   schedule is verified against its shard-local mask (plus the global
+   partition check and per-shard VMEM pricing at shard-local dims) —
+   no devices needed, the audit is pure numpy.
 
 Exit status 1 when any error-severity diagnostic is found (the CI
 ``analysis-audit`` lane); ``--json`` emits machine-readable findings.
@@ -29,7 +34,7 @@ import sys
 from typing import Optional
 
 from . import (INFO, Report, check_vmem, crosscheck_cost, verify_plan,
-               vmem_budget)
+               verify_sharded_plan, vmem_budget)
 
 # decode batch the registry audit prices (tokens on the kernel N axis)
 AUDIT_TOKENS = 128
@@ -148,6 +153,43 @@ def audit_ci_plans(report: Report) -> None:
             report.extend(sub)
 
 
+# shard grids the sharded-plan audit partitions the CI-shape plans over
+AUDIT_SHARD_GRIDS = ((2, 2), (4, 2))
+
+
+def audit_sharded_plans(report: Report,
+                        budget: Optional[int] = None) -> None:
+    import numpy as np
+
+    from repro.engine.spec import QuantSpec
+    from repro.kernels import ops
+    from repro.kernels.autotune import CI_SHAPES
+    from repro.parallel.plan import shard_plan
+
+    spec = QuantSpec(planes=3)
+    rng = np.random.default_rng(0)
+    for m, k, n in CI_SHAPES:
+        w = (rng.standard_t(4, size=(k, m)) * 0.02).astype(np.float32)
+        for order in ("m_major", "k_major"):
+            planned, _sw = ops.plan_for(w, spec, order=order)
+            for shards in AUDIT_SHARD_GRIDS:
+                splan = shard_plan(planned, shards, verify=False)
+                where = f"sharded {m}x{k}x{n} {order} {shards}"
+                sub = Report(where)
+                verify_sharded_plan(splan, report=sub)
+                # per-shard VMEM pricing: each device runs the kernels
+                # at shard-local dims, so that is the footprint to budget
+                route = "pipelined" if order == "k_major" else "sparse"
+                digits = splan.plan["digits"]
+                m_s = digits.shape[1] // splan.s_model
+                k_s = digits.shape[2] // splan.s_data
+                check_vmem(route, m_s, k_s, n,
+                           block_m=splan.block_m, block_k=splan.block_k,
+                           block_n=128, n_planes=spec.num_digits,
+                           budget=budget, where=where, report=sub)
+                report.extend(sub)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
@@ -161,8 +203,8 @@ def main(argv=None) -> int:
     ap.add_argument("--json", action="store_true",
                     help="emit diagnostics as JSON")
     ap.add_argument("--skip-plans", action="store_true",
-                    help="skip the CI-shape plan verification stage "
-                         "(no jax import)")
+                    help="skip the CI-shape plan verification stages "
+                         "(single-device and sharded; no jax import)")
     args = ap.parse_args(argv)
 
     report = Report("repro.analysis audit")
@@ -170,6 +212,7 @@ def main(argv=None) -> int:
     audit_config_registry(report, budget=args.budget)
     if not args.skip_plans:
         audit_ci_plans(report)
+        audit_sharded_plans(report, budget=args.budget)
 
     if args.json:
         payload = {

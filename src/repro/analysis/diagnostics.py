@@ -52,6 +52,12 @@ CODES = {
                           "leak into the next grid iteration)",
     # VMEM budget pass (repro.analysis.vmem)
     "VMEM_OVER_BUDGET": "resident VMEM footprint exceeds the budget",
+    # sharded-plan verification (repro.analysis verify_sharded_plan)
+    "SHARD_BAD_SHAPE": "sharded plan's schedule table / mask shapes "
+                       "disagree with its shard grid",
+    "SHARD_BAD_PARTITION": "per-shard schedules do not exactly partition "
+                           "the global occupancy mask (missing, duplicate "
+                           "or phantom plane-block visit)",
     # cost-model cross-check (repro.analysis.cost)
     "COST_MODEL_DRIFT": "GemmEngine.cost() counters diverge from the "
                         "schedule's symbolic walk",

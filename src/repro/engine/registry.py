@@ -194,7 +194,8 @@ class GemmEngine:
         raise NotImplementedError
 
     def cost(self, m: int, k: int, n: int, spec: QuantSpec, *,
-             density: Optional[float] = None, plan=None) -> dict:
+             density: Optional[float] = None, plan=None,
+             shards=None) -> dict:
         """Schedule-aware cost model of one [M,K]x[K,N] call (the
         autotuning / tier-routing seam).
 
@@ -204,15 +205,45 @@ class GemmEngine:
         neither is given, the estimate assumes the spec's active planes
         are fully dense — the pre-sparsity upper bound.
 
+        shards: optional ``(s_data, s_model)`` mesh shard grid.  The
+        counters then describe one device's shard — the K axis divided
+        ``s_data`` ways, the N axis (kernel rows) ``s_model`` ways, M
+        (tokens) replicated — and ``collective_bytes`` prices the
+        cross-shard ``psum`` of the partial int32 accumulator
+        (per-device ring traffic; 0 when unsharded or K is unsplit).
+        Serving orientation throughout: tokens on M, output features on
+        N, matching ``serving.tiers.step_cost``.
+
         Keys: ``mxu_passes`` (structural per-element pass multiplier),
         ``int_macs`` (integer MACs actually executed — density-scaled on
         the kernel engines), ``acc_hbm_bytes`` (epilogue-placement HBM
         round-trip), ``grid_steps`` (Pallas grid iterations; 0 for the
         jnp engines), ``dma_bytes`` (HBM block traffic the BlockSpecs /
-        manual copies imply) and ``b_dma_elided`` (B-block copies the
+        manual copies imply), ``b_dma_elided`` (B-block copies the
         k_major pipelined schedule order skips by operand reuse — already
-        subtracted from ``dma_bytes``; 0 everywhere else).
+        subtracted from ``dma_bytes``; 0 everywhere else) and
+        ``collective_bytes`` (see above).
         """
+        from repro.parallel.collectives import (gemm_collective_bytes,
+                                                normalize_shards)
+        s_data, s_model = normalize_shards(shards)
+        if (s_data, s_model) == (1, 1):
+            out = self._cost1(m, k, n, spec, density=density, plan=plan)
+            out["collective_bytes"] = 0
+            return out
+        if density is None:
+            density = self._plan_density(plan)
+        # per-shard counters: the plan record describes the *global*
+        # schedule, so only its measured density transfers to a shard
+        out = self._cost1(m, -(-k // s_data), -(-n // s_model), spec,
+                          density=density, plan=None)
+        out["collective_bytes"] = gemm_collective_bytes(m, n, s_data,
+                                                        s_model)
+        return out
+
+    def _cost1(self, m: int, k: int, n: int, spec: QuantSpec, *,
+               density: Optional[float] = None, plan=None) -> dict:
+        """Single-device counters (engines override this, not cost())."""
         passes = self._passes(spec)
         acc = self._acc_hbm_bytes(m, n)
         return {
@@ -342,7 +373,7 @@ class PallasEngine(GemmEngine):
                 bk = digits.shape[2] // kb
         return (bm, bk, bn, mb, kb, -(-n // bn))
 
-    def cost(self, m, k, n, spec, *, density=None, plan=None):
+    def _cost1(self, m, k, n, spec, *, density=None, plan=None):
         """Dense predicated kernel: the full (M/bm, N/bn, K/bk) grid is
         walked and every digit plane of every block is DMA'd; only the
         *MXU passes* of empty plane-blocks are skipped (pl.when)."""
@@ -413,7 +444,7 @@ class PallasSparseEngine(PallasFusedEngine):
             return None
         return sched
 
-    def cost(self, m, k, n, spec, *, density=None, plan=None):
+    def _cost1(self, m, k, n, spec, *, density=None, plan=None):
         if density is None:
             density = self._plan_density(plan)
         bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec, plan)
@@ -468,7 +499,7 @@ class PallasPipelinedEngine(PallasSparseEngine):
     name = "pallas_pipelined"
     order = "k_major"
 
-    def cost(self, m, k, n, spec, *, density=None, plan=None):
+    def _cost1(self, m, k, n, spec, *, density=None, plan=None):
         if density is None:
             density = self._plan_density(plan)
         bm, bk, bn, mb, kb, nb = self._geometry(m, k, n, spec, plan)

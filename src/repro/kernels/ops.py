@@ -355,6 +355,7 @@ class PlannedOperand:
     encoding: str
     schedule: Optional[np.ndarray] = None   # int32 [L, 9], build_schedule
     order: str = "m_major"                  # the schedule's visit order
+    sharded: Optional[object] = None        # parallel.plan.ShardedPlan
 
     def density(self) -> float:
         """Fraction of non-zero plane blocks (the sparse-dispatch signal)."""
@@ -687,21 +688,27 @@ def plan_cache_clear() -> None:
 
 
 def plan_for(w, spec, order: str = "m_major",
-             verify: Optional[bool] = None):
+             verify: Optional[bool] = None, shards=None):
     """Quantize + plan a dense weight for the kernel path, with caching.
 
     w: float [K, N] (d_in, d_out).  spec: QuantSpec (or legacy int plane
     budget).  order: schedule visit order (SCHEDULE_ORDERS).  Returns
     (PlannedOperand of W^T with [N, K] layout -- output channels as
     kernel rows -- and the per-channel weight scale sw of shape [1, N]).
-    Cache entries key on (weight, spec.plan_key(), order): the same
-    weight planned under two specs or two schedule orders coexists as
-    independent entries.
+    Cache entries key on (weight, spec.plan_key(), order, shards): the
+    same weight planned under two specs, two schedule orders or two mesh
+    shard grids coexists as independent entries.
+
+    shards: optional ``(s_data, s_model)`` mesh shard grid — the
+    returned PlannedOperand additionally carries a
+    ``repro.parallel.plan.ShardedPlan`` (per-shard schedules + padded
+    record) in its ``sharded`` field for ``sharded_planned_apply``.
 
     verify: run the repro.analysis schedule verifier + DMA-hazard walk on
-    the freshly built plan and raise ``AnalysisError`` on any violation
-    (None: the ``REPRO_VERIFY`` env toggle; cached plans were verified at
-    build time and are not re-checked).
+    the freshly built plan (per shard too, when sharded) and raise
+    ``AnalysisError`` on any violation (None: the ``REPRO_VERIFY`` env
+    toggle; cached plans were verified at build time and are not
+    re-checked).
     """
     if isinstance(w, jax.core.Tracer):
         raise TypeError(
@@ -710,7 +717,13 @@ def plan_for(w, spec, order: str = "m_major",
     spec = QuantSpec.coerce(spec)
     k, n = w.shape
     block_m, block_k, _ = select_block_sizes(n, k, 128, spec)
-    params = spec.plan_key() + (int(block_m), int(block_k), k, n, order)
+    if shards is not None:
+        from repro.parallel.collectives import normalize_shards
+        shards = normalize_shards(shards)
+        if shards == (1, 1):
+            shards = None
+    params = spec.plan_key() + (int(block_m), int(block_k), k, n, order,
+                                shards)
 
     def build():
         qw, sw = quantlib.quantize_for_spec(
@@ -719,7 +732,12 @@ def plan_for(w, spec, order: str = "m_major",
                                block_k=block_k, bits=spec.bits, order=order)
         if _verify_enabled(verify):
             _verify_planned(planned)
-        return planned, jnp.asarray(sw, jnp.float32)
+        sw = jnp.asarray(sw, jnp.float32)
+        if shards is not None:
+            from repro.parallel.plan import shard_plan
+            planned.sharded = shard_plan(planned, shards, sw=sw,
+                                         verify=verify)
+        return planned, sw
 
     return _PLAN_CACHE.lookup(w, params, build)
 

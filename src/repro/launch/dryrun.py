@@ -173,10 +173,19 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
                param_dtype: Optional[str] = None,
                skip_cost_variants: bool = False,
                quant_impl: str = "pallas_fused",
-               quant_spec: Optional[str] = None):
+               quant_spec: Optional[str] = None,
+               mesh_shape=None):
     """Lower + compile one cell (+ cost variants).  Returns
-    (record dict, lowered, compiled)."""
+    (record dict, lowered, compiled).
+
+    mesh_shape: custom (data, model) mesh instead of the production
+    16x16 / 2x16x16 (``--mesh DxM``); multi_pod is ignored then.
+    """
     from repro.engine import spec_from_flags
+    if mesh_shape is not None:
+        mesh_name = "x".join(str(s) for s in mesh_shape)
+    else:
+        mesh_name = "multi" if multi_pod else "single"
     cfg = get_config(arch)
     overrides = {}
     spec = spec_from_flags(quant_spec, quant_planes, quant_impl)
@@ -202,12 +211,16 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
     shape = get_shape(shape_name)
     if not cell_is_runnable(cfg, shape):
         return {"arch": arch, "shape": shape_name,
-                "mesh": "multi" if multi_pod else "single",
+                "mesh": mesh_name,
                 "status": "skipped",
                 "reason": "long_500k needs sub-quadratic attention "
                           "(full-attention arch; see DESIGN.md)"}, None, None
 
-    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    if mesh_shape is not None:
+        mesh = meshlib.make_mesh(tuple(mesh_shape), ("data", "model"))
+        multi_pod = False
+    else:
+        mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
     chips = int(np.prod(list(mesh.shape.values())))
     rules = _rules_for(cfg, multi_pod, mesh, shape.global_batch, seq_axis,
                        capacity_axis, shard_kv, kv_seq_axis)
@@ -263,7 +276,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     record = {
         "arch": arch, "shape": shape_name,
-        "mesh": "multi" if multi_pod else "single",
+        "mesh": mesh_name,
         "status": "ok", "kind": kind, "chips": chips,
         "seq_len": shape.seq_len, "global_batch": shape.global_batch,
         "quant_planes": quant_planes,
@@ -299,9 +312,19 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str = "both",
              **kw) -> list:
+    """mesh_kind: 'single' | 'multi' | 'both' (the production meshes), or
+    a custom 'DxM' (data x model) shape literal, e.g. '4x2'."""
     out = []
     kinds = {"single": [False], "multi": [True],
-             "both": [False, True]}[mesh_kind]
+             "both": [False, True]}.get(mesh_kind)
+    if kinds is None:
+        shape = meshlib.parse_mesh_shape(mesh_kind)
+        if len(shape) != 2:
+            raise ValueError(f"custom --mesh expects two axes DxM, got "
+                             f"{mesh_kind!r}")
+        rec, _, _ = lower_cell(arch, shape_name, False, mesh_shape=shape,
+                               **kw)
+        return [rec]
     for mp in kinds:
         rec, _, _ = lower_cell(arch, shape_name, mp, **kw)
         out.append(rec)
@@ -331,8 +354,10 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=ARCHS)
     ap.add_argument("--shape", choices=list(SHAPES))
-    ap.add_argument("--mesh", choices=["single", "multi", "both"],
-                    default="both")
+    ap.add_argument("--mesh", default="both",
+                    help="'single' (16x16), 'multi' (2x16x16), 'both', or "
+                         "a custom 'DxM' data x model shape (e.g. 4x2) "
+                         "built via launch.mesh.make_mesh")
     ap.add_argument("--all", action="store_true",
                     help="run every (arch x shape) cell in subprocesses")
     ap.add_argument("--quant-spec", default=None,

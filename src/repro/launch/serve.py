@@ -99,6 +99,11 @@ def main(argv=None) -> int:
                     help="give each request a deadline of arrival + "
                          "U(lo, hi) seconds (drives --policy deadline "
                          "and --router slo)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="device mesh shape 'data x model' (e.g. 4x2) the "
+                         "tier weights are sharded over; feeds the tier "
+                         "cost models' device-count axis (collective-bytes "
+                         "term) so SLO routing understands sharded tiers")
     ap.add_argument("--realtime", action="store_true",
                     help="threaded wall-clock mode (default: deterministic "
                          "virtual-time simulation)")
@@ -120,6 +125,17 @@ def main(argv=None) -> int:
     tiers = tuple(dataclasses.replace(t, batch=args.batch)
                   for t in args.custom_tiers or ()) or \
         (default_tiers(args.tiers, batch=args.batch) if args.tiers else None)
+    if args.mesh is not None:
+        from repro.launch.mesh import parse_mesh_shape
+        shape = parse_mesh_shape(args.mesh)
+        if len(shape) != 2:
+            ap.error(f"--mesh expects two axes DxM, got {args.mesh!r}")
+        if tiers is None:
+            print(f"--mesh {args.mesh} ignored in single-engine mode "
+                  f"(use --tiers/--tier)", file=sys.stderr)
+        else:
+            tiers = tuple(dataclasses.replace(t, shards=shape)
+                          for t in tiers)
 
     if tiers is None:
         # -- single-engine mode (the historical surface) -------------------

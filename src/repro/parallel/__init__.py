@@ -1,0 +1,46 @@
+"""Distributed execution of the planned/sparse bit-weight GEMM stack.
+
+Three layers, composing bottom-up:
+
+  sharding    -- logical-axis rules (MaxText-style) mapping model tensor
+                 axes to mesh axes, plus boxed params that carry their
+                 logical axes through init.
+  plan        -- ``ShardedPlan`` / ``shard_plan``: partition
+                 ``PlannedOperand`` weights *and their compacted [L, 9]
+                 schedules* along M ('model') and K ('data'), with
+                 per-shard re-derived FIRST/LAST flags and densities.
+  apply       -- ``sharded_planned_apply``: shard_map-wrapped entry
+                 point running the v2/v3 sparse/pipelined kernels per
+                 shard with the cross-device ``psum``/``psum_scatter``
+                 overlapped against the pipelined DMA/MXU skew.
+  collectives -- host-side XLA latency-hiding/async-collective flags
+                 and the collective-bytes accounting the cost model and
+                 TierRouter consume.
+
+Everything is CPU-testable: force a multi-device host with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` *before*
+importing jax, then build a mesh via ``launch.mesh.make_mesh``.
+"""
+from .sharding import (AxisRules, Boxed, box, boxed_axes, constrain,
+                       current_mesh_rules, default_rules, logical_to_spec,
+                       mesh_context, named_sharding_tree, param_shardings,
+                       unbox)
+from .plan import ShardedPlan, plan_sharded_weight, shard_plan
+from .apply import (AXIS_DATA, AXIS_MODEL, make_gemm_mesh,
+                    sharded_planned_apply)
+from .collectives import (allreduce_bytes, enable_async_collectives,
+                          gemm_collective_bytes, latency_hiding_xla_flags,
+                          normalize_shards)
+
+__all__ = [
+    # sharding (logical-axis rules)
+    "AxisRules", "default_rules", "mesh_context", "current_mesh_rules",
+    "constrain", "logical_to_spec", "Boxed", "box", "unbox", "boxed_axes",
+    "named_sharding_tree", "param_shardings",
+    # sharded plans + execution
+    "ShardedPlan", "shard_plan", "plan_sharded_weight",
+    "sharded_planned_apply", "make_gemm_mesh", "AXIS_DATA", "AXIS_MODEL",
+    # collectives
+    "enable_async_collectives", "latency_hiding_xla_flags",
+    "allreduce_bytes", "gemm_collective_bytes", "normalize_shards",
+]

@@ -1,0 +1,131 @@
+"""Host-side collective setup + traffic accounting for the sharded GEMM.
+
+Two concerns live here, both *host-side* (nothing in this module touches
+device state or traces jax):
+
+1. XLA flag helpers.  The sharded apply path overlaps the cross-device
+   ``psum``/``psum_scatter`` with the pipelined kernels' DMA/MXU skew by
+   letting XLA's latency-hiding scheduler hoist the collective's start
+   under still-running compute.  That is opt-in via XLA_FLAGS and must
+   be set BEFORE the first jax device query, same contract as the
+   forced-host device count (see ``launch/dryrun.py``).
+
+2. Collective-bytes accounting.  ``GemmEngine.cost()`` reports a
+   ``collective_bytes`` term for sharded calls so TierRouter can price
+   the reduce against the per-shard MAC/DMA savings; the formulas here
+   are the standard per-device ring costs and are the single source for
+   both the cost model and the benchmark lane.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+__all__ = ["LATENCY_HIDING_FLAGS", "GPU_ASYNC_FLAGS",
+           "forced_host_devices_flag",
+           "latency_hiding_xla_flags", "enable_async_collectives",
+           "allreduce_bytes", "gemm_collective_bytes", "normalize_shards"]
+
+# Latency-hiding scheduler: lets XLA start the cross-shard reduce while
+# the tail of the per-shard GEMM grid is still in flight.  This flag is
+# registered on every backend build (a scheduling no-op on CPU, where
+# the tests run).
+LATENCY_HIDING_FLAGS = (
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+)
+
+# Extra async-collective knobs that only GPU jaxlib builds register —
+# XLA aborts on unknown flags, so these must never reach a CPU-only
+# build's XLA_FLAGS.  Opt in via enable_async_collectives(gpu=True).
+GPU_ASYNC_FLAGS = (
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def forced_host_devices_flag(n: int) -> str:
+    """The XLA flag that splits the host CPU into ``n`` devices."""
+    return f"--xla_force_host_platform_device_count={int(n)}"
+
+
+def latency_hiding_xla_flags(extra: Tuple[str, ...] = (),
+                             gpu: bool = False) -> str:
+    """The full XLA_FLAGS value for overlapped collectives."""
+    flags = LATENCY_HIDING_FLAGS + (GPU_ASYNC_FLAGS if gpu else ())
+    return " ".join(flags + tuple(extra))
+
+
+def enable_async_collectives(n_host_devices: Optional[int] = None, *,
+                             gpu: bool = False) -> str:
+    """Merge the latency-hiding flags into ``os.environ['XLA_FLAGS']``.
+
+    Idempotent (flags already present are not duplicated) and preserves
+    whatever the caller had set.  Must run before jax initializes its
+    backends — call it first thing in a ``main()``, never at import time
+    of a module that also imports jax.  ``gpu=True`` adds the GPU-only
+    async knobs (aborts a CPU-only jaxlib: XLA rejects unknown flags).
+    Returns the new XLA_FLAGS value.
+    """
+    flags = LATENCY_HIDING_FLAGS + (GPU_ASYNC_FLAGS if gpu else ())
+    if n_host_devices is not None:
+        flags = flags + (forced_host_devices_flag(n_host_devices),)
+    current = os.environ.get("XLA_FLAGS", "")
+    present = set(current.split())
+    merged = current.split() + [f for f in flags if f not in present]
+    value = " ".join(merged)
+    os.environ["XLA_FLAGS"] = value
+    return value
+
+
+def normalize_shards(shards) -> Tuple[int, int]:
+    """Coerce a shards argument to ``(s_data, s_model)``.
+
+    Accepts None (unsharded), an int (data-parallel only) or a 2-tuple.
+    """
+    if shards is None:
+        return (1, 1)
+    if isinstance(shards, int):
+        shards = (shards, 1)
+    s_data, s_model = (int(shards[0]), int(shards[1]))
+    if len(tuple(shards)) != 2 or s_data < 1 or s_model < 1:
+        raise ValueError(f"shards must be (s_data, s_model) with positive "
+                         f"sizes, got {shards!r}")
+    return (s_data, s_model)
+
+
+def allreduce_bytes(payload_bytes: int, world: int, *,
+                    reduce: str = "psum") -> int:
+    """Per-device bytes a ring collective moves for one reduction.
+
+    ``psum`` (all-reduce) = reduce-scatter + all-gather:
+    ``2 * (world-1)/world * payload``; ``psum_scatter`` stops after the
+    reduce-scatter half.  ``world <= 1`` is free.
+    """
+    if world <= 1:
+        return 0
+    if reduce == "psum":
+        phases = 2
+    elif reduce == "psum_scatter":
+        phases = 1
+    else:
+        raise ValueError(f"unknown reduce {reduce!r}; "
+                         f"one of ('psum', 'psum_scatter')")
+    return int(phases * (world - 1) * payload_bytes // world)
+
+
+def gemm_collective_bytes(m: int, n: int, s_data: int, s_model: int = 1, *,
+                          acc_bytes: int = 4,
+                          reduce: str = "psum") -> int:
+    """Per-device collective traffic of one sharded [M,K]x[K,N] GEMM.
+
+    K-sharding (the ``'data'`` axis, ``s_data`` ways) leaves each device
+    with a *partial* int32 accumulator over its k-slice that must be
+    summed across the axis; the payload per device is its
+    ``m x ceil(n / s_model)`` output shard tile.  M/N-sharding alone
+    (``s_data == 1``) needs no collective — output shards are disjoint.
+    """
+    if s_data <= 1:
+        return 0
+    n_shard = -(-int(n) // max(int(s_model), 1))
+    payload = int(m) * n_shard * int(acc_bytes)
+    return allreduce_bytes(payload, int(s_data), reduce=reduce)

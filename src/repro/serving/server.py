@@ -108,7 +108,7 @@ class AsyncServer:
             # digit-plane sparsity the kernels actually elide
             density = self.workers[t.name].engine.plan_density
             est = max(estimate_step_time(cfg, t.batch, t.spec, design,
-                                         density=density)
+                                         density=density, shards=t.shards)
                       * step_time_scale, 1e-9)
             per_step[t.name] = est
             self.workers[t.name].step_time = est

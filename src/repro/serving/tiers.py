@@ -37,14 +37,22 @@ __all__ = ["Tier", "default_tiers", "decode_step_gemms", "step_cost",
 # (bytes/s); only the *relative* cost across engines matters for routing
 _NOMINAL_HBM_BPS = 300e9
 
+# nominal interconnect bandwidth for cross-shard collectives (bytes/s);
+# matches launch.roofline.ICI_BW so the two cost seams price a sharded
+# tier's reduce identically
+_NOMINAL_ICI_BPS = 50e9
+
 
 @dataclasses.dataclass(frozen=True)
 class Tier:
     """One serving tier: a name, the QuantSpec its worker is baked with
-    (None = unquantized bf16), and the worker's decode-slot count."""
+    (None = unquantized bf16), the worker's decode-slot count, and the
+    mesh shard grid ``(s_data, s_model)`` its weights are partitioned
+    over ((1, 1) = single device)."""
     name: str
     spec: Optional[QuantSpec]
     batch: int = 4
+    shards: Tuple[int, int] = (1, 1)
 
     def quality_rank(self) -> Tuple[int, int, int]:
         """Orderable quality: unquantized > more planes > more bits."""
@@ -87,24 +95,38 @@ def decode_step_gemms(cfg, batch: int) -> List[Tuple[int, int, int]]:
 
 
 def step_cost(cfg, batch: int, spec: Optional[QuantSpec],
-              density: Optional[float] = None) -> Dict[str, int]:
+              density: Optional[float] = None,
+              shards: Optional[Tuple[int, int]] = None) -> Dict[str, int]:
     """Aggregate GemmEngine.cost over one decode step's GEMMs.
 
     density: measured plane-block density of the worker's planned weights
     (``ServeEngine`` exposes it as ``plan_density``); None keeps the
     pre-sparsity upper bound of the engine's default estimate.
+
+    shards: ``Tier.shards`` — the (s_data, s_model) mesh grid the tier's
+    weights are partitioned over.  Counters then describe one device's
+    per-shard work plus the ``collective_bytes`` its K-axis ``psum``
+    moves (see ``GemmEngine.cost``).
     """
     total = {"int_macs": 0, "mxu_passes": 0, "acc_hbm_bytes": 0,
-             "grid_steps": 0, "dma_bytes": 0, "b_dma_elided": 0}
+             "grid_steps": 0, "dma_bytes": 0, "b_dma_elided": 0,
+             "collective_bytes": 0}
     engine = get_engine(spec.impl) if spec is not None else None
+    if engine is None:
+        from repro.parallel.collectives import (gemm_collective_bytes,
+                                                normalize_shards)
+        s_data, s_model = normalize_shards(shards)
     for m, k, n in decode_step_gemms(cfg, batch):
         if engine is None:       # unquantized: one pass, fused epilogue
-            c = {"int_macs": m * k * n, "mxu_passes": 1,
+            ks, ns = -(-k // s_data), -(-n // s_model)
+            c = {"int_macs": m * ks * ns, "mxu_passes": 1,
                  "acc_hbm_bytes": 0, "grid_steps": 0,
-                 "dma_bytes": m * k + k * n + 4 * m * n,
-                 "b_dma_elided": 0}
+                 "dma_bytes": m * ks + ks * ns + 4 * m * ns,
+                 "b_dma_elided": 0,
+                 "collective_bytes": gemm_collective_bytes(
+                     m, n, s_data, s_model, acc_bytes=2)}  # bf16 partials
         else:
-            c = engine.cost(m, k, n, spec, density=density)
+            c = engine.cost(m, k, n, spec, density=density, shards=shards)
         for key in total:
             total[key] += c[key]
     return total
@@ -112,7 +134,8 @@ def step_cost(cfg, batch: int, spec: Optional[QuantSpec],
 
 def estimate_step_time(cfg, batch: int, spec: Optional[QuantSpec],
                        design: str = "tpu",
-                       density: Optional[float] = None) -> float:
+                       density: Optional[float] = None,
+                       shards: Optional[Tuple[int, int]] = None) -> float:
     """Estimated seconds per decode step on a core.hwmodel array design.
 
     The compute term prices the integer MACs *actually executed*: the
@@ -124,12 +147,16 @@ def estimate_step_time(cfg, batch: int, spec: Optional[QuantSpec],
     reported in ``step_cost['dma_bytes']`` and priced by
     ``launch.roofline.quantized_gemm_roofline``; folding it in here would
     swamp the smoke-scale models the serving tests drive, where padded
-    block DMA dwarfs the useful work)."""
+    block DMA dwarfs the useful work).  Sharded tiers (``shards``) pay a
+    third term: the per-device collective traffic over a nominal ICI
+    link — so the router sees both the per-shard MAC savings *and* the
+    reduce it buys them with."""
     d = hw.TABLE7[design]
-    cost = step_cost(cfg, batch, spec, density=density)
+    cost = step_cost(cfg, batch, spec, density=density, shards=shards)
     ops_per_s = hw.peak_tops(d) * 1e12
     return (2.0 * cost["int_macs"] / ops_per_s
-            + cost["acc_hbm_bytes"] / _NOMINAL_HBM_BPS)
+            + cost["acc_hbm_bytes"] / _NOMINAL_HBM_BPS
+            + cost["collective_bytes"] / _NOMINAL_ICI_BPS)
 
 
 ROUTER_POLICIES = ("quality", "fastest", "round_robin", "slo")
