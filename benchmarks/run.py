@@ -542,6 +542,65 @@ def analysis_static_passes():
     return out
 
 
+def obs_overhead():
+    """Tracing-enabled vs -disabled wall time of the instrumented kernel
+    path (``ops.planned_dense_apply``), plus the raw per-call cost of a
+    disabled ``obs.span()``.  Not a baseline lane (prefix 'obs.'): wall
+    times vary per host.  The disabled-mode contract is hard-asserted
+    here: ``span()`` must return the shared no-op singleton and record
+    nothing, and the disabled dispatch path must not be slower than the
+    enabled one beyond noise."""
+    import timeit
+    import numpy as np
+    import jax
+    from repro import obs
+    from repro.engine import QuantSpec
+    from repro.kernels import ops
+
+    was_enabled = obs.enabled()
+    obs.disable()
+    obs.clear_trace()
+    rng = np.random.default_rng(0)
+    spec = QuantSpec(planes=3, block_m=128, block_k=128)
+    w = (rng.standard_t(4, size=(256, 256)) * 0.02).astype(np.float32)
+    x = rng.normal(0, 1, size=(8, 256)).astype(np.float32)
+    plan = ops.plan_dense_weight(w, spec)
+
+    def step():
+        jax.block_until_ready(
+            ops.planned_dense_apply(plan, x, spec, 256, dispatch="auto"))
+
+    step()                                # warm the jit/interpret caches
+    reps = 5
+    # disabled-mode contract: no-op singleton, zero events recorded
+    assert obs.span("bench.probe", k=1) is obs.NULL_SPAN
+    n0 = len(obs.trace_events())
+    t_off = min(timeit.repeat(step, number=1, repeat=reps))
+    assert len(obs.trace_events()) == n0, \
+        "disabled-mode run recorded trace events"
+    span_ns = timeit.timeit(
+        lambda: obs.span("bench.probe", m=256, k=256), number=100_000) \
+        / 100_000 * 1e9
+    obs.enable(clear_events=True)
+    try:
+        t_on = min(timeit.repeat(step, number=1, repeat=reps))
+        events = len(obs.trace_events())
+    finally:
+        if not was_enabled:
+            obs.disable()
+            obs.clear_trace()
+    # the interpret-mode step is milliseconds; a handful of span dict
+    # allocations must disappear into the noise (generous 50% guard)
+    assert t_off <= t_on * 1.5, \
+        f"disabled-mode step slower than enabled ({t_off} vs {t_on})"
+    return {"disabled_step_us": round(t_off * 1e6, 1),
+            "enabled_step_us": round(t_on * 1e6, 1),
+            "enabled_overhead_pct": round((t_on / t_off - 1) * 100, 1),
+            "disabled_span_ns_per_call": round(span_ns, 1),
+            "disabled_span_is_noop_singleton": True,
+            "events_per_enabled_step": events // reps}
+
+
 BENCHES = [
     ("table2.numpp_census", table2_numpp_census),
     ("table3.avg_numpps", table3_avg_numpps),
@@ -565,6 +624,7 @@ BENCHES = [
     ("beyond.qat_planes_ablation", qat_planes_ablation),
     ("beyond.encoding_width_scaling", encoding_width_scaling),
     ("analysis.static_passes", analysis_static_passes),
+    ("obs.overhead", obs_overhead),
 ]
 
 
@@ -636,7 +696,13 @@ def main() -> None:
                     help=f"also write the versioned "
                          f"BENCH_{BASELINE_VERSION}.json baseline (the "
                          f"deterministic lanes) at the repo root")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable repro.obs tracing and write a Chrome "
+                         "trace-event JSON of the benchmark run to PATH")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+        obs.enable(clear_events=True)
     if args.write_baseline and args.only:
         # a filtered run would silently overwrite the baseline with a
         # subset and un-gate every dropped lane in CI
@@ -665,6 +731,9 @@ def main() -> None:
             f.write(payload)
     if args.write_baseline:
         print(f"baseline: {write_baseline(records)}")
+    if args.trace:
+        from repro import obs
+        obs.save(args.trace)
 
 
 if __name__ == '__main__':

@@ -168,6 +168,15 @@ def _ste_matmul(kind: str, spec: QuantSpec, dtype_name: str):
 # Engine strategies
 # ---------------------------------------------------------------------------
 
+# Nominal pricing bandwidths for predict_seconds (bytes/s).  Only the
+# *relative* cost across engines matters for routing; the absolute scale
+# is what obs.calibrate.CostCalibrator measures drift against.  ICI
+# matches launch.roofline.ICI_BW so the cost seams price a sharded
+# reduce identically; serving.tiers aliases both.
+NOMINAL_HBM_BPS = 300e9
+NOMINAL_ICI_BPS = 50e9
+
+
 class GemmEngine:
     """Strategy interface for one quantized-GEMM implementation."""
 
@@ -240,6 +249,26 @@ class GemmEngine:
         out["collective_bytes"] = gemm_collective_bytes(m, n, s_data,
                                                         s_model)
         return out
+
+    def predict_seconds(self, m: int, k: int, n: int, spec: QuantSpec, *,
+                        density: Optional[float] = None, plan=None,
+                        shards=None, design: str = "tpu") -> float:
+        """cost() priced into seconds on a ``core.hwmodel`` design.
+
+        The single pricing seam shared by ``serving.tiers
+        .estimate_step_time`` and ``obs.calibrate`` — compute at the
+        design's peak integer throughput, the epilogue accumulator
+        round-trip at ``NOMINAL_HBM_BPS``, cross-shard collectives at
+        ``NOMINAL_ICI_BPS``.  Absolute seconds are nominal; the
+        ``CostCalibrator`` tracks per-impl drift vs measured timings.
+        """
+        from repro.core import hwmodel as hw
+        c = self.cost(m, k, n, spec, density=density, plan=plan,
+                      shards=shards)
+        ops_per_s = hw.peak_tops(hw.TABLE7[design]) * 1e12
+        return (2.0 * c["int_macs"] / ops_per_s
+                + c["acc_hbm_bytes"] / NOMINAL_HBM_BPS
+                + c["collective_bytes"] / NOMINAL_ICI_BPS)
 
     def _cost1(self, m: int, k: int, n: int, spec: QuantSpec, *,
                density: Optional[float] = None, plan=None) -> dict:

@@ -19,11 +19,22 @@
   autotune        -- measured block-size / dispatch / (order, pipelined)
                      autotuner + backend-tagged JSON cache
   ref             -- pure-jnp oracles
+
+NOTE on names: ``repro.kernels.bw_gemm`` and ``repro.kernels.quant_gemm``
+are the *submodules* — ``import repro.kernels.bw_gemm as mod`` yields the
+module, and the kernel entry-point functions live on it
+(``mod.bw_gemm``) and on ``ops``.  Earlier revisions re-exported the
+functions under the same names, shadowing the submodules; the functions
+are reachable as ``ops.bw_gemm`` / ``ops.quant_gemm`` (and everything
+else below is still re-exported at package level).
 """
 from . import ops, ref  # noqa: F401
-from .ops import (bw_gemm, quant_gemm, plan_operand, encode_planes,  # noqa: F401
+from .ops import (plan_operand, encode_planes,  # noqa: F401
                   bw_gemm_fused, quant_gemm_fused, quantized_dense,
                   bw_gemm_sparse, bw_gemm_sparse_fused,
                   bw_gemm_sparse_pipelined, bw_gemm_sparse_fused_pipelined,
                   build_schedule, plan_params, planned_dense_apply,
                   select_block_sizes)
+# the submodules win the package-attribute names (see NOTE above);
+# importing them last makes that explicit and un-shadows them
+from . import bw_gemm, quant_gemm  # noqa: F401

@@ -49,6 +49,10 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.calibrate import get_calibrator
+
 __all__ = ["AutotuneCache", "AutotuneCacheMissWarning", "get_cache",
            "set_cache", "reset_cache", "cache_key", "density_bucket",
            "candidate_configs", "autotune_gemm", "current_backend",
@@ -77,6 +81,22 @@ CI_SHAPES = (
 class AutotuneCacheMissWarning(UserWarning):
     """An explicitly configured autotune cache had no entry for a shape;
     the static block-size table was used instead."""
+
+
+# pre-bound obs counters (see repro.obs.metrics.GLOSSARY)
+_M_HITS = obs_metrics.get_registry().counter(
+    "repro_autotune_cache_hits_total")
+_M_MISSES = obs_metrics.get_registry().counter(
+    "repro_autotune_cache_misses_total")
+_M_MISS_WARNINGS = obs_metrics.get_registry().counter(
+    "repro_autotune_miss_warnings_total")
+_M_VMEM_REJECTED = obs_metrics.get_registry().counter(
+    "repro_autotune_vmem_rejected_total")
+
+# dispatch route -> the GemmEngine impl whose cost model prices it (the
+# calibration pairing key)
+ROUTE_IMPLS = {"dense": "pallas_fused", "sparse": "pallas_sparse",
+               "pipelined": "pallas_pipelined"}
 
 
 def current_backend() -> str:
@@ -134,6 +154,12 @@ class AutotuneCache:
         self.strict = strict
         self.entries: Dict[str, dict] = {}
         self._warned: set = set()
+        self.hits = 0
+        self.misses = 0
+
+    def stats(self) -> dict:
+        return {"entries": len(self.entries), "hits": self.hits,
+                "misses": self.misses}
 
     @classmethod
     def load(cls, path: str, strict: bool = False) -> "AutotuneCache":
@@ -186,9 +212,14 @@ class AutotuneCache:
         for key in keys:
             hit = self.entries.get(key)
             if hit is not None:
+                self.hits += 1
+                _M_HITS.inc()
                 return hit
+        self.misses += 1
+        _M_MISSES.inc()
         if self.strict and self.entries and keys[-1] not in self._warned:
             self._warned.add(keys[-1])
+            _M_MISS_WARNINGS.inc()
             warnings.warn(
                 f"autotune cache {self.path!r} has no entry for "
                 f"{keys[-1]!r}; falling back to the static block table",
@@ -358,25 +389,48 @@ def autotune_gemm(m: int, k: int, n: int, spec=None, a=None, b=None, *,
     all_configs = candidate_configs(m, k, n)
     candidates, _ = analysis.filter_vmem_configs(
         m, k, n, all_configs, n_planes=enc.num_digits(encoding, bits))
+    _M_VMEM_REJECTED.inc(len(all_configs) - len(candidates))
+    # calibration: pair each candidate's measured seconds with the
+    # impl's cost-model prediction for the same (shape, spec, density)
+    # key — the CostCalibrator turns these into per-impl drift ratios
+    calibrator = get_calibrator()
+    cal_spec = spec if spec is not None else QuantSpec(planes=3)
+    from repro.engine import get_engine
+    sweep_sp = obs_trace.span("autotune.sweep", m=m, k=k, n=n,
+                              candidates=len(candidates),
+                              vmem_rejected=len(all_configs)
+                              - len(candidates))
     results = []
-    for config in candidates:
-        planned = ops.plan_operand(a, encoding=encoding,
-                                   block_m=config["block_m"],
-                                   block_k=config["block_k"], bits=bits,
-                                   order=config["order"])
-        run = runners[config["dispatch"]]
+    with sweep_sp:
+        for config in candidates:
+            planned = ops.plan_operand(a, encoding=encoding,
+                                       block_m=config["block_m"],
+                                       block_k=config["block_k"],
+                                       bits=bits, order=config["order"])
+            run = runners[config["dispatch"]]
 
-        def fn(planned=planned, run=run, bn=config["block_n"]):
-            return run(planned, b, scale, block_n=bn, interpret=interpret)
+            def fn(planned=planned, run=run, bn=config["block_n"]):
+                return run(planned, b, scale, block_n=bn,
+                           interpret=interpret)
 
-        secs = _measure(fn, iters=iters)
-        # file the measurement under the same *schedule-length proxy*
-        # (L / mask.size, sentinels included) that planned_dense_apply's
-        # 'auto' dispatch computes at lookup time — keying record and
-        # lookup on different density metrics would scatter them across
-        # buckets
-        proxy = planned.schedule.shape[0] / max(planned.mask.size, 1)
-        results.append((secs, config, proxy))
+            with obs_trace.span("autotune.measure", **config):
+                secs = _measure(fn, iters=iters)
+            # file the measurement under the same *schedule-length
+            # proxy* (L / mask.size, sentinels included) that
+            # planned_dense_apply's 'auto' dispatch computes at lookup
+            # time — keying record and lookup on different density
+            # metrics would scatter them across buckets
+            proxy = planned.schedule.shape[0] / max(planned.mask.size, 1)
+            results.append((secs, config, proxy))
+            impl = ROUTE_IMPLS[config["dispatch"]]
+            # serving orientation: tokens on M, output channels on N —
+            # the transpose of this sweep's (m=rows, n=tokens)
+            predicted = get_engine(impl).predict_seconds(
+                n, k, m, cal_spec, plan=planned)
+            if predicted > 0 and secs > 0:
+                calibrator.record(impl, predicted, secs, shape=(m, k, n),
+                                  density=planned.density(),
+                                  source="autotune")
     secs, config, density = min(results, key=lambda r: r[0])
     winner = dict(config, us=round(secs * 1e6), density=round(density, 4),
                   candidates=len(results),
@@ -412,6 +466,34 @@ def validate(path: Optional[str] = None) -> List[str]:
     return [f"cache {path!r} does not cover CI benchmark shape {shape} "
             f"for backend 'interpret' ({len(cache.entries)} entries)"
             for shape in cache.coverage(CI_SHAPES, backend="interpret")]
+
+
+def _print_cache_stats(path: str) -> None:
+    """Hit/miss + coverage stats for CI logs (beyond pass/fail)."""
+    try:
+        cache = AutotuneCache.load(path)
+    except (ValueError, OSError, json.JSONDecodeError):
+        return
+    by_backend: Dict[str, int] = {}
+    for entry in cache.entries.values():
+        backend = entry.get("backend", "?")
+        by_backend[backend] = by_backend.get(backend, 0) + 1
+    # probe the CI shapes the way the dispatch seams would, so the log
+    # shows lookup coverage, not just entry counts
+    for shape in CI_SHAPES:
+        cache.lookup(*shape)
+    stats = cache.stats()
+    print(f"cache stats: {stats['entries']} entries "
+          f"(by backend: {dict(sorted(by_backend.items()))}); "
+          f"CI-shape probe [{current_backend()}]: "
+          f"hits={stats['hits']} misses={stats['misses']}")
+    reg = obs_metrics.get_registry()
+    print(f"process counters: autotune_cache_hits="
+          f"{reg.counter('repro_autotune_cache_hits_total').value} "
+          f"misses="
+          f"{reg.counter('repro_autotune_cache_misses_total').value} "
+          f"miss_warnings="
+          f"{reg.counter('repro_autotune_miss_warnings_total').value}")
 
 
 def main(argv=None) -> int:
@@ -456,6 +538,7 @@ def main(argv=None) -> int:
             print(f"FAIL: {p}")
         if not problems:
             print(f"OK: {path} parses and covers the CI benchmark shapes")
+        _print_cache_stats(path)
         return 1 if problems else 0
     ap.print_help()
     return 2

@@ -33,9 +33,26 @@ import numpy as np
 from repro.core import encodings as enc
 from repro.core import quant as quantlib
 from repro.engine.spec import QuantSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from . import bw_gemm as _bw
 from . import quant_gemm as _qg
 from . import ref as kref
+
+# pre-bound metric families (import-time lookup keeps the per-call cost
+# to one method call; the per-dispatch counter is additionally gated on
+# obs_trace.enabled() so the hot path is a no-op branch when obs is off)
+_M_PLAN_HITS = obs_metrics.get_registry().counter(
+    "repro_plan_cache_hits_total")
+_M_PLAN_MISSES = obs_metrics.get_registry().counter(
+    "repro_plan_cache_misses_total")
+_M_SCHED_DENSITY = obs_metrics.get_registry().histogram(
+    "repro_schedule_density", obs_metrics.GLOSSARY[
+        "repro_schedule_density"]["edges"])
+_M_B_ELIDED = obs_metrics.get_registry().counter(
+    "repro_schedule_b_dma_elided_total")
+_M_DISPATCH = obs_metrics.get_registry().counter(
+    "repro_gemm_dispatch_total")
 
 __all__ = ["PlannedOperand", "encode_planes", "plane_block_mask",
            "plan_operand", "bw_gemm", "quant_gemm", "plane_density",
@@ -272,6 +289,12 @@ def build_schedule(mask, radix: int, order: str = "m_major") -> np.ndarray:
         raise ValueError(f"order must be one of {SCHEDULE_ORDERS}, "
                          f"got {order!r}")
     mask = np.asarray(mask)
+    with obs_trace.span("plan.build_schedule", order=order,
+                        blocks=int(mask.size)):
+        return _build_schedule(mask, radix, order)
+
+
+def _build_schedule(mask, radix: int, order: str) -> np.ndarray:
     bw_n, mb, kb = mask.shape
     entries = []
     if order == "m_major":
@@ -294,7 +317,13 @@ def build_schedule(mask, radix: int, order: str = "m_major") -> np.ndarray:
             o = np.lexsort((cells[:, 0], cells[:, 1]))  # by (row, plane)
             entries.extend((int(p), int(row), kk, radix ** int(p))
                            for p, row in cells[o])
-    return _annotate_schedule(entries)
+    sched = _annotate_schedule(entries)
+    if mask.size:                                  # metrics: built plans
+        real = int((sched[:, 3] != 0).sum())
+        _M_SCHED_DENSITY.observe(real / mask.size)
+        if sched.shape[1] >= 9:
+            _M_B_ELIDED.inc(real - int(sched[:, 8].sum()))
+    return sched
 
 
 def pad_schedule(schedule: np.ndarray, length: int) -> np.ndarray:
@@ -650,8 +679,10 @@ class _PlanCache:
         hit = self._entries.get(key)
         if hit is not None:
             self.hits += 1
+            _M_PLAN_HITS.inc()
             return hit[0]
         self.misses += 1
+        _M_PLAN_MISSES.inc()
         value = build()
         finalizer = None
         if anchor is not None:
@@ -726,18 +757,22 @@ def plan_for(w, spec, order: str = "m_major",
                                 shards)
 
     def build():
-        qw, sw = quantlib.quantize_for_spec(
-            jnp.asarray(w).astype(jnp.float32), spec, axis=0)
-        planned = plan_operand(qw.T, encoding=spec.encoding, block_m=block_m,
-                               block_k=block_k, bits=spec.bits, order=order)
-        if _verify_enabled(verify):
-            _verify_planned(planned)
-        sw = jnp.asarray(sw, jnp.float32)
-        if shards is not None:
-            from repro.parallel.plan import shard_plan
-            planned.sharded = shard_plan(planned, shards, sw=sw,
-                                         verify=verify)
-        return planned, sw
+        with obs_trace.span("plan.plan_for", k=k, n=n, order=order,
+                            planes=spec.planes,
+                            shards=str(shards) if shards else "1x1"):
+            qw, sw = quantlib.quantize_for_spec(
+                jnp.asarray(w).astype(jnp.float32), spec, axis=0)
+            planned = plan_operand(qw.T, encoding=spec.encoding,
+                                   block_m=block_m, block_k=block_k,
+                                   bits=spec.bits, order=order)
+            if _verify_enabled(verify):
+                _verify_planned(planned)
+            sw = jnp.asarray(sw, jnp.float32)
+            if shards is not None:
+                from repro.parallel.plan import shard_plan
+                planned.sharded = shard_plan(planned, shards, sw=sw,
+                                             verify=verify)
+            return planned, sw
 
     return _PLAN_CACHE.lookup(w, params, build)
 
@@ -942,55 +977,67 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
     if per_token:                        # one scale per activation row ->
         sx_cols = _pad_to(sx.reshape(1, -1), block_n, 1)  # kernel N axis
     route = _resolve_dispatch(dispatch, plan, spec, n_out, k, batch, order)
-    if fused:
-        scale_rows = plan["sw_rows"] if per_token else plan["sw_rows"] * sx
-        bias_rows = None
-        if bias is not None:
-            bias_rows = _channel_rows(bias, n_out, m_pad, plan["row_perm"])
-        if route == "pipelined":
-            out = _bw.bw_gemm_sparse_fused_pipelined(
-                digits, bt, plan["schedule"], scale_rows, bias_rows,
-                sx_cols, block_m=block_m, block_n=block_n,
-                block_k=block_k, interpret=bool(interpret),
-                activation=activation, out_dtype=jnp.float32)
-        elif route == "sparse":
-            out = _bw.bw_gemm_sparse_fused(
-                digits, bt, plan["schedule"], scale_rows, bias_rows,
-                sx_cols, block_m=block_m, block_n=block_n,
-                block_k=block_k, interpret=bool(interpret),
-                activation=activation, out_dtype=jnp.float32)
-        else:
-            out = _bw.bw_gemm_fused(
-                digits, bt, mask, scale_rows, bias_rows, sx_cols,
-                block_m=block_m, block_n=block_n, block_k=block_k,
-                radix=spec.radix, interpret=bool(interpret),
-                activation=activation, epilogue_axis="m",
-                out_dtype=jnp.float32)
-        y = out[plan["inv_perm"]][:n_out, :batch].T
+    # hot path: the span + dispatch counter take one no-op branch when
+    # obs is disabled (pinned by the obs.overhead bench lane)
+    if obs_trace.enabled():
+        _M_DISPATCH.labels(route=route).inc()
+        sp = obs_trace.span("ops.planned_dense_apply", cat="kernel",
+                            route=route, fused=bool(fused), order=order,
+                            m=int(n_out), k=int(k), n=int(batch))
     else:
-        if route == "pipelined":
-            acc = _bw.bw_gemm_sparse_pipelined(
-                digits, bt, plan["schedule"], block_m=block_m,
-                block_n=block_n, block_k=block_k,
-                interpret=bool(interpret))
-        elif route == "sparse":
-            acc = _bw.bw_gemm_sparse(
-                digits, bt, plan["schedule"], block_m=block_m,
-                block_n=block_n, block_k=block_k,
-                interpret=bool(interpret))
+        sp = obs_trace.NULL_SPAN
+    with sp:
+        if fused:
+            scale_rows = plan["sw_rows"] if per_token \
+                else plan["sw_rows"] * sx
+            bias_rows = None
+            if bias is not None:
+                bias_rows = _channel_rows(bias, n_out, m_pad,
+                                          plan["row_perm"])
+            if route == "pipelined":
+                out = _bw.bw_gemm_sparse_fused_pipelined(
+                    digits, bt, plan["schedule"], scale_rows, bias_rows,
+                    sx_cols, block_m=block_m, block_n=block_n,
+                    block_k=block_k, interpret=bool(interpret),
+                    activation=activation, out_dtype=jnp.float32)
+            elif route == "sparse":
+                out = _bw.bw_gemm_sparse_fused(
+                    digits, bt, plan["schedule"], scale_rows, bias_rows,
+                    sx_cols, block_m=block_m, block_n=block_n,
+                    block_k=block_k, interpret=bool(interpret),
+                    activation=activation, out_dtype=jnp.float32)
+            else:
+                out = _bw.bw_gemm_fused(
+                    digits, bt, mask, scale_rows, bias_rows, sx_cols,
+                    block_m=block_m, block_n=block_n, block_k=block_k,
+                    radix=spec.radix, interpret=bool(interpret),
+                    activation=activation, epilogue_axis="m",
+                    out_dtype=jnp.float32)
+            y = out[plan["inv_perm"]][:n_out, :batch].T
         else:
-            acc = _bw.bw_gemm(
-                digits, bt, mask, block_m=block_m, block_n=block_n,
-                block_k=block_k, radix=spec.radix,
-                interpret=bool(interpret))
-        acc = acc[plan["inv_perm"]][:n_out, :batch]
-        sw = plan["sw_rows"][plan["inv_perm"]][:n_out]     # original order
-        s = sw * (sx.reshape(1, -1) if per_token else sx)
-        y = (acc.astype(jnp.float32) * s).T
-        if bias is not None:
-            y = y + jnp.asarray(bias, jnp.float32)
-        if activation is not None:
-            y = _bw.EPILOGUE_ACTIVATIONS[activation](y)
+            if route == "pipelined":
+                acc = _bw.bw_gemm_sparse_pipelined(
+                    digits, bt, plan["schedule"], block_m=block_m,
+                    block_n=block_n, block_k=block_k,
+                    interpret=bool(interpret))
+            elif route == "sparse":
+                acc = _bw.bw_gemm_sparse(
+                    digits, bt, plan["schedule"], block_m=block_m,
+                    block_n=block_n, block_k=block_k,
+                    interpret=bool(interpret))
+            else:
+                acc = _bw.bw_gemm(
+                    digits, bt, mask, block_m=block_m, block_n=block_n,
+                    block_k=block_k, radix=spec.radix,
+                    interpret=bool(interpret))
+            acc = acc[plan["inv_perm"]][:n_out, :batch]
+            sw = plan["sw_rows"][plan["inv_perm"]][:n_out]  # orig order
+            s = sw * (sx.reshape(1, -1) if per_token else sx)
+            y = (acc.astype(jnp.float32) * s).T
+            if bias is not None:
+                y = y + jnp.asarray(bias, jnp.float32)
+            if activation is not None:
+                y = _bw.EPILOGUE_ACTIVATIONS[activation](y)
     return y.reshape(*lead, n_out).astype(out_dtype)
 
 

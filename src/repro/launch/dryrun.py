@@ -37,6 +37,7 @@ from repro.configs.registry import (ARCHS, get_config, get_shape,
                                     cell_is_runnable, SHAPES)
 from repro.launch import mesh as meshlib
 from repro.launch import roofline as rl
+from repro.obs import trace as obs_trace
 from repro.parallel import sharding as sh
 from repro.train import optimizer as opt
 from repro.train import steps as st
@@ -227,8 +228,10 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     # 1) the deliverable compile: full depth, production attention path
     t0 = time.time()
-    lowered, compiled = _compile_step(cfg, shape, mesh, rules, multi_pod,
-                                      microbatches)
+    with obs_trace.span("dryrun.compile", cat="dryrun", arch=arch,
+                        shape=shape_name, mesh=mesh_name):
+        lowered, compiled = _compile_step(cfg, shape, mesh, rules,
+                                          multi_pod, microbatches)
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
@@ -248,14 +251,16 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         if cfg.n_encoder_layers:
             vkw2["n_encoder_layers"] = 2
         cfg2 = cfg.replace(**vkw2)
-        _, comp1 = _compile_step(cfg1, shape, mesh, rules, multi_pod,
-                                 microbatches)
-        c1 = _cost_tuple(comp1)
-        del comp1
-        _, comp2 = _compile_step(cfg2, shape, mesh, rules, multi_pod,
-                                 microbatches)
-        c2 = _cost_tuple(comp2)
-        del comp2
+        with obs_trace.span("dryrun.cost_variants", cat="dryrun",
+                            arch=arch, shape=shape_name, mesh=mesh_name):
+            _, comp1 = _compile_step(cfg1, shape, mesh, rules, multi_pod,
+                                     microbatches)
+            c1 = _cost_tuple(comp1)
+            del comp1
+            _, comp2 = _compile_step(cfg2, shape, mesh, rules, multi_pod,
+                                     microbatches)
+            c2 = _cost_tuple(comp2)
+            del comp2
         corrected = _extrapolate(c1, c2, n_l)
 
     kind = shape.kind
@@ -388,7 +393,13 @@ def main(argv=None) -> int:
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--out", default=None)
     ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable repro.obs tracing and write a Chrome "
+                         "trace-event JSON of the lower/compile cells")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        obs_trace.enable(clear_events=True)
 
     if args.all:
         return _run_all(args)
@@ -412,6 +423,10 @@ def main(argv=None) -> int:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump(recs, f, indent=1)
+    if args.trace:
+        obs_trace.save(args.trace)
+        print(f"[obs] trace written to {args.trace} "
+              f"({len(obs_trace.events())} events)", file=sys.stderr)
     return 0 if all(r["status"] in ("ok", "skipped") for r in recs) else 1
 
 

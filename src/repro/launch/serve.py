@@ -117,7 +117,18 @@ def main(argv=None) -> int:
                     help="print stats as JSON")
     ap.add_argument("--out", default=None,
                     help="also write the stats JSON to this file")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable repro.obs tracing and write a Chrome "
+                         "trace-event JSON (chrome://tracing / Perfetto) "
+                         "of the run to PATH")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the repro.obs metrics-registry snapshot "
+                         "JSON to PATH after the run")
     args = ap.parse_args(argv)
+
+    from repro import obs
+    if args.trace:
+        obs.enable(clear_events=True)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     max_len = args.prompt_len + args.max_tokens + 1
@@ -177,6 +188,15 @@ def main(argv=None) -> int:
     if args.out:
         with open(args.out, "w") as f:
             json.dump(stats, f, indent=1, default=str)
+    if args.trace:
+        obs.save(args.trace)
+        print(f"[obs] trace written to {args.trace} "
+              f"({len(obs.trace_events())} events)", file=sys.stderr)
+    if args.metrics:
+        with open(args.metrics, "w") as f:
+            json.dump(obs.snapshot(), f, indent=1)
+        print(f"[obs] metrics snapshot written to {args.metrics}",
+              file=sys.stderr)
     return 0 if ok else 1
 
 

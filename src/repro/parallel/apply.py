@@ -31,14 +31,14 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import quant as quantlib
 from repro.engine.spec import QuantSpec
-# NB: repro.kernels.__init__ re-exports a *function* named bw_gemm that
-# shadows the submodule attribute — import the kernel entry points from
-# the submodule path directly
 from repro.kernels.bw_gemm import (EPILOGUE_ACTIVATIONS, bw_gemm,
                                    bw_gemm_sparse,
                                    bw_gemm_sparse_pipelined)
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
+from .collectives import gemm_collective_bytes
 from .plan import ShardedPlan
 
 __all__ = ["AXIS_DATA", "AXIS_MODEL", "make_gemm_mesh",
@@ -48,6 +48,9 @@ AXIS_DATA = "data"        # K shards; partial accumulators reduce over it
 AXIS_MODEL = "model"      # M shards (output channels); no collective
 
 REDUCES = ("auto", "psum", "psum_scatter")
+
+_M_COLLECTIVE_BYTES = obs_metrics.get_registry().counter(
+    "repro_collective_bytes_total")
 
 
 def make_gemm_mesh(shards):
@@ -129,9 +132,11 @@ def sharded_planned_apply(splan: ShardedPlan, x, spec, n_out: int, *,
     s_data, s_model = splan.shards
     lead = x.shape[:-1]
     per_token = spec.act_quant == "per_token"
-    qx, sx = quantlib.quantize_for_spec(
-        jnp.asarray(x).astype(jnp.float32), spec,
-        axis=-1 if per_token else None)
+    with obs_trace.span("parallel.quantize", cat="parallel",
+                        k=int(k), per_token=per_token):
+        qx, sx = quantlib.quantize_for_spec(
+            jnp.asarray(x).astype(jnp.float32), spec,
+            axis=-1 if per_token else None)
     x2 = qx.reshape(-1, k)
     batch = x2.shape[0]
     if block_n is None:
@@ -178,20 +183,34 @@ def sharded_planned_apply(splan: ShardedPlan, x, spec, n_out: int, *,
         return jax.lax.psum(acc, AXIS_DATA)
 
     out_spec = P(AXIS_MODEL, AXIS_DATA) if scatter else P(AXIS_MODEL, None)
-    acc = shard_map(
-        shard_body, mesh=mesh,
-        in_specs=(P(None, AXIS_MODEL, AXIS_DATA),    # digit planes
-                  P(None, AXIS_MODEL, AXIS_DATA),    # occupancy mask
-                  P(AXIS_MODEL, AXIS_DATA, None, None),  # schedules
-                  P(AXIS_DATA, None)),               # B (k-sliced)
-        out_specs=out_spec, check_rep=False,
-    )(digits, mask, scheds, bt)
-    acc = acc[plan["inv_perm"]][:n_out, :batch]
-    sw = plan["sw_rows"][plan["inv_perm"]][:n_out]
-    s = sw * (sx.reshape(1, -1) if per_token else sx)
-    y = (acc.astype(jnp.float32) * s).T
-    if bias is not None:
-        y = y + jnp.asarray(bias, jnp.float32)
-    if activation is not None:
-        y = EPILOGUE_ACTIVATIONS[activation](y)
-    return y.reshape(*lead, n_out).astype(out_dtype)
+    if obs_trace.enabled():
+        _M_COLLECTIVE_BYTES.inc(gemm_collective_bytes(
+            m_pad, n_cols, s_data, s_model,
+            reduce="psum_scatter" if scatter else "psum"))
+        sp = obs_trace.span(
+            "parallel.shard_map", cat="parallel", route=route,
+            shards=f"{s_data}x{s_model}",
+            reduce="psum_scatter" if scatter else "psum",
+            m=int(m_pad), k=int(k_pad), n=int(n_cols))
+    else:
+        sp = obs_trace.NULL_SPAN
+    with sp:
+        acc = shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(P(None, AXIS_MODEL, AXIS_DATA),    # digit planes
+                      P(None, AXIS_MODEL, AXIS_DATA),    # occupancy mask
+                      P(AXIS_MODEL, AXIS_DATA, None, None),  # schedules
+                      P(AXIS_DATA, None)),               # B (k-sliced)
+            out_specs=out_spec, check_rep=False,
+        )(digits, mask, scheds, bt)
+    with obs_trace.span("parallel.epilogue", cat="parallel",
+                        n_out=int(n_out), batch=int(batch)):
+        acc = acc[plan["inv_perm"]][:n_out, :batch]
+        sw = plan["sw_rows"][plan["inv_perm"]][:n_out]
+        s = sw * (sx.reshape(1, -1) if per_token else sx)
+        y = (acc.astype(jnp.float32) * s).T
+        if bias is not None:
+            y = y + jnp.asarray(bias, jnp.float32)
+        if activation is not None:
+            y = EPILOGUE_ACTIVATIONS[activation](y)
+        return y.reshape(*lead, n_out).astype(out_dtype)

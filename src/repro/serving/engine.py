@@ -33,15 +33,20 @@ import numpy as np
 from repro.engine import QuantSpec
 from repro.models import layers as L
 from repro.models.api import get_api
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.parallel.sharding import unbox
 from repro.train.steps import make_serve_step
 
-from .metrics import dist
+from .metrics import dist, emit_request_trace
 from .request import ServeRequest
 from .scheduler import Scheduler
 from .slots import SlotAllocator
 
 __all__ = ["ServeEngine", "RESET_STATE_FAMILIES"]
+
+_M_STEPS = obs_metrics.get_registry().counter(
+    "repro_serve_engine_steps_total")
 
 # Families whose decode state is a recurrence (no position-masked cache):
 # their per-slot state row must be re-initialized when a slot is reused.
@@ -161,11 +166,22 @@ class ServeEngine:
 
     def step(self, now: float = 0.0) -> List[ServeRequest]:
         """One batched decode step; returns requests finished this step."""
-        nxt, self.state = self.step_fn(
-            self.params, jnp.asarray(self.slots.cur),
-            jnp.asarray(self.slots.pos), self.state)
-        self.steps += 1
-        return self.slots.advance(np.asarray(nxt), now)
+        # hot path: one no-op branch when obs is disabled (the
+        # obs.overhead bench lane + test_obs pin this)
+        if obs_trace.enabled():
+            _M_STEPS.inc()
+            sp = obs_trace.span("serve.decode_step", cat="serve",
+                                active=self.slots.active,
+                                impl=self.spec.impl if self.spec
+                                else None)
+        else:
+            sp = obs_trace.NULL_SPAN
+        with sp:
+            nxt, self.state = self.step_fn(
+                self.params, jnp.asarray(self.slots.cur),
+                jnp.asarray(self.slots.pos), self.state)
+            self.steps += 1
+            return self.slots.advance(np.asarray(nxt), now)
 
     # -- legacy blocking loop ------------------------------------------------
 
@@ -183,6 +199,9 @@ class ServeEngine:
             self.admit_from(sched, now)
             done.extend(self.step(now=time.perf_counter() - t0))
         dt = time.perf_counter() - t0
+        if obs_trace.enabled():
+            for r in done:
+                emit_request_trace(r)
         gen = sum(len(r.out) for r in done)
         stats = {"requests": len(done), "generated_tokens": gen,
                  "engine_steps": self.steps, "wall_s": round(dt, 2),

@@ -6,6 +6,18 @@ stamped on each request (``ServeRequest.ttft`` / ``.tpot`` / ``.latency``),
 so the collector works identically on the realtime clock and the
 virtual-time simulation clock.  ``validate_summary`` pins the summary-dict
 shape — the CI serve-smoke lane and the benchmark artifact both assert it.
+
+The collector is backed by the typed ``repro.obs.metrics`` registry: every
+observation lands in the glossary's ``repro_serve_*`` counter/histogram
+series (fixed bucket edges — deterministic snapshots in virtual-time
+mode), and the summary dict is kept as the validated *view* the CI
+lane pins (exact percentiles come from the raw per-request stamps; the
+registry histograms carry the bucketized exposition).
+
+``emit_request_trace`` converts one finished request's lifecycle stamps
+into Chrome-trace spans on the serving-clock timeline (QUEUED / PREFILL
+/ DECODE phases, tid = request id) — post-hoc emission works identically
+for the virtual and realtime clocks because both stamp the same fields.
 """
 from __future__ import annotations
 
@@ -14,10 +26,13 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 from .request import DONE, REJECTED, ServeRequest
 
 __all__ = ["dist", "ServerMetrics", "SUMMARY_KEYS", "DIST_KEYS",
-           "validate_summary"]
+           "validate_summary", "emit_request_trace"]
 
 DIST_KEYS = ("mean", "p50", "p95", "max")
 
@@ -39,11 +54,51 @@ SUMMARY_KEYS = ("requests", "completed", "rejected", "generated_tokens",
                 "tier_requests", "tier_tokens", "deadlines")
 
 
+def emit_request_trace(req: ServeRequest) -> None:
+    """Trace the request's lifecycle phases on the serving clock.
+
+    One span per phase it passed through — QUEUED (arrival ->
+    admission), PREFILL (admission -> first token; its duration *is*
+    the TTFT tail), DECODE (first token -> done) — with the request id
+    as the track (tid) and ttft/tpot in the span args.  No-op unless
+    tracing is enabled.
+    """
+    if not obs_trace.enabled():
+        return
+    tid = int(req.rid)
+    args = {"tier": req.tier, "tokens": len(req.out)}
+    if req.admitted_at is not None:
+        obs_trace.complete_event("QUEUED", req.arrival, req.admitted_at,
+                                 tid=tid, args=args)
+    if req.admitted_at is not None and req.first_token_at is not None:
+        obs_trace.complete_event(
+            "PREFILL", req.admitted_at, req.first_token_at, tid=tid,
+            args=dict(args, ttft=req.ttft))
+    if req.first_token_at is not None and req.finished_at is not None:
+        obs_trace.complete_event(
+            "DECODE", req.first_token_at, req.finished_at, tid=tid,
+            args=dict(args, tpot=req.tpot, latency=req.latency))
+
+
 class ServerMetrics:
     """Aggregates time-series samples; the final summary combines them with
-    the per-request timing the lifecycle stamps carry."""
+    the per-request timing the lifecycle stamps carry.
 
-    def __init__(self):
+    registry: a ``repro.obs.metrics.MetricsRegistry`` the typed series
+    land in (default: the process-wide registry).  The raw sample lists
+    are kept alongside for the summary view's exact percentiles.
+    """
+
+    def __init__(self, registry: Optional[object] = None):
+        self.registry = registry if registry is not None \
+            else obs_metrics.get_registry()
+        g = obs_metrics.GLOSSARY
+        self._h_depth = self.registry.histogram(
+            "repro_serve_queue_depth",
+            g["repro_serve_queue_depth"]["edges"])
+        self._h_occ = self.registry.histogram(
+            "repro_serve_slot_occupancy",
+            g["repro_serve_slot_occupancy"]["edges"])
         self._queue_depth: List[int] = []
         self._occupancy: Dict[str, List[float]] = {}
         self.engine_steps = 0
@@ -51,14 +106,34 @@ class ServerMetrics:
     def sample(self, queue_depth: int, occupancy: Dict[str, float]) -> None:
         """One observation of server state (taken per scheduling round)."""
         self._queue_depth.append(int(queue_depth))
+        self._h_depth.observe(queue_depth)
         for tier, occ in occupancy.items():
             self._occupancy.setdefault(tier, []).append(float(occ))
+            self._h_occ.labels(tier=tier).observe(occ)
+
+    def _record_run(self, done: List[ServeRequest],
+                    rejected_n: int, gen: int) -> None:
+        """Fold one run's terminal totals into the typed registry."""
+        reg = self.registry
+        reg.counter("repro_serve_completed_total").inc(len(done))
+        reg.counter("repro_serve_generated_tokens_total").inc(gen)
+        g = obs_metrics.GLOSSARY
+        series = (("repro_serve_ttft_seconds", "ttft"),
+                  ("repro_serve_tpot_seconds", "tpot"),
+                  ("repro_serve_latency_seconds", "latency"))
+        for name, attr in series:
+            h = reg.histogram(name, g[name]["edges"])
+            for r in done:
+                v = getattr(r, attr)
+                if v is not None:
+                    h.observe(v)
 
     def summary(self, requests: List[ServeRequest], wall_s: float,
                 sim_s: Optional[float] = None) -> dict:
         done = [r for r in requests if r.state == DONE]
         rejected = [r for r in requests if r.state == REJECTED]
         gen = sum(len(r.out) for r in done)
+        self._record_run(done, len(rejected), gen)
         tier_reqs = Counter(r.tier for r in done if r.tier is not None)
         tier_toks: Counter = Counter()
         for r in done:

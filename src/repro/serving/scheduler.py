@@ -22,7 +22,14 @@ from __future__ import annotations
 import warnings
 from typing import List, Optional
 
+from repro.obs import metrics as obs_metrics
+
 from .request import QUEUED, REJECTED, ServeRequest
+
+_M_ADMITTED = obs_metrics.get_registry().counter(
+    "repro_serve_admitted_total")
+_M_REJECTED = obs_metrics.get_registry().counter(
+    "repro_serve_rejected_total")
 
 __all__ = ["AdmissionPolicy", "FcfsPolicy", "PriorityPolicy",
            "DeadlinePolicy", "POLICIES", "make_policy", "Scheduler"]
@@ -130,8 +137,10 @@ class Scheduler:
             req.error = error
             req.to(REJECTED, now)
             self.rejected.append(req)
+            _M_REJECTED.inc()
             return False
         self._queue.append(req)
+        _M_ADMITTED.inc()
         return True
 
     def pop(self, now: float = 0.0) -> Optional[ServeRequest]:

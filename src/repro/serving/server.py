@@ -27,8 +27,11 @@ import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
+from repro.obs import trace as obs_trace
+from repro.obs.calibrate import get_calibrator
+
 from .engine import ServeEngine
-from .metrics import ServerMetrics
+from .metrics import ServerMetrics, emit_request_trace
 from .request import ServeRequest
 from .scheduler import Scheduler
 from .slots import SlotAllocator  # noqa: F401  (re-exported surface
@@ -112,6 +115,9 @@ class AsyncServer:
                       * step_time_scale, 1e-9)
             per_step[t.name] = est
             self.workers[t.name].step_time = est
+        # cost-model predictions at init time: the realtime worker loop
+        # pairs these with measured step times for CostCalibrator
+        self._initial_per_step = dict(per_step)
         self.router = TierRouter(self.tiers, per_step, router)
         self.metrics = ServerMetrics()
 
@@ -149,6 +155,9 @@ class AsyncServer:
         self.metrics.engine_steps = sum(
             w.engine.steps - steps_before[n]
             for n, w in self.workers.items())
+        if obs_trace.enabled():
+            for r in reqs:
+                emit_request_trace(r)
         stats = self.metrics.summary(reqs, wall_s, sim_s)
         stats["mode"] = "realtime" if realtime else "virtual"
         stats["router_policy"] = self.router.policy
@@ -238,5 +247,12 @@ class AsyncServer:
             # EWMA of measured step time feeds the router's SLO estimates
             worker.step_time = dt if not measured else \
                 0.8 * worker.step_time + 0.2 * dt
+            if not measured and worker.tier.spec is not None:
+                # first clean measurement vs the cost-model estimate the
+                # router started from -> calibration drift sample
+                get_calibrator().record(
+                    worker.tier.spec.impl,
+                    self._initial_per_step[worker.tier.name], dt,
+                    shape=None, source="realtime")
             measured = True
             self.router.per_step[worker.tier.name] = worker.step_time

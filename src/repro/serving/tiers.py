@@ -33,14 +33,11 @@ from .request import ServeRequest
 __all__ = ["Tier", "default_tiers", "decode_step_gemms", "step_cost",
            "estimate_step_time", "TierRouter", "ROUTER_POLICIES"]
 
-# nominal accumulator-traffic bandwidth for the epilogue HBM round-trip
-# (bytes/s); only the *relative* cost across engines matters for routing
-_NOMINAL_HBM_BPS = 300e9
-
-# nominal interconnect bandwidth for cross-shard collectives (bytes/s);
-# matches launch.roofline.ICI_BW so the two cost seams price a sharded
-# tier's reduce identically
-_NOMINAL_ICI_BPS = 50e9
+# nominal pricing bandwidths live on the engine registry now (the single
+# pricing seam shared with GemmEngine.predict_seconds / obs.calibrate);
+# the old names stay as aliases
+from repro.engine.registry import (NOMINAL_HBM_BPS as _NOMINAL_HBM_BPS,
+                                   NOMINAL_ICI_BPS as _NOMINAL_ICI_BPS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,7 +132,8 @@ def step_cost(cfg, batch: int, spec: Optional[QuantSpec],
 def estimate_step_time(cfg, batch: int, spec: Optional[QuantSpec],
                        design: str = "tpu",
                        density: Optional[float] = None,
-                       shards: Optional[Tuple[int, int]] = None) -> float:
+                       shards: Optional[Tuple[int, int]] = None,
+                       correction: float = 1.0) -> float:
     """Estimated seconds per decode step on a core.hwmodel array design.
 
     The compute term prices the integer MACs *actually executed*: the
@@ -150,13 +148,18 @@ def estimate_step_time(cfg, batch: int, spec: Optional[QuantSpec],
     block DMA dwarfs the useful work).  Sharded tiers (``shards``) pay a
     third term: the per-device collective traffic over a nominal ICI
     link — so the router sees both the per-shard MAC savings *and* the
-    reduce it buys them with."""
+    reduce it buys them with.
+
+    correction: multiplicative calibration factor mapping the nominal
+    estimate onto a measured timeline — typically
+    ``obs.get_calibrator().correction(spec.impl)`` (1.0 = uncorrected).
+    """
     d = hw.TABLE7[design]
     cost = step_cost(cfg, batch, spec, density=density, shards=shards)
     ops_per_s = hw.peak_tops(d) * 1e12
     return (2.0 * cost["int_macs"] / ops_per_s
             + cost["acc_hbm_bytes"] / _NOMINAL_HBM_BPS
-            + cost["collective_bytes"] / _NOMINAL_ICI_BPS)
+            + cost["collective_bytes"] / _NOMINAL_ICI_BPS) * correction
 
 
 ROUTER_POLICIES = ("quality", "fastest", "round_robin", "slo")
@@ -202,6 +205,27 @@ class TierRouter:
             tier = self._route_slo(req, now, loads or {})
         req.tier = tier.name
         return tier
+
+    def apply_calibration(self, calibrator) -> Dict[str, float]:
+        """Scale ``per_step`` by measured cost-model drift per tier.
+
+        ``calibrator`` is an ``obs.CostCalibrator``; each tier's
+        estimate is multiplied by ``correction(impl)`` for its spec's
+        impl (unquantized tiers and impls with no samples keep 1.0).
+        Returns the factors applied — the hook the ROADMAP
+        background-retuning item consumes.  Idempotence is the
+        caller's concern: apply to freshly estimated values, or track
+        the previous factors.
+        """
+        applied = {}
+        for tier in self.tiers:
+            factor = (calibrator.correction(tier.spec.impl)
+                      if tier.spec is not None else 1.0)
+            self.per_step[tier.name] *= factor
+            applied[tier.name] = factor
+        self._fastest = min(self.tiers,
+                            key=lambda t: (self.per_step[t.name], t.name))
+        return applied
 
     def _route_slo(self, req, now, loads) -> Tier:
         if req.deadline is None:

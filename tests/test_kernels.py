@@ -1,16 +1,32 @@
 """Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
 sweeps with exact integer equality."""
+import importlib
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import quant as quantlib
 from repro.kernels import ops, ref
-import repro.kernels.bw_gemm as bwk          # module (package re-exports the
-import repro.kernels.quant_gemm as qgk       # same names as functions)
-import importlib
-bwk = importlib.import_module("repro.kernels.bw_gemm")
-qgk = importlib.import_module("repro.kernels.quant_gemm")
+import repro.kernels.bw_gemm as bwk          # the kernel submodules (the
+import repro.kernels.quant_gemm as qgk       # package no longer shadows them)
+
+
+def test_submodules_not_shadowed():
+    """Regression: `import repro.kernels.bw_gemm as mod` must yield the
+    *module* — the package once re-exported same-named functions that
+    shadowed the submodule attributes (CHANGES.md PR 7 gotcha)."""
+    import types
+
+    import repro.kernels as pkg
+    for name, alias in (("bw_gemm", bwk), ("quant_gemm", qgk)):
+        mod = importlib.import_module(f"repro.kernels.{name}")
+        assert isinstance(alias, types.ModuleType)
+        assert alias is mod
+        assert getattr(pkg, name) is mod
+        # the entry-point function still exists, on the module and ops
+        assert callable(getattr(mod, name))
+        assert callable(getattr(ops, name))
 
 
 def _rand_int8(rng, shape):

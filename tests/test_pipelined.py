@@ -21,10 +21,7 @@ from _propcheck import assert_cross_context_close
 
 from repro.core import quant as quantlib
 from repro.engine import QuantSpec, get_engine
-from repro.kernels import autotune, ops
-# NOTE: `from repro.kernels import bw_gemm` would pick up the ops wrapper
-# *function* re-exported by the package __init__, not the kernel module
-bwk = __import__('sys').modules['repro.kernels.bw_gemm']
+from repro.kernels import autotune, bw_gemm as bwk, ops
 SCHED_COLS = bwk.SCHED_COLS
 
 
