@@ -276,6 +276,52 @@ def serve_throughput():
     return out
 
 
+def serve_degraded():
+    """Failover cost under a mid-run tier kill: the two-tier ladder serves
+    the same deterministic virtual-time trace healthy and with the fast
+    worker killed before its 5th pump (seeded FaultPlan).  Everything but
+    wall clock is discrete-event deterministic, so completions, deaths,
+    migrations, per-tier histograms, deadline outcomes and the sim-clock
+    rates are pinned in the BENCH baseline; the ``timing`` subdict is host
+    wall-clock and stripped by ``write_baseline``."""
+    import time
+    from repro.chaos import FaultPlan
+    from repro.configs.registry import get_config
+    from repro.serving import (AsyncServer, default_tiers, loadgen,
+                               validate_summary)
+    cfg = get_config("minicpm-2b", smoke=True)
+    server = AsyncServer(cfg, tiers=default_tiers(2, batch=2), max_len=16,
+                         router="slo", step_time_scale=5e4, retry_budget=4)
+    out = {"timing": {}}
+    for lane, plan in (
+            ("healthy", None),
+            ("degraded", FaultPlan().add("kill", target="fast",
+                                         after_steps=4))):
+        server.chaos = plan
+        reqs = loadgen.synthesize(cfg.vocab_size, 12, prompt_len=(3, 6),
+                                  max_tokens=(3, 6), pattern="poisson",
+                                  rate=50, deadline_slack=(0.1, 1.5), seed=0)
+        t0 = time.perf_counter()
+        stats = validate_summary(server.run(reqs))
+        out["timing"][f"{lane}_wall_s"] = round(time.perf_counter() - t0, 3)
+        out[lane] = {"completed": stats["completed"],
+                     "worker_deaths": stats["failover"]["worker_deaths"],
+                     "migrations": stats["failover"]["migrations"],
+                     "retries": stats["failover"]["retries"],
+                     "lost": stats["failover"]["lost"],
+                     "tier_requests": stats["tier_requests"],
+                     "deadlines_met": stats["deadlines"]["met"],
+                     "sim_s": stats["sim_s"],
+                     "tok_per_s": stats["tok_per_s"]}
+    # the degradation story in two numbers: the kill costs sim-time
+    # throughput but loses nothing
+    out["slowdown"] = round(out["degraded"]["sim_s"]
+                            / max(out["healthy"]["sim_s"], 1e-12), 4)
+    out["all_recovered"] = (out["degraded"]["completed"] == 12
+                            and out["degraded"]["lost"] == 0)
+    return out
+
+
 def e2e_sharded_gemm():
     """Sharded planned GEMM (repro.parallel) vs single device on a forced
     8-device host mesh.  Runs as a subprocess because the forced device
@@ -620,6 +666,7 @@ BENCHES = [
     ("e2e.train_step_smoke", train_step_smoke),
     ("e2e.quantized_forward_kernel", model_quantized_forward_kernel),
     ("e2e.serve_throughput", serve_throughput),
+    ("e2e.serve_degraded", serve_degraded),
     ("e2e.sharded_gemm", e2e_sharded_gemm),
     ("beyond.qat_planes_ablation", qat_planes_ablation),
     ("beyond.encoding_width_scaling", encoding_width_scaling),
@@ -640,19 +687,21 @@ BENCHES = [
 #   PYTHONPATH=src python -m benchmarks.run --write-baseline
 #
 # benchmarks/check_baseline.py does the tolerance diff (CI bench job).
-BASELINE_VERSION = 6
+BASELINE_VERSION = 7
 
 # wall-time-independent lanes: everything except the e2e timing lanes and
 # the slow QAT ablation (whose losses depend on the accelerator backend).
 # e2e.sharded_gemm is pinned for its deterministic parts (parity flags,
-# densities, collective bytes); its wall-clock subdict is stripped below.
+# densities, collective bytes) and e2e.serve_degraded for its virtual-time
+# failover outcomes; their wall-clock subdicts are stripped below.
 BASELINE_PREFIXES = ("table", "fig", "eq", "kernel", "beyond.encoding",
-                     "e2e.sharded_gemm")
+                     "e2e.sharded_gemm", "e2e.serve_degraded")
 
 # per-lane keys whose values are host wall-clock — dropped from the
 # pinned baseline so only the deterministic parts gate CI (the check
 # compares baseline-present keys only)
-VOLATILE_KEYS = {"e2e.sharded_gemm": ("timing",)}
+VOLATILE_KEYS = {"e2e.sharded_gemm": ("timing",),
+                 "e2e.serve_degraded": ("timing",)}
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

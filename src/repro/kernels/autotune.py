@@ -49,6 +49,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
+from repro import chaos as _chaos
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.calibrate import get_calibrator
@@ -92,6 +93,8 @@ _M_MISS_WARNINGS = obs_metrics.get_registry().counter(
     "repro_autotune_miss_warnings_total")
 _M_VMEM_REJECTED = obs_metrics.get_registry().counter(
     "repro_autotune_vmem_rejected_total")
+_M_LOAD_ERRORS = obs_metrics.get_registry().counter(
+    "repro_autotune_cache_load_errors_total")
 
 # dispatch route -> the GemmEngine impl whose cost model prices it (the
 # calibration pairing key)
@@ -162,11 +165,32 @@ class AutotuneCache:
                 "misses": self.misses}
 
     @classmethod
-    def load(cls, path: str, strict: bool = False) -> "AutotuneCache":
+    def load(cls, path: str, strict: bool = False,
+             on_error: str = "raise") -> "AutotuneCache":
+        """Load a cache file.
+
+        on_error="raise" (default) propagates parse/validation errors —
+        the ``--validate`` CI lane depends on a corrupt cache *failing*.
+        on_error="fallback" — the runtime dispatch-seam policy
+        (``get_cache``) — turns a corrupt, truncated, or partially
+        written file into an *empty* cache: one
+        ``AutotuneCacheMissWarning`` plus the
+        ``repro_autotune_cache_load_errors_total`` counter, and every
+        lookup falls back to the static block-size table.  A bad cache
+        file must never take serving down.
+        """
+        if on_error not in ("raise", "fallback"):
+            raise ValueError(f"on_error must be 'raise' or 'fallback', "
+                             f"got {on_error!r}")
         cache = cls(path, strict=strict)
-        if path and os.path.exists(path):
+        if not path or not os.path.exists(path):
+            return cache
+        try:
             with open(path) as f:
-                payload = json.load(f)
+                text = f.read()
+            if _chaos.enabled():
+                text = _chaos.corrupt_if_due("autotune.load", text)
+            payload = json.loads(text)
             version = payload.get("version")
             if version != CACHE_FORMAT_VERSION:
                 raise ValueError(
@@ -175,7 +199,17 @@ class AutotuneCache:
             entries = payload.get("entries", {})
             for key, entry in entries.items():
                 cache._check_entry(key, entry)
-            cache.entries = dict(entries)
+        except (ValueError, OSError, AttributeError) as e:
+            # json.JSONDecodeError is a ValueError subclass
+            if on_error == "raise":
+                raise
+            _M_LOAD_ERRORS.inc()
+            warnings.warn(
+                f"autotune cache {path!r} failed to load ({e}); using "
+                f"the static block-size table instead",
+                AutotuneCacheMissWarning, stacklevel=2)
+            return cls(path, strict=strict)
+        cache.entries = dict(entries)
         return cache
 
     @staticmethod
@@ -252,9 +286,13 @@ class AutotuneCache:
         payload = {"version": CACHE_FORMAT_VERSION,
                    "entries": {k: self.entries[k]
                                for k in sorted(self.entries)}}
-        with open(path, "w") as f:
+        # write-then-rename: a reader (or a crash) mid-save sees either
+        # the old complete file or the new complete file, never a torn one
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
             json.dump(payload, f, indent=1, sort_keys=True)
             f.write("\n")
+        os.replace(tmp, path)
         return path
 
 
@@ -273,7 +311,10 @@ def get_cache() -> AutotuneCache:
     env = os.environ.get(ENV_VAR)
     source = (env or DEFAULT_CACHE_PATH, env is not None)
     if _CACHE is None or _CACHE_SOURCE != source:
-        _CACHE = AutotuneCache.load(source[0], strict=source[1])
+        # runtime resolution never raises on a bad file: a corrupt cache
+        # degrades to the static block table, it does not stop serving
+        _CACHE = AutotuneCache.load(source[0], strict=source[1],
+                                    on_error="fallback")
         _CACHE_SOURCE = source
     return _CACHE
 

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import chaos as _chaos
 from repro.core import encodings as enc
 from repro.core import quant as quantlib
 from repro.engine.spec import QuantSpec
@@ -977,6 +978,10 @@ def planned_dense_apply(plan: dict, x, spec, n_out: int, *, bias=None,
     if per_token:                        # one scale per activation row ->
         sx_cols = _pad_to(sx.reshape(1, -1), block_n, 1)  # kernel N axis
     route = _resolve_dispatch(dispatch, plan, spec, n_out, k, batch, order)
+    # chaos seam: one branch when no plan is armed; fires only on eager
+    # (or trace-time) calls — a jit'd serve step never re-enters here
+    if _chaos.enabled():
+        _chaos.maybe_raise("kernel.dispatch", target=route)
     # hot path: the span + dispatch counter take one no-op branch when
     # obs is disabled (pinned by the obs.overhead bench lane)
     if obs_trace.enabled():

@@ -27,9 +27,9 @@ import numpy as np
 
 from repro.configs.registry import ARCHS, get_config
 from repro.engine import QuantSpec, engine_names, spec_from_flags
-from repro.serving import (AsyncServer, Request, ROUTER_POLICIES,
-                           ServeEngine, Tier, default_tiers, loadgen,
-                           validate_summary)
+from repro.serving import (AsyncServer, BrownoutPolicy, Request,
+                           ROUTER_POLICIES, ServeEngine, Tier,
+                           default_tiers, loadgen, validate_summary)
 from repro.serving.scheduler import POLICIES
 
 __all__ = ["ServeEngine", "Request", "main"]
@@ -107,6 +107,22 @@ def main(argv=None) -> int:
     ap.add_argument("--realtime", action="store_true",
                     help="threaded wall-clock mode (default: deterministic "
                          "virtual-time simulation)")
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="arm a fault plan for the run (FaultPlan.parse "
+                         "grammar, e.g. 'kill:fast@s3'); equivalent to "
+                         "setting REPRO_CHAOS but scoped to this server")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="restarts granted per request after a tier "
+                         "worker dies (0 = lose its in-flight requests)")
+    ap.add_argument("--retry-backoff", type=float, default=0.0,
+                    help="base seconds before a drained request is "
+                         "re-routed (doubles per retry; 0 = immediate)")
+    ap.add_argument("--brownout", default=None, metavar="[ENTER:EXIT]",
+                    nargs="?", const="48:12",
+                    help="enable graceful degradation: above ENTER backlog "
+                         "tokens per slot the router demotes requests down "
+                         "the quality ladder, recovering below EXIT "
+                         "(default 48:12)")
     ap.add_argument("--step-time-scale", type=float, default=5e4,
                     help="virtual-mode multiplier on the hwmodel step-time "
                          "estimates (smoke models are tiny, so unscaled "
@@ -171,18 +187,36 @@ def main(argv=None) -> int:
             max_tokens=(max(args.max_tokens // 2, 1), args.max_tokens),
             pattern=args.arrival, rate=args.rate,
             deadline_slack=args.deadline_slack, seed=args.seed)
+        brownout = None
+        if args.brownout is not None:
+            try:
+                enter_s, exit_s = args.brownout.split(":")
+                brownout = BrownoutPolicy(enter=float(enter_s),
+                                          exit=float(exit_s))
+            except ValueError as e:
+                ap.error(f"--brownout expects ENTER:EXIT pressures "
+                         f"({e})")
         server = AsyncServer(cfg, tiers=tiers, max_len=max_len,
                              seed=args.seed, admission=args.policy,
                              router=args.router,
-                             step_time_scale=args.step_time_scale)
+                             step_time_scale=args.step_time_scale,
+                             chaos=args.chaos,
+                             retry_budget=args.retry_budget,
+                             retry_backoff=args.retry_backoff,
+                             brownout=brownout)
         stats = server.run(reqs, realtime=args.realtime)
         validate_summary(stats)
+        # requests lost to an exhausted retry budget (or total tier loss)
+        # are a failure even though they are accounted as rejected — the
+        # chaos-smoke CI probe with --retry-budget 0 relies on exit 1
         ok = (stats["completed"] + stats["rejected"] == stats["requests"]
-              and stats["completed"] > 0)
+              and stats["completed"] > 0
+              and stats["failover"]["lost"] == 0)
         if not ok:
             print(f"serve FAILED: {stats['completed']} completed + "
                   f"{stats['rejected']} rejected of {stats['requests']} "
-                  f"requests", file=sys.stderr)
+                  f"requests ({stats['failover']['lost']} lost to "
+                  f"failover)", file=sys.stderr)
 
     print(json.dumps(stats, indent=1, default=str) if args.json else stats)
     if args.out:

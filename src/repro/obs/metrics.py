@@ -330,6 +330,35 @@ GLOSSARY = {
         "type": "gauge",
         "help": "CostCalibrator measured/predicted drift per impl "
                 "(label impl=); 1.0 = perfectly calibrated."},
+    "repro_chaos_faults_injected_total": {
+        "type": "counter",
+        "help": "Chaos faults fired by the installed FaultPlan "
+                "(label kind=); zero unless REPRO_CHAOS is enabled."},
+    "repro_serve_worker_deaths_total": {
+        "type": "counter",
+        "help": "Tier workers declared DEAD (label tier=): injected "
+                "kills, engine failures, or watchdog timeouts."},
+    "repro_serve_retries_total": {
+        "type": "counter",
+        "help": "Request restarts after a worker death (bounded by the "
+                "server's retry budget)."},
+    "repro_serve_migrations_total": {
+        "type": "counter",
+        "help": "Requests re-routed away from a dead tier."},
+    "repro_serve_requests_lost_total": {
+        "type": "counter",
+        "help": "Requests REJECTED because their retry budget was "
+                "exhausted or no live tier remained."},
+    "repro_serve_brownout_transitions_total": {
+        "type": "counter",
+        "help": "Brownout level changes (label direction=down|up)."},
+    "repro_serve_brownout_level": {
+        "type": "gauge",
+        "help": "Current brownout degradation level (0 = healthy)."},
+    "repro_autotune_cache_load_errors_total": {
+        "type": "counter",
+        "help": "Autotune cache files that failed to parse and fell "
+                "back to the static block-size table."},
 }
 
 _default = MetricsRegistry(preset=True)

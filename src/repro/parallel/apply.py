@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
+from repro import chaos as _chaos
 from repro.core import quant as quantlib
 from repro.engine.spec import QuantSpec
 from repro.kernels.bw_gemm import (EPILOGUE_ACTIVATIONS, bw_gemm,
@@ -110,6 +111,8 @@ def sharded_planned_apply(splan: ShardedPlan, x, spec, n_out: int, *,
     (scatter when it divides, else psum).
     """
     spec = QuantSpec.coerce(spec)
+    if _chaos.enabled():     # one branch when no fault plan is armed
+        _chaos.maybe_raise("parallel.shard")
     if interpret is None:
         interpret = ops._interpret()
     plan = splan.plan

@@ -33,10 +33,10 @@ from .slots import SlotAllocator, SlotEvent                    # noqa: F401
 from .scheduler import (Scheduler, AdmissionPolicy, POLICIES,  # noqa: F401
                         make_policy)
 from .tiers import (Tier, default_tiers, TierRouter,           # noqa: F401
-                    ROUTER_POLICIES, estimate_step_time, step_cost,
-                    decode_step_gemms)
+                    ROUTER_POLICIES, BrownoutPolicy,
+                    estimate_step_time, step_cost, decode_step_gemms)
 from .engine import ServeEngine, RESET_STATE_FAMILIES          # noqa: F401
-from .server import AsyncServer, TierWorker                    # noqa: F401
+from .server import AsyncServer, TierWorker, WorkerDied        # noqa: F401
 from .metrics import (ServerMetrics, validate_summary,         # noqa: F401
                       SUMMARY_KEYS, dist)
 from . import loadgen                                          # noqa: F401
@@ -47,9 +47,10 @@ __all__ = [
     "SlotAllocator", "SlotEvent",
     "Scheduler", "AdmissionPolicy", "POLICIES", "make_policy",
     "Tier", "default_tiers", "TierRouter", "ROUTER_POLICIES",
+    "BrownoutPolicy",
     "estimate_step_time", "step_cost", "decode_step_gemms",
     "ServeEngine", "RESET_STATE_FAMILIES",
-    "AsyncServer", "TierWorker",
+    "AsyncServer", "TierWorker", "WorkerDied",
     "ServerMetrics", "validate_summary", "SUMMARY_KEYS", "dist",
     "loadgen",
 ]

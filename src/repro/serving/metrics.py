@@ -51,7 +51,8 @@ def dist(values: Iterable[float], ndigits: int = 4) -> Optional[dict]:
 SUMMARY_KEYS = ("requests", "completed", "rejected", "generated_tokens",
                 "engine_steps", "wall_s", "sim_s", "req_per_s", "tok_per_s",
                 "ttft", "tpot", "latency", "queue_depth", "slot_occupancy",
-                "tier_requests", "tier_tokens", "deadlines")
+                "tier_requests", "tier_tokens", "deadlines", "failover",
+                "brownout")
 
 
 def emit_request_trace(req: ServeRequest) -> None:
@@ -165,6 +166,12 @@ class ServerMetrics:
             "tier_tokens": dict(sorted(tier_toks.items())),
             "deadlines": {"with_deadline": len(with_deadline), "met": met,
                           "missed": len(with_deadline) - met},
+            # the AsyncServer overwrites these with its failover /
+            # brownout tallies; the defaults keep the summary shape
+            # stable for collectors that never see a fault
+            "failover": {"worker_deaths": 0, "retries": 0,
+                         "migrations": 0, "lost": 0},
+            "brownout": {"transitions": 0, "max_level": 0},
         }
 
 
@@ -197,6 +204,11 @@ def validate_summary(stats: dict) -> dict:
         if sum(tr.values()) != stats["completed"]:
             problems.append("tier_requests histogram does not sum to "
                             "completed")
+    fo = stats.get("failover")
+    if isinstance(fo, dict):
+        for key in ("worker_deaths", "retries", "migrations", "lost"):
+            if not isinstance(fo.get(key), int):
+                problems.append(f"failover[{key!r}] must be an int")
     if problems:
         raise ValueError("bad serving metrics summary: "
                          + "; ".join(problems))

@@ -60,6 +60,8 @@ class ServeRequest:
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     error: Optional[str] = None
+    retries: int = 0       # restart attempts after a worker death
+    migrations: int = 0    # times re-routed away from a dead tier
 
     def to(self, state: str, now: Optional[float] = None) -> "ServeRequest":
         """Transition to ``state``, stamping the matching timestamp."""
@@ -74,6 +76,24 @@ class ServeRequest:
         elif state == DONE:
             self.finished_at = now
             self.done = True
+        return self
+
+    def requeue(self, now: Optional[float] = None) -> "ServeRequest":
+        """Return to QUEUED after a worker death: partial output and the
+        admission/first-token stamps are discarded (slot/KV state on the
+        dead worker is gone), so the request restarts from its prompt on
+        whatever tier the router picks next.  ``arrival`` is kept — TTFT
+        and latency keep pricing the lost work.  Terminal requests cannot
+        be requeued (finish-exactly-once)."""
+        if self.terminal:
+            raise ValueError(f"request {self.rid}: cannot requeue in "
+                             f"terminal state {self.state}")
+        self.state = QUEUED
+        self.out = []
+        self.done = False
+        self.admitted_at = None
+        self.first_token_at = None
+        self.tier = None
         return self
 
     # -- derived timings (None until the relevant stamps exist) -------------

@@ -151,3 +151,9 @@ class Scheduler:
 
     def peek_all(self) -> List[ServeRequest]:
         return list(self._queue)
+
+    def drain(self) -> List[ServeRequest]:
+        """Remove and return every queued request (submission order) —
+        the worker-death path hands them back to the router."""
+        drained, self._queue = self._queue, []
+        return drained

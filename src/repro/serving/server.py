@@ -20,24 +20,60 @@ then drives the workers in one of two modes:
 Per-request outputs are bit-identical to a standalone ``ServeEngine`` run
 under the same QuantSpec: a tier worker *is* a standalone engine, and a
 decode row depends only on its own slot state for the dense families.
+
+Fault tolerance
+---------------
+Workers can die: an injected ``repro.chaos`` fault, an engine exception,
+or a ``WorkerWatchdog`` heartbeat timeout (no completed step for
+``miss_limit`` x the worker's EWMA step time, on whichever clock the mode
+runs).  A dead worker's queued *and* in-flight requests are drained back
+to the router: slot/KV state is discarded, the request restarts from its
+prompt on a surviving tier (``ServeRequest.requeue``), bounded by
+``retry_budget`` with exponential backoff.  Every admitted request still
+finishes exactly once — either DONE on some tier or REJECTED with its
+``error`` explaining the exhausted budget.  Injected faults and watchdog
+verdicts are part of normal operation; any *other* worker exception is
+re-raised as ``WorkerDied`` when ``run`` returns, so an engine bug can
+never die silently in a worker thread.
+
+With no chaos plan installed (``REPRO_CHAOS`` unset) the fault machinery
+costs one ``is not None`` branch per scheduling round and injects zero
+events.
 """
 from __future__ import annotations
 
+import heapq
 import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
+from repro.chaos import FaultPlan, InjectedFault, WorkerKilled, active_plan
+from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.calibrate import get_calibrator
+from repro.train.fault import WorkerWatchdog
 
 from .engine import ServeEngine
 from .metrics import ServerMetrics, emit_request_trace
-from .request import ServeRequest
+from .request import REJECTED, ServeRequest
 from .scheduler import Scheduler
 from .slots import SlotAllocator  # noqa: F401  (re-exported surface
-from .tiers import Tier, TierRouter, default_tiers, estimate_step_time
+from .tiers import (BrownoutPolicy, Tier, TierRouter, default_tiers,
+                    estimate_step_time)
 
-__all__ = ["TierWorker", "AsyncServer"]
+__all__ = ["TierWorker", "AsyncServer", "WorkerDied"]
+
+_REG = obs_metrics.get_registry()
+_M_WORKER_DEATHS = _REG.counter("repro_serve_worker_deaths_total")
+_M_RETRIES = _REG.counter("repro_serve_retries_total")
+_M_MIGRATIONS = _REG.counter("repro_serve_migrations_total")
+_M_LOST = _REG.counter("repro_serve_requests_lost_total")
+
+
+class WorkerDied(RuntimeError):
+    """A tier worker stopped: watchdog verdict while serving, or the
+    wrapper ``AsyncServer.run`` re-raises for unexpected worker
+    exceptions (anything that is not an injected chaos fault)."""
 
 
 class TierWorker:
@@ -56,6 +92,21 @@ class TierWorker:
         self.next_free = 0.0        # virtual-mode: when this worker can step
         self.step_time = 1e-9       # seconds per engine step (est. or EWMA)
         self.cv = threading.Condition()
+        self.alive = True
+        self.error: Optional[BaseException] = None
+        self.pumps = 0              # completed steps this run (chaos @sN)
+        self.slow_factor = 1.0      # chaos "slow" fault multiplier
+        self.death_done = True      # death drain completed (realtime sync)
+
+    def revive(self) -> None:
+        """Reset liveness for a fresh ``run`` (engine/jit cache reused)."""
+        self.alive = True
+        self.error = None
+        self.pumps = 0
+        self.slow_factor = 1.0
+        self.next_free = 0.0
+        self.death_done = True
+        self.finished.clear()
 
     def submit(self, req: ServeRequest, now: float) -> bool:
         with self.cv:
@@ -85,6 +136,14 @@ class TierWorker:
                 self.finished.extend(finished)
         return finished
 
+    def drain(self) -> List[ServeRequest]:
+        """Evict in-flight requests and drain the queue (death path).
+        Order is deterministic: slot order, then submission order —
+        which is also the order they re-enter the router."""
+        with self.cv:
+            return (self.engine.slots.evict_all()
+                    + self.scheduler.drain())
+
 
 class AsyncServer:
     """Routes a request load across QuantSpec-tiered ServeEngine workers."""
@@ -93,12 +152,22 @@ class AsyncServer:
                  max_len: int = 32, seed: int = 0, admission: str = "fcfs",
                  router: str = "slo", on_too_long: str = "reject",
                  design: str = "tpu", step_time_scale: float = 1.0,
-                 audit: bool = False):
+                 audit: bool = False, retry_budget: int = 2,
+                 retry_backoff: float = 0.0,
+                 chaos: Optional[object] = None,
+                 brownout: Optional[BrownoutPolicy] = None,
+                 watchdog_miss_limit: int = 3):
         self.cfg = cfg
         self.tiers = tuple(tiers if tiers is not None else default_tiers(2))
         names = [t.name for t in self.tiers]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate tier names: {names}")
+        if retry_budget < 0:
+            raise ValueError(f"retry_budget must be >= 0, got "
+                             f"{retry_budget}")
+        if retry_backoff < 0:
+            raise ValueError(f"retry_backoff must be >= 0, got "
+                             f"{retry_backoff}")
         self.workers: Dict[str, TierWorker] = {
             t.name: TierWorker(t, cfg, max_len, seed=seed,
                                admission=admission, on_too_long=on_too_long,
@@ -118,20 +187,141 @@ class AsyncServer:
         # cost-model predictions at init time: the realtime worker loop
         # pairs these with measured step times for CostCalibrator
         self._initial_per_step = dict(per_step)
-        self.router = TierRouter(self.tiers, per_step, router)
+        self.router = TierRouter(self.tiers, per_step, router,
+                                 brownout=brownout)
         self.metrics = ServerMetrics()
+        self.retry_budget = retry_budget
+        self.retry_backoff = retry_backoff
+        if isinstance(chaos, str):
+            chaos = FaultPlan.parse(chaos)
+        self._chaos = chaos           # explicit plan (None -> env-installed)
+        self._plan: Optional[FaultPlan] = None   # resolved per run
+        self._watchdog = WorkerWatchdog(names,
+                                        miss_limit=watchdog_miss_limit)
+        self._lock = threading.Lock()
+        self._fail = {"worker_deaths": 0, "retries": 0, "migrations": 0,
+                      "lost": 0}
+        self._brown = {"transitions": 0, "max_level": 0}
+        self._retries: List[tuple] = []   # heap of (due, seq, request)
+        self._rseq = 0
+
+    @property
+    def chaos(self) -> Optional[FaultPlan]:
+        """The explicit fault plan (None = whatever plan is installed
+        process-wide via ``repro.chaos.install`` / ``REPRO_CHAOS``)."""
+        return self._chaos
+
+    @chaos.setter
+    def chaos(self, plan) -> None:
+        if isinstance(plan, str):
+            plan = FaultPlan.parse(plan)
+        self._chaos = plan
 
     # -- routing -------------------------------------------------------------
 
     def _route_and_submit(self, req: ServeRequest, now: float) -> bool:
-        loads = {n: w.loads() for n, w in self.workers.items()}
-        tier = self.router.route(req, now, loads)
+        with self._lock:
+            live = {n: w for n, w in self.workers.items() if w.alive}
+            if not live:
+                self._reject_lost(req, now, "no live tiers remain")
+                return False
+            loads = {n: w.loads() for n, w in live.items()}
+            tier = self.router.route(req, now, loads)
         return self.workers[tier.name].submit(req, now)
 
-    def _sample(self) -> None:
+    def _sample(self, now: float = 0.0) -> None:
+        live = {n: w for n, w in self.workers.items() if w.alive}
         self.metrics.sample(
-            sum(w.scheduler.queue_depth for w in self.workers.values()),
-            {n: w.engine.slots.occupancy for n, w in self.workers.items()})
+            sum(w.scheduler.queue_depth for w in live.values()),
+            {n: w.engine.slots.occupancy for n, w in live.items()})
+        if self.router.brownout is not None and live:
+            backlog = sum(w.loads()[0] for w in live.values())
+            slots = sum(w.tier.batch for w in live.values())
+            prev = self.router.brownout_level
+            level = self.router.note_pressure(backlog / max(slots, 1), now)
+            if level != prev:
+                self._brown["transitions"] += 1
+                self._brown["max_level"] = max(self._brown["max_level"],
+                                               level)
+
+    # -- failover ------------------------------------------------------------
+
+    def _reject_lost(self, req: ServeRequest, now: float, why: str) -> None:
+        if req.terminal:
+            return
+        req.requeue(now)
+        req.error = why
+        req.to(REJECTED, now)
+        self._fail["lost"] += 1
+        _M_LOST.inc()
+
+    def _requeue_or_reject(self, req: ServeRequest, now: float,
+                           dead_tier: str) -> None:
+        """One drained victim of a worker death: restart from the prompt
+        on a surviving tier, or reject when the retry budget is spent."""
+        if req.terminal:
+            return
+        if req.retries >= self.retry_budget:
+            self._reject_lost(
+                req, now, f"retry budget ({self.retry_budget}) exhausted "
+                          f"after tier {dead_tier!r} died")
+            return
+        req.requeue(now)
+        req.retries += 1
+        req.migrations += 1
+        self._fail["retries"] += 1
+        self._fail["migrations"] += 1
+        _M_RETRIES.inc()
+        _M_MIGRATIONS.inc()
+        delay = (0.0 if self.retry_backoff == 0.0
+                 else self.retry_backoff * 2.0 ** (req.retries - 1))
+        self._rseq += 1
+        heapq.heappush(self._retries, (now + delay, self._rseq, req))
+
+    def _on_worker_death(self, worker: TierWorker, now: float,
+                         exc: BaseException) -> None:
+        """Declare ``worker`` DEAD and hand its requests back to the
+        router.  Idempotent; safe from worker threads."""
+        with self._lock:
+            if not worker.alive and worker.death_done:
+                return
+            worker.alive = False
+            worker.death_done = False
+            worker.error = worker.error if worker.error is not None else exc
+            self._fail["worker_deaths"] += 1
+            _M_WORKER_DEATHS.labels(tier=worker.tier.name).inc()
+            if obs_trace.enabled():
+                obs_trace.instant("serve.worker_death", cat="serve",
+                                  tier=worker.tier.name,
+                                  error=str(worker.error))
+            self.router.mark_dead(worker.tier.name)
+            for req in worker.drain():
+                self._requeue_or_reject(req, now, worker.tier.name)
+            worker.death_done = True
+
+    def _strand(self, pending: Sequence[ServeRequest], now: float) -> None:
+        """No live tier remains: everything still owed is lost."""
+        while self._retries:
+            _, _, req = heapq.heappop(self._retries)
+            self._reject_lost(req, now, "no live tiers remain")
+        for req in pending:
+            self._reject_lost(req, max(now, req.arrival),
+                              "no live tiers remain")
+
+    def _apply_worker_faults(self, worker: TierWorker, now: float) -> bool:
+        """Fire due chaos faults for one worker; returns True when it was
+        killed (the caller must not pump it)."""
+        for f in self._plan.poll("serve.worker", target=worker.tier.name,
+                                 now=now, step=worker.pumps):
+            if f.kind == "kill":
+                self._on_worker_death(worker, now, WorkerKilled(
+                    f"injected kill of tier {worker.tier.name!r}"))
+                return True
+            if f.kind == "stall":
+                worker.next_free = max(worker.next_free, now + f.duration)
+            elif f.kind == "slow":
+                worker.slow_factor = max(float(f.factor), 1.0)
+        return False
 
     # -- drive modes ---------------------------------------------------------
 
@@ -139,14 +329,26 @@ class AsyncServer:
             time_scale: float = 1.0) -> dict:
         """Serve the load to completion; returns the metrics summary.
 
-        Re-runnable: each call starts a fresh clock and metrics collector
-        (worker engines and their jit caches are reused).
+        Re-runnable: each call starts a fresh clock, metrics collector,
+        and fault schedule (worker engines and their jit caches are
+        reused; dead workers are revived; an installed chaos plan is
+        re-armed so repeats are deterministic).
         """
         reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
         steps_before = {n: w.engine.steps for n, w in self.workers.items()}
-        for w in self.workers.values():
-            w.next_free = 0.0
-            w.finished.clear()
+        for n, w in self.workers.items():
+            w.revive()
+            self._watchdog.forget(n)
+        self.router.revive_all()
+        self._plan = self._chaos if self._chaos is not None \
+            else active_plan()
+        if self._plan is not None:
+            self._plan.reset()
+        self._fail = {"worker_deaths": 0, "retries": 0, "migrations": 0,
+                      "lost": 0}
+        self._brown = {"transitions": 0, "max_level": 0}
+        self._retries = []
+        self._rseq = 0
         self.metrics = ServerMetrics()
         t_host = time.perf_counter()
         sim_s = (self._run_realtime(reqs, time_scale) if realtime
@@ -155,6 +357,13 @@ class AsyncServer:
         self.metrics.engine_steps = sum(
             w.engine.steps - steps_before[n]
             for n, w in self.workers.items())
+        fatal = [(n, w.error) for n, w in self.workers.items()
+                 if w.error is not None
+                 and not isinstance(w.error, (InjectedFault, WorkerDied))]
+        if fatal:
+            name, err = fatal[0]
+            raise WorkerDied(f"tier worker {name!r} died unexpectedly: "
+                             f"{err!r}") from err
         if obs_trace.enabled():
             for r in reqs:
                 emit_request_trace(r)
@@ -165,34 +374,83 @@ class AsyncServer:
                           for t in self.tiers}
         stats["per_step_s"] = {n: round(v, 9)
                                for n, v in self.router.per_step.items()}
+        stats["failover"] = dict(self._fail)
+        stats["brownout"] = dict(self._brown)
+        stats["chaos"] = (self._plan.summary() if self._plan is not None
+                          else None)
         return stats
 
     def _run_virtual(self, reqs: List[ServeRequest]) -> float:
         """Discrete-event simulation on the estimated step times."""
         now, i, eps = 0.0, 0, 1e-12
-        workers = list(self.workers.values())
         while True:
             while i < len(reqs) and reqs[i].arrival <= now + eps:
                 self._route_and_submit(reqs[i], now)
                 i += 1
-            busy = [w for w in workers if w.has_work()]
-            if not busy:
-                if i >= len(reqs):
+            while self._retries and self._retries[0][0] <= now + eps:
+                _, _, req = heapq.heappop(self._retries)
+                self._route_and_submit(req, now)
+            live = [w for w in self.workers.values() if w.alive]
+            if not live:
+                self._strand(reqs[i:], now)
+                return now
+            if self._plan is not None:
+                for w in live:
+                    if w.alive:
+                        self._apply_worker_faults(w, now)
+                live = [w for w in self.workers.values() if w.alive]
+                if not live:
+                    self._strand(reqs[i:], now)
                     return now
-                now = reqs[i].arrival     # idle: jump to the next arrival
+                if self._retries and self._retries[0][0] <= now + eps:
+                    continue      # a kill requeued work due immediately
+            busy = [w for w in live if w.has_work()]
+            if not busy:
+                times = []
+                if i < len(reqs):
+                    times.append(reqs[i].arrival)
+                if self._retries:
+                    times.append(self._retries[0][0])
+                if not times:
+                    return now
+                now = max(min(times), now)   # idle: jump to the next event
                 continue
             ready = [w for w in busy if w.next_free <= now + eps]
             if not ready:
                 times = [w.next_free for w in busy]
                 if i < len(reqs):
                     times.append(reqs[i].arrival)
+                if self._retries:
+                    times.append(self._retries[0][0])
+                # a stalled worker's heartbeat deadline is an event too:
+                # that is when the watchdog declares it dead
+                times += [self._watchdog.deadline(w.tier.name)
+                          for w in busy]
+                if self._plan is not None:
+                    times += [f.at for f in self._plan.pending()
+                              if f.at is not None and f.at > now + eps]
                 now = min(times)
+                for w in busy:
+                    if w.alive and w.next_free > now + eps and \
+                            self._watchdog.overdue(w.tier.name, now):
+                        self._on_worker_death(w, now, WorkerDied(
+                            f"tier {w.tier.name!r} missed its heartbeat "
+                            f"deadline"))
                 continue
             for w in ready:               # deterministic: tier order
-                t_end = now + w.step_time
-                w.pump(now, t_end=t_end)
+                if not w.alive:
+                    continue
+                step_t = w.step_time * w.slow_factor
+                t_end = now + step_t
+                try:
+                    w.pump(now, t_end=t_end)
+                except Exception as e:    # noqa: BLE001 — failover seam
+                    self._on_worker_death(w, now, e)
+                    continue
+                w.pumps += 1
                 w.next_free = t_end
-            self._sample()
+                self._watchdog.beat(w.tier.name, t_end, step_t)
+            self._sample(now)
 
     def _run_realtime(self, reqs: List[ServeRequest],
                       time_scale: float) -> float:
@@ -211,8 +469,8 @@ class AsyncServer:
 
         stop = threading.Event()
         threads = [threading.Thread(
-            target=self._worker_main, args=(w, clock, stop), daemon=True)
-            for w in self.workers.values()]
+            target=self._worker_main, args=(w, clock, stop, time_scale),
+            daemon=True) for w in self.workers.values()]
         for t in threads:
             t.start()
         try:
@@ -221,8 +479,35 @@ class AsyncServer:
                 if wait > 0:
                     time.sleep(wait)
                 self._route_and_submit(req, clock())
-            while any(w.has_work() for w in self.workers.values()):
-                self._sample()
+            while True:
+                now = clock()
+                self._release_due_retries(now)
+                live = [w for w in self.workers.values() if w.alive]
+                # a dying worker drains on its own thread; wait for it
+                unsettled = any(not w.alive and not w.death_done
+                                for w in self.workers.values())
+                if not live:
+                    if unsettled:
+                        time.sleep(0.005)
+                        continue
+                    with self._lock:
+                        self._strand([], now)
+                    break
+                busy = any(w.has_work() for w in live)
+                with self._lock:
+                    pending = bool(self._retries)
+                if not busy and not pending and not unsettled:
+                    break
+                for w in live:
+                    if w.has_work() and \
+                            self._watchdog.overdue(w.tier.name, now):
+                        with w.cv:        # poison; its thread drains
+                            w.alive = False
+                            w.error = WorkerDied(
+                                f"tier {w.tier.name!r} missed its "
+                                f"heartbeat deadline")
+                            w.cv.notify_all()
+                self._sample(now)
                 time.sleep(0.01)
         finally:
             stop.set()
@@ -233,17 +518,59 @@ class AsyncServer:
                 t.join()
         return clock()
 
-    def _worker_main(self, worker: TierWorker, clock, stop) -> None:
+    def _release_due_retries(self, now: float) -> None:
+        while True:
+            with self._lock:
+                if not self._retries or self._retries[0][0] > now + 1e-12:
+                    return
+                _, _, req = heapq.heappop(self._retries)
+            self._route_and_submit(req, now)
+
+    def _worker_main(self, worker: TierWorker, clock, stop,
+                     time_scale: float = 1.0) -> None:
         measured = False
         while True:
             with worker.cv:
-                while not worker.engine.has_work(worker.scheduler):
+                while worker.alive and \
+                        not worker.engine.has_work(worker.scheduler):
                     if stop.is_set():
                         return
                     worker.cv.wait(0.05)
+            if not worker.alive:      # poisoned by the watchdog monitor
+                self._on_worker_death(
+                    worker, clock(), worker.error if worker.error
+                    is not None else WorkerDied(
+                        f"tier {worker.tier.name!r} stopped"))
+                return
+            if self._plan is not None:
+                now = clock()
+                killed = False
+                for f in self._plan.poll("serve.worker",
+                                         target=worker.tier.name,
+                                         now=now, step=worker.pumps):
+                    if f.kind == "kill":
+                        self._on_worker_death(worker, now, WorkerKilled(
+                            f"injected kill of tier "
+                            f"{worker.tier.name!r}"))
+                        killed = True
+                        break
+                    if f.kind == "stall":
+                        time.sleep(f.duration * time_scale)
+                    elif f.kind == "slow":
+                        worker.slow_factor = max(float(f.factor), 1.0)
+                if killed:
+                    return
             t_step = clock()
-            worker.pump(t_step)
+            try:
+                worker.pump(t_step)
+            except Exception as e:        # noqa: BLE001 — never die silent
+                self._on_worker_death(worker, clock(), e)
+                return
+            worker.pumps += 1
             dt = max(clock() - t_step, 1e-9)
+            if worker.slow_factor > 1.0:  # emulate a slowed device
+                time.sleep(dt * (worker.slow_factor - 1.0) * time_scale)
+                dt *= worker.slow_factor
             # EWMA of measured step time feeds the router's SLO estimates
             worker.step_time = dt if not measured else \
                 0.8 * worker.step_time + 0.2 * dt
@@ -256,3 +583,4 @@ class AsyncServer:
                     shape=None, source="realtime")
             measured = True
             self.router.per_step[worker.tier.name] = worker.step_time
+            self._watchdog.beat(worker.tier.name, clock(), dt)

@@ -106,6 +106,19 @@ class SlotAllocator:
         self._ever_bound[slot] = True
         return rebind
 
+    def evict(self, slot: int) -> Optional[ServeRequest]:
+        """Unbind ``slot`` without finishing its request (worker-death
+        drain).  The occupant (if any) is returned still mid-lifecycle;
+        its KV/state rows are simply abandoned — positions restart at 0
+        on the next bind, so a stale row is never read."""
+        req, self._reqs[slot] = self._reqs[slot], None
+        return req
+
+    def evict_all(self) -> List[ServeRequest]:
+        """Evict every bound request (slot order — deterministic)."""
+        return [r for r in (self.evict(i) for i in range(self.n_slots))
+                if r is not None]
+
     def advance(self, next_tokens: np.ndarray,
                 now: Optional[float] = None) -> List[ServeRequest]:
         """Consume one engine step's sampled tokens; returns requests that

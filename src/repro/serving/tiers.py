@@ -27,11 +27,19 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core import hwmodel as hw
 from repro.engine import QuantSpec, get_engine
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 from .request import ServeRequest
 
 __all__ = ["Tier", "default_tiers", "decode_step_gemms", "step_cost",
-           "estimate_step_time", "TierRouter", "ROUTER_POLICIES"]
+           "estimate_step_time", "TierRouter", "ROUTER_POLICIES",
+           "BrownoutPolicy"]
+
+_M_BROWNOUT_TRANSITIONS = obs_metrics.get_registry().counter(
+    "repro_serve_brownout_transitions_total")
+_M_BROWNOUT_LEVEL = obs_metrics.get_registry().gauge(
+    "repro_serve_brownout_level")
 
 # nominal pricing bandwidths live on the engine registry now (the single
 # pricing seam shared with GemmEngine.predict_seconds / obs.calibrate);
@@ -165,6 +173,50 @@ def estimate_step_time(cfg, batch: int, spec: Optional[QuantSpec],
 ROUTER_POLICIES = ("quality", "fastest", "round_robin", "slo")
 
 
+@dataclasses.dataclass
+class BrownoutPolicy:
+    """Hysteresis controller for graceful degradation.
+
+    ``update`` maps a scalar *pressure* (the server passes backlog tokens
+    per decode slot across live tiers) to a degradation **level**: 0 =
+    healthy, each further level demotes routed requests one rung down the
+    live quality ladder.  Enter and exit thresholds differ (``enter`` >
+    ``exit``) and transitions are rate-limited by ``dwell`` seconds on
+    the server's clock, so the level cannot flap on a noisy backlog.
+    """
+    enter: float = 48.0      # pressure above which to degrade one level
+    exit: float = 12.0       # pressure below which to recover one level
+    dwell: float = 0.0       # min seconds between transitions
+    max_level: int = 8
+
+    def __post_init__(self):
+        if self.enter <= self.exit:
+            raise ValueError(f"brownout enter threshold ({self.enter}) must "
+                             f"exceed exit threshold ({self.exit})")
+        self.level = 0
+        self._last_change = -float("inf")
+
+    def update(self, pressure: float, now: float, n_levels: int) -> int:
+        """Advance the controller; returns the (possibly new) level.
+        ``n_levels`` caps the useful range (len of the live ladder)."""
+        cap = min(self.max_level, max(n_levels - 1, 0))
+        if self.level > cap:
+            self.level = cap            # a tier died under us
+        if now - self._last_change < self.dwell:
+            return self.level
+        if pressure > self.enter and self.level < cap:
+            self.level += 1
+            self._last_change = now
+        elif pressure < self.exit and self.level > 0:
+            self.level -= 1
+            self._last_change = now
+        return self.level
+
+    def reset(self) -> None:
+        self.level = 0
+        self._last_change = -float("inf")
+
+
 class TierRouter:
     """Assigns each request a tier from per-tier service-time estimates.
 
@@ -172,10 +224,17 @@ class TierRouter:
     token per active slot); the async server builds it from
     ``estimate_step_time`` (scaled into its clock domain) and may refresh
     it with measured step times in realtime mode.
+
+    Failover: ``mark_dead(name)`` removes a tier from routing (the server
+    calls it when a worker dies); ``revive_all`` restores the full set at
+    the start of a fresh run.  Brownout: with a ``BrownoutPolicy``
+    attached, ``note_pressure`` drives the degradation level and ``route``
+    demotes its pick that many rungs down the live quality ladder.
     """
 
     def __init__(self, tiers, per_step: Dict[str, float],
-                 policy: str = "slo"):
+                 policy: str = "slo",
+                 brownout: Optional[BrownoutPolicy] = None):
         if policy not in ROUTER_POLICIES:
             raise ValueError(f"unknown router policy {policy!r}; "
                              f"one of {ROUTER_POLICIES}")
@@ -184,25 +243,98 @@ class TierRouter:
             raise ValueError("router needs at least one tier")
         self.per_step = dict(per_step)
         self.policy = policy
+        self.brownout = brownout
         self._rr = 0
-        self._fastest = min(self.tiers,
+        self._dead: set = set()
+        self._recompute()
+
+    # -- liveness ------------------------------------------------------------
+
+    def _recompute(self) -> None:
+        live = self.live_tiers()
+        if not live:
+            self._fastest = self._quality = None
+            self._ladder = ()
+            return
+        self._fastest = min(live,
                             key=lambda t: (self.per_step[t.name], t.name))
-        self._quality = max(self.tiers,
+        self._quality = max(live,
                             key=lambda t: (t.quality_rank(), t.name))
+        # quality ladder, best first — brownout demotes down this list
+        self._ladder = tuple(sorted(live, key=lambda t: t.quality_rank(),
+                                    reverse=True))
+
+    def live_tiers(self) -> Tuple[Tier, ...]:
+        return tuple(t for t in self.tiers if t.name not in self._dead)
+
+    def mark_dead(self, name: str) -> None:
+        """Remove ``name`` from routing (its worker died)."""
+        if name not in {t.name for t in self.tiers}:
+            raise ValueError(f"unknown tier {name!r}")
+        self._dead.add(name)
+        self._recompute()
+
+    def revive_all(self) -> None:
+        """Restore every tier (fresh run) and reset the brownout level."""
+        self._dead.clear()
+        self._recompute()
+        if self.brownout is not None:
+            self.brownout.reset()
+
+    # -- brownout ------------------------------------------------------------
+
+    @property
+    def brownout_level(self) -> int:
+        return self.brownout.level if self.brownout is not None else 0
+
+    def note_pressure(self, pressure: float, now: float = 0.0) -> int:
+        """Feed the brownout controller one pressure sample; emits a
+        transition metric + trace instant when the level changes."""
+        if self.brownout is None:
+            return 0
+        prev = self.brownout.level
+        level = self.brownout.update(pressure, now, len(self._ladder))
+        if level != prev:
+            direction = "down" if level > prev else "up"
+            _M_BROWNOUT_TRANSITIONS.labels(direction=direction).inc()
+            _M_BROWNOUT_LEVEL.set(float(level))
+            if obs_trace.enabled():
+                obs_trace.instant("serve.brownout", cat="serve",
+                                  level=level, prev=prev,
+                                  pressure=round(pressure, 3))
+        return level
+
+    def _demote(self, tier: Tier) -> Tier:
+        """Demote ``tier`` ``brownout_level`` rungs down the live quality
+        ladder (saturating at the fastest live tier)."""
+        level = self.brownout_level
+        if level == 0 or len(self._ladder) <= 1:
+            return tier
+        try:
+            i = self._ladder.index(tier)
+        except ValueError:              # tier died since it was picked
+            return self._ladder[-1]
+        return self._ladder[min(i + level, len(self._ladder) - 1)]
+
+    # -- routing -------------------------------------------------------------
 
     def route(self, req: ServeRequest, now: float = 0.0,
               loads: Optional[Dict[str, Tuple[int, int]]] = None) -> Tier:
-        """Pick a tier; ``loads`` maps tier name -> (backlog_tokens,
+        """Pick a live tier; ``loads`` maps tier name -> (backlog_tokens,
         n_slots) for the queueing term of the SLO estimate."""
+        if self._fastest is None:
+            raise RuntimeError("no live tiers to route to")
         if self.policy == "quality":
             tier = self._quality
         elif self.policy == "fastest":
             tier = self._fastest
         elif self.policy == "round_robin":
-            tier = self.tiers[self._rr % len(self.tiers)]
+            live = self.live_tiers()     # declaration order, not the ladder
+            tier = live[self._rr % len(live)]
             self._rr += 1
         else:                            # slo
             tier = self._route_slo(req, now, loads or {})
+        tier = self._demote(tier)
         req.tier = tier.name
         return tier
 
@@ -223,8 +355,7 @@ class TierRouter:
                       if tier.spec is not None else 1.0)
             self.per_step[tier.name] *= factor
             applied[tier.name] = factor
-        self._fastest = min(self.tiers,
-                            key=lambda t: (self.per_step[t.name], t.name))
+        self._recompute()
         return applied
 
     def _route_slo(self, req, now, loads) -> Tier:
@@ -232,8 +363,7 @@ class TierRouter:
             return self._quality
         work = len(req.prompt) + req.max_tokens
         best = None
-        for tier in sorted(self.tiers, key=lambda t: t.quality_rank(),
-                           reverse=True):
+        for tier in self._ladder:
             per = self.per_step[tier.name]
             backlog, slots = loads.get(tier.name, (0, tier.batch))
             eta = now + (backlog / max(slots, 1) + work) * per

@@ -22,7 +22,8 @@ import dataclasses
 import statistics
 from typing import Dict, List, Tuple
 
-__all__ = ["HeartbeatMonitor", "ElasticPolicy", "StragglerReport"]
+__all__ = ["HeartbeatMonitor", "WorkerWatchdog", "ElasticPolicy",
+           "StragglerReport"]
 
 
 @dataclasses.dataclass
@@ -62,6 +63,71 @@ class HeartbeatMonitor:
         dead = [w for w in self.workers
                 if self._step - self._last_step[w] >= self.miss_limit]
         return StragglerReport(self._step, stragglers, dead, fleet, medians)
+
+
+class WorkerWatchdog(HeartbeatMonitor):
+    """Serving-aware extension of :class:`HeartbeatMonitor` for tier
+    workers (``repro.serving.AsyncServer``).
+
+    The base monitor's death test counts *missed steps*, which assumes a
+    fleet stepping in lockstep — wrong for serving tiers whose step times
+    legitimately differ (a quality tier is slower by design).  This
+    subclass keeps a per-worker **EWMA step time** and declares a worker
+    DEAD on its own clock: no heartbeat for ``miss_limit`` x its EWMA
+    step time.  Works identically on the virtual simulation clock and the
+    realtime clock — ``now`` is whatever clock the server passes.
+    """
+
+    def __init__(self, workers: List[str], window: int = 16,
+                 threshold: float = 1.5, miss_limit: int = 3,
+                 alpha: float = 0.2):
+        super().__init__(workers, window=window, threshold=threshold,
+                         miss_limit=miss_limit)
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._ewma: Dict[str, float] = {}
+        self._last_beat: Dict[str, float] = {}
+
+    def beat(self, worker: str, now: float, duration_s: float) -> None:
+        """One completed step: ``now`` is the completion time on the
+        server's clock, ``duration_s`` the step's service time."""
+        self.record(worker, self._step + 1, duration_s)
+        prev = self._ewma.get(worker)
+        self._ewma[worker] = duration_s if prev is None else \
+            (1.0 - self.alpha) * prev + self.alpha * duration_s
+        self._last_beat[worker] = now
+
+    def ewma(self, worker: str) -> float:
+        """EWMA step seconds (0.0 before the first beat)."""
+        return self._ewma.get(worker, 0.0)
+
+    def overdue(self, worker: str, now: float) -> bool:
+        """True when ``worker`` has beaten at least once but is now
+        ``miss_limit`` x its EWMA step time past its last heartbeat."""
+        last = self._last_beat.get(worker)
+        ew = self._ewma.get(worker)
+        if last is None or not ew:
+            return False
+        # >= with an absolute slack so a simulator that jumps its clock
+        # exactly to deadline() observes the worker as overdue
+        return (now - last) >= self.miss_limit * ew - 1e-12
+
+    def deadline(self, worker: str) -> float:
+        """The clock value at which ``worker`` becomes overdue (inf
+        before its first beat) — the simulator's next-event candidate."""
+        last = self._last_beat.get(worker)
+        ew = self._ewma.get(worker)
+        if last is None or not ew:
+            return float("inf")
+        return last + self.miss_limit * ew
+
+    def forget(self, worker: str) -> None:
+        """Drop a worker's heartbeat state (revive / fresh run)."""
+        self._ewma.pop(worker, None)
+        self._last_beat.pop(worker, None)
+        self._times[worker].clear()
+        self._last_step[worker] = -1
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,564 @@
+"""repro.chaos: deterministic fault injection, tier failover, brownout
+degradation, and the hardened autotune-cache load path.
+
+The failover property tests drive the async server's virtual-time mode:
+a seeded FaultPlan kills a tier worker mid-run and every admitted request
+must still finish exactly once — migrated requests restarting from their
+prompt on the surviving tier, bit-identical to a standalone engine run
+under that tier's spec (per-token activation quantization makes decode
+rows independent of their batch-mates).
+"""
+import pytest
+
+from repro import chaos
+from repro.chaos import Fault, FaultPlan, InjectedFault
+from repro.configs.registry import get_config
+from repro.engine import QuantSpec
+from repro.obs import metrics as obs_metrics
+from repro.serving import (AsyncServer, BrownoutPolicy, DONE, REJECTED,
+                           ServeEngine, ServeRequest, Tier, TierRouter,
+                           WorkerDied, default_tiers, loadgen,
+                           validate_summary)
+
+BATCH = 2
+MAX_LEN = 16
+SCALE = 5e4      # step_time_scale: visible queueing at smoke scale
+
+
+def _counter(name):
+    """Total over all label children (counters here label by kind/tier)."""
+    snap = obs_metrics.get_registry().counter(name).snapshot()
+    return sum(snap["values"].values())
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_parse_grammar(self):
+        plan = FaultPlan.parse(
+            "kill:fast@s3; slow:quality@0.1x4; stall:fast@0.2+0.5; "
+            "corrupt_cache", seed=7)
+        assert plan.seed == 7 and len(plan) == 4
+        kill, slow, stall, corrupt = plan.faults
+        assert (kill.kind, kill.target, kill.after_steps) == \
+            ("kill", "fast", 3) and kill.at is None
+        assert (slow.kind, slow.at, slow.factor) == ("slow", 0.1, 4.0)
+        assert (stall.at, stall.duration) == (0.2, 0.5)
+        assert corrupt.target is None and corrupt.at is None
+
+    def test_parse_rejects_unknown_kind(self):
+        with pytest.raises(ValueError, match="unknown fault kind"):
+            FaultPlan.parse("explode:fast@s1")
+
+    def test_due_semantics(self):
+        assert Fault("kill").due(None, None)            # fire on first poll
+        timed = Fault("kill", at=2.0)
+        assert not timed.due(1.9, None) and timed.due(2.0, None)
+        stepped = Fault("kill", after_steps=3)
+        assert not stepped.due(None, 2) and stepped.due(None, 3)
+
+    def test_poll_fires_once_and_reset_rearms(self):
+        plan = FaultPlan().add("kill", target="fast", at=1.0)
+        assert plan.poll("serve.worker", target="fast", now=0.5) == []
+        fired = plan.poll("serve.worker", target="fast", now=1.5)
+        assert [f.kind for f in fired] == ["kill"]
+        assert plan.poll("serve.worker", target="fast", now=9.9) == []
+        assert plan.pending() == []
+        plan.reset()
+        assert len(plan.pending()) == 1
+        assert len(plan.poll("serve.worker", target="fast", now=1.5)) == 1
+
+    def test_poll_filters_site_and_target(self):
+        plan = FaultPlan().add("kill", target="fast")
+        assert plan.poll("autotune.load") == []         # wrong site
+        assert plan.poll("serve.worker", target="quality") == []
+        assert len(plan.poll("serve.worker", target="fast")) == 1
+
+    def test_install_uninstall_roundtrip(self):
+        assert not chaos.enabled()           # REPRO_CHAOS unset under CI
+        try:
+            plan = chaos.install("kernel_raise")
+            assert chaos.enabled() and chaos.active_plan() is plan
+            with pytest.raises(InjectedFault):
+                chaos.maybe_raise("kernel.dispatch")
+        finally:
+            chaos.uninstall()
+        assert not chaos.enabled() and chaos.active_plan() is None
+
+    def test_plan_from_env(self, monkeypatch):
+        monkeypatch.setenv(chaos.ENV_CHAOS, "kill:fast@s2")
+        plan = chaos.plan_from_env()
+        assert len(plan) == 1 and plan.faults[0].target == "fast"
+        monkeypatch.setenv(chaos.ENV_CHAOS, "off")
+        assert chaos.plan_from_env() is None
+
+    def test_random_plan_is_seeded(self):
+        a = FaultPlan.random(["x", "y"], n=3, horizon=2.0, seed=4)
+        b = FaultPlan.random(["x", "y"], n=3, horizon=2.0, seed=4)
+        assert a.faults == b.faults and len(a) == 3
+
+
+# ---------------------------------------------------------------------------
+# autotune cache hardening
+# ---------------------------------------------------------------------------
+
+class TestAutotuneCacheHardening:
+    def test_corrupt_file_falls_back_with_warning(self, tmp_path):
+        from repro.kernels.autotune import (AutotuneCache,
+                                            AutotuneCacheMissWarning)
+        path = tmp_path / "cache.json"
+        path.write_text('{"version": 2, "entries": {"x": {"blo')  # torn
+        before = _counter("repro_autotune_cache_load_errors_total")
+        with pytest.warns(AutotuneCacheMissWarning,
+                          match="failed to load"):
+            cache = AutotuneCache.load(str(path), on_error="fallback")
+        assert cache.entries == {}
+        assert cache.lookup(256, 256, 128) is None      # static fallback
+        assert _counter("repro_autotune_cache_load_errors_total") == \
+            before + 1
+
+    def test_corrupt_file_raises_by_default(self, tmp_path):
+        from repro.kernels.autotune import AutotuneCache
+        path = tmp_path / "cache.json"
+        path.write_text("not json at all")
+        with pytest.raises(ValueError):
+            AutotuneCache.load(str(path))
+
+    def test_wrong_version_and_nondict_payload(self, tmp_path):
+        from repro.kernels.autotune import (AutotuneCache,
+                                            AutotuneCacheMissWarning)
+        for payload in ('{"version": 1, "entries": {}}', "[1, 2, 3]"):
+            path = tmp_path / "cache.json"
+            path.write_text(payload)
+            with pytest.warns(AutotuneCacheMissWarning):
+                cache = AutotuneCache.load(str(path), on_error="fallback")
+            assert cache.entries == {}
+
+    def test_atomic_save_roundtrip(self, tmp_path):
+        from repro.kernels.autotune import AutotuneCache
+        path = tmp_path / "cache.json"
+        cache = AutotuneCache(str(path))
+        cache.record(256, 256, 128, None,
+                     {"block_m": 128, "block_k": 256, "block_n": 128,
+                      "dispatch": "dense", "order": "m_major",
+                      "backend": "interpret"})
+        cache.save()
+        assert not list(tmp_path.glob("*.tmp.*"))       # no temp litter
+        loaded = AutotuneCache.load(str(path))
+        assert loaded.lookup(256, 256, 128)["block_k"] == 256
+
+    def test_get_cache_survives_corrupt_env_path(self, tmp_path,
+                                                 monkeypatch):
+        from repro.kernels import autotune
+        path = tmp_path / "cache.json"
+        path.write_text("{torn")
+        monkeypatch.setenv(autotune.ENV_VAR, str(path))
+        autotune.reset_cache()
+        try:
+            with pytest.warns(autotune.AutotuneCacheMissWarning):
+                cache = autotune.get_cache()
+            assert cache.entries == {}
+        finally:
+            monkeypatch.delenv(autotune.ENV_VAR)
+            autotune.reset_cache()
+
+    def test_chaos_corrupt_cache_fault(self, tmp_path):
+        """A corrupt_cache fault torn-truncates the payload; the
+        hardened load degrades instead of raising."""
+        from repro.kernels.autotune import (AutotuneCache,
+                                            AutotuneCacheMissWarning)
+        path = tmp_path / "cache.json"
+        good = AutotuneCache(str(path))
+        good.record(256, 256, 128, None,
+                    {"block_m": 128, "block_k": 128, "block_n": 128,
+                     "dispatch": "dense", "order": "m_major",
+                     "backend": "interpret"})
+        good.save()
+        try:
+            chaos.install("corrupt_cache")
+            with pytest.warns(AutotuneCacheMissWarning):
+                cache = AutotuneCache.load(str(path), on_error="fallback")
+            assert cache.entries == {}
+        finally:
+            chaos.uninstall()
+        # plan fired: a clean re-load sees the intact file (os.replace
+        # kept it whole on disk — only the in-memory read was corrupted)
+        assert AutotuneCache.load(str(path)).entries
+
+
+# ---------------------------------------------------------------------------
+# brownout policy + router degradation
+# ---------------------------------------------------------------------------
+
+def _three_tiers():
+    def spec(p):
+        return QuantSpec(planes=p, impl="planes", act_quant="per_token")
+    return (Tier("fast", spec(2), BATCH), Tier("balanced", spec(3), BATCH),
+            Tier("quality", spec(4), BATCH))
+
+
+def _router(policy="quality", brownout=None, tiers=None):
+    tiers = tiers or _three_tiers()
+    per_step = {"fast": 1.0, "balanced": 2.0, "quality": 4.0}
+    return TierRouter(tiers, {t.name: per_step[t.name] for t in tiers},
+                      policy, brownout=brownout)
+
+
+class TestBrownout:
+    def test_policy_validates_thresholds(self):
+        with pytest.raises(ValueError, match="must exceed"):
+            BrownoutPolicy(enter=10.0, exit=10.0)
+
+    def test_hysteresis(self):
+        p = BrownoutPolicy(enter=40.0, exit=10.0)
+        assert p.update(40.0, 0.0, 3) == 0        # at threshold: hold
+        assert p.update(41.0, 1.0, 3) == 1        # degrade
+        assert p.update(25.0, 2.0, 3) == 1        # between: hold level
+        assert p.update(50.0, 3.0, 3) == 2
+        assert p.update(50.0, 4.0, 3) == 2        # capped at n_levels-1
+        assert p.update(5.0, 5.0, 3) == 1         # recover one rung
+        assert p.update(5.0, 6.0, 3) == 0
+
+    def test_dwell_rate_limits_transitions(self):
+        p = BrownoutPolicy(enter=40.0, exit=10.0, dwell=1.0)
+        assert p.update(99.0, 0.0, 3) == 1
+        assert p.update(99.0, 0.5, 3) == 1        # within dwell: held
+        assert p.update(99.0, 1.5, 3) == 2
+
+    def test_router_demotes_down_live_ladder(self):
+        router = _router("quality", BrownoutPolicy(enter=40.0, exit=10.0))
+        req = ServeRequest(0, [1, 2], 2)
+        assert router.route(req).name == "quality"
+        router.note_pressure(100.0, now=0.0)
+        assert router.brownout_level == 1
+        assert router.route(req).name == "balanced"
+        router.note_pressure(100.0, now=1.0)
+        assert router.route(req).name == "fast"   # saturates at fastest
+        router.note_pressure(0.0, now=2.0)
+        router.note_pressure(0.0, now=3.0)
+        assert router.route(req).name == "quality"
+
+    def test_note_pressure_emits_transition_metrics(self):
+        before = _counter("repro_serve_brownout_transitions_total")
+        router = _router("quality", BrownoutPolicy(enter=40.0, exit=10.0))
+        router.note_pressure(100.0, now=0.0)
+        router.note_pressure(0.0, now=1.0)
+        assert _counter("repro_serve_brownout_transitions_total") == \
+            before + 2
+
+    def test_mark_dead_and_revive(self):
+        router = _router("quality")
+        req = ServeRequest(0, [1, 2], 2)
+        router.mark_dead("quality")
+        assert router.route(req).name == "balanced"
+        assert {t.name for t in router.live_tiers()} == {"fast",
+                                                         "balanced"}
+        router.mark_dead("balanced")
+        router.mark_dead("fast")
+        with pytest.raises(RuntimeError, match="no live tiers"):
+            router.route(req)
+        router.revive_all()
+        assert router.route(req).name == "quality"
+
+    def test_mark_dead_unknown_tier(self):
+        with pytest.raises(ValueError, match="unknown tier"):
+            _router().mark_dead("nope")
+
+    def test_brownout_level_caps_when_ladder_shrinks(self):
+        router = _router("quality", BrownoutPolicy(enter=40.0, exit=10.0))
+        router.note_pressure(100.0, now=0.0)
+        router.note_pressure(100.0, now=1.0)
+        assert router.brownout_level == 2
+        router.mark_dead("fast")
+        router.mark_dead("balanced")
+        router.note_pressure(20.0, now=2.0)       # hold zone, but re-capped
+        assert router.brownout_level == 0          # 1 live tier -> cap 0
+        req = ServeRequest(0, [1, 2], 2)
+        assert router.route(req).name == "quality"
+
+
+# ---------------------------------------------------------------------------
+# failover: virtual-mode property tests
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ctx():
+    """One reused server (jit caches warm across runs) + a baseline
+    single-tier engine on the surviving (quality) tier's spec."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    tiers = default_tiers(2, batch=BATCH)
+    server = AsyncServer(cfg, tiers=tiers, max_len=MAX_LEN, seed=0,
+                         router="slo", step_time_scale=SCALE,
+                         retry_budget=4)
+    quality_spec = tiers[-1].spec
+    baseline = ServeEngine(cfg, BATCH, MAX_LEN, seed=0, quant=quality_spec)
+    return {"cfg": cfg, "server": server, "baseline": baseline}
+
+
+def _load(cfg, n=12, seed=0):
+    return loadgen.synthesize(cfg.vocab_size, n, prompt_len=(3, 6),
+                              max_tokens=(3, 6), pattern="poisson",
+                              rate=50, deadline_slack=(0.1, 1.5),
+                              seed=seed)
+
+
+def _assert_exactly_once(server, reqs):
+    """Every request terminal exactly once; DONE requests appear in
+    exactly one worker's finished list."""
+    assert all(r.terminal for r in reqs)
+    done = {r.rid for r in reqs if r.state == DONE}
+    finished = [r.rid for w in server.workers.values() for r in w.finished]
+    assert sorted(finished) == sorted(done)        # once each, no dupes
+
+
+def _quality_baseline_outs(baseline, cfg, seed=0):
+    fresh = _load(cfg, seed=seed)
+    baseline.run(fresh)
+    return {r.rid: list(r.out) for r in fresh}
+
+
+def test_kill_midrun_completes_all_and_matches_baseline(ctx):
+    server, cfg = ctx["server"], ctx["cfg"]
+    server.chaos = FaultPlan().add("kill", target="fast", after_steps=3)
+    reqs = _load(cfg)
+    stats = validate_summary(server.run(reqs))
+    assert stats["completed"] == 12 and stats["failover"]["lost"] == 0
+    assert stats["failover"]["worker_deaths"] == 1
+    assert stats["failover"]["migrations"] >= 1
+    assert stats["chaos"]["fired"] == 1
+    _assert_exactly_once(server, reqs)
+    migrated = [r for r in reqs if r.migrations > 0]
+    assert migrated and all(r.tier == "quality" for r in migrated)
+    # bit-identity: everything that finished on the surviving tier must
+    # match a standalone engine run under that tier's spec exactly
+    expect = _quality_baseline_outs(ctx["baseline"], cfg)
+    for r in reqs:
+        if r.tier == "quality":
+            assert r.out == expect[r.rid], f"rid {r.rid} diverged"
+
+
+def test_kill_is_deterministic_across_repeats(ctx):
+    server, cfg = ctx["server"], ctx["cfg"]
+    server.chaos = FaultPlan().add("kill", target="fast", after_steps=2)
+    runs = []
+    for _ in range(2):
+        reqs = _load(cfg)
+        stats = server.run(reqs)
+        runs.append(({r.rid: list(r.out) for r in reqs},
+                     {r.rid: (r.tier, r.retries, r.migrations)
+                      for r in reqs},
+                     stats["failover"], stats["sim_s"]))
+    assert runs[0] == runs[1]
+
+
+def test_kill_at_every_step_index_never_loses_requests(ctx):
+    """The headline property: kill the fast worker before its Nth pump,
+    for every N the healthy trace reaches — every admitted request still
+    finishes exactly once, none lost."""
+    server, cfg = ctx["server"], ctx["cfg"]
+    server.chaos = None
+    healthy = _load(cfg)
+    server.run(healthy)
+    total_pumps = server.workers["fast"].pumps
+    assert total_pumps >= 3            # the load must exercise the tier
+    expect = _quality_baseline_outs(ctx["baseline"], cfg)
+    for step in range(total_pumps):
+        server.chaos = FaultPlan().add("kill", target="fast",
+                                       after_steps=step)
+        reqs = _load(cfg)
+        stats = server.run(reqs)
+        assert stats["completed"] == 12, f"kill@s{step}: lost a request"
+        assert stats["failover"]["lost"] == 0
+        assert stats["failover"]["worker_deaths"] == 1
+        _assert_exactly_once(server, reqs)
+        for r in reqs:
+            if r.tier == "quality":
+                assert r.out == expect[r.rid], \
+                    f"kill@s{step}: rid {r.rid} diverged"
+    server.chaos = None
+
+
+def test_retry_budget_exhausted_rejects_with_metrics(ctx):
+    server, cfg = ctx["server"], ctx["cfg"]
+    budget_before = server.retry_budget
+    lost_before = _counter("repro_serve_requests_lost_total")
+    server.retry_budget = 0
+    server.chaos = FaultPlan().add("kill", target="fast", after_steps=3)
+    try:
+        reqs = _load(cfg)
+        stats = validate_summary(server.run(reqs))
+    finally:
+        server.retry_budget = budget_before
+        server.chaos = None
+    lost = [r for r in reqs if r.state == REJECTED]
+    assert lost and stats["failover"]["lost"] == len(lost)
+    assert stats["completed"] + stats["rejected"] == 12
+    assert all("retry budget" in r.error for r in lost)
+    assert all(not r.done and r.out == [] for r in lost)
+    assert _counter("repro_serve_requests_lost_total") == \
+        lost_before + len(lost)
+    _assert_exactly_once(server, reqs)
+
+
+def test_stall_triggers_watchdog_failover(ctx):
+    server, cfg = ctx["server"], ctx["cfg"]
+    server.chaos = FaultPlan().add("stall", target="fast", after_steps=3,
+                                   duration=10.0)
+    try:
+        reqs = _load(cfg)
+        stats = server.run(reqs)
+    finally:
+        server.chaos = None
+    assert stats["completed"] == 12 and stats["failover"]["lost"] == 0
+    assert stats["failover"]["worker_deaths"] == 1
+    assert isinstance(server.workers["fast"].error, WorkerDied)
+    assert "heartbeat" in str(server.workers["fast"].error)
+
+
+def test_all_tiers_dead_strands_cleanly(ctx):
+    """Killing every tier must terminate the run (no hang) with every
+    request terminal — the unservable remainder REJECTED, not dropped."""
+    server, cfg = ctx["server"], ctx["cfg"]
+    server.chaos = (FaultPlan()
+                    .add("kill", target="fast", after_steps=1)
+                    .add("kill", target="quality", after_steps=1))
+    try:
+        reqs = _load(cfg)
+        stats = server.run(reqs)
+    finally:
+        server.chaos = None
+    assert stats["completed"] + stats["rejected"] == 12
+    assert stats["failover"]["worker_deaths"] == 2
+    assert all(r.terminal for r in reqs)
+    assert any("no live tiers" in (r.error or "") or
+               "retry budget" in (r.error or "")
+               for r in reqs if r.state == REJECTED)
+
+
+def test_chaos_off_is_zero_cost(ctx):
+    """REPRO_CHAOS unset + no plan: zero faults fire, failover stays
+    all-zero, and the run still completes normally."""
+    assert not chaos.enabled()
+    injected_before = _counter("repro_chaos_faults_injected_total")
+    server, cfg = ctx["server"], ctx["cfg"]
+    server.chaos = None
+    reqs = _load(cfg)
+    stats = validate_summary(server.run(reqs))
+    assert stats["completed"] == 12
+    assert stats["chaos"] is None
+    assert stats["failover"] == {"worker_deaths": 0, "retries": 0,
+                                 "migrations": 0, "lost": 0}
+    assert _counter("repro_chaos_faults_injected_total") == injected_before
+
+
+def test_slow_fault_shifts_service_time_without_deaths(ctx):
+    # factor 2 stays under the watchdog's miss_limit (3x EWMA) so the
+    # degradation is absorbed, not declared a death
+    server, cfg = ctx["server"], ctx["cfg"]
+    server.chaos = FaultPlan().add("slow", target="fast", after_steps=2,
+                                   factor=2.0)
+    try:
+        reqs = _load(cfg)
+        stats = server.run(reqs)
+    finally:
+        server.chaos = None
+    assert stats["completed"] == 12
+    assert stats["failover"]["worker_deaths"] == 0
+    assert server.workers["fast"].slow_factor == 2.0
+
+
+def test_brownout_engages_under_overload():
+    """A burst load over a tiny slot pool must push the router into
+    brownout (degrading, not rejecting) and recover by the end."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    server = AsyncServer(cfg, tiers=default_tiers(2, batch=BATCH),
+                         max_len=MAX_LEN, seed=0, router="quality",
+                         step_time_scale=SCALE,
+                         brownout=BrownoutPolicy(enter=6.0, exit=2.0))
+    reqs = loadgen.synthesize(cfg.vocab_size, 12, prompt_len=(3, 6),
+                              max_tokens=(3, 6), pattern="burst",
+                              rate=50, seed=0)
+    stats = validate_summary(server.run(reqs))
+    assert stats["completed"] == 12
+    assert stats["brownout"]["transitions"] >= 2   # degraded and recovered
+    assert stats["brownout"]["max_level"] >= 1
+    assert len(stats["tier_requests"]) == 2        # fast took overflow
+    assert server.router.brownout_level == 0       # recovered
+
+
+# ---------------------------------------------------------------------------
+# realtime mode: silent-death regression + failover
+# ---------------------------------------------------------------------------
+
+def _small_load(cfg, n=4):
+    return loadgen.synthesize(cfg.vocab_size, n, prompt_len=(2, 4),
+                              max_tokens=(2, 4), pattern="poisson",
+                              rate=500, seed=5)
+
+
+def test_realtime_worker_exception_raises_worker_died():
+    """Regression: a worker thread dying used to vanish silently (run()
+    then hung or under-reported); now the exception is captured, the
+    worker marked DEAD, and run() re-raises WorkerDied at join."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    server = AsyncServer(cfg, tiers=(Tier("only", None, BATCH),),
+                         max_len=12, router="fastest")
+
+    def boom(now=None):
+        raise RuntimeError("engine bug")
+
+    server.workers["only"].engine.step = boom
+    with pytest.raises(WorkerDied, match="engine bug"):
+        server.run(_small_load(cfg), realtime=True)
+    assert not server.workers["only"].alive
+
+
+def test_virtual_worker_exception_raises_worker_died():
+    cfg = get_config("minicpm-2b", smoke=True)
+    server = AsyncServer(cfg, tiers=(Tier("only", None, BATCH),),
+                         max_len=12, router="fastest")
+
+    def boom(now=None):
+        raise RuntimeError("engine bug")
+
+    server.workers["only"].engine.step = boom
+    with pytest.raises(WorkerDied, match="engine bug"):
+        server.run(_small_load(cfg))
+
+
+def test_realtime_kill_fails_over():
+    cfg = get_config("minicpm-2b", smoke=True)
+    server = AsyncServer(cfg, tiers=default_tiers(2, batch=BATCH),
+                         max_len=12, router="fastest", retry_budget=4,
+                         chaos=FaultPlan().add("kill", target="fast",
+                                               after_steps=1))
+    reqs = _small_load(cfg, n=6)
+    stats = validate_summary(server.run(reqs, realtime=True))
+    assert stats["completed"] == 6
+    assert stats["failover"]["worker_deaths"] == 1
+    assert stats["failover"]["lost"] == 0
+    assert all(r.state == DONE and r.tier == "quality" for r in reqs)
+
+
+# ---------------------------------------------------------------------------
+# parallel / kernel chaos seams
+# ---------------------------------------------------------------------------
+
+def test_kernel_dispatch_chaos_raises_on_eager_call():
+    import numpy as np
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    spec = QuantSpec(planes=2, block_m=128, block_k=128)
+    w = rng.normal(0, 0.02, size=(128, 128)).astype(np.float32)
+    x = rng.normal(0, 1, size=(2, 128)).astype(np.float32)
+    plan = ops.plan_dense_weight(w, spec, use_cache=False)
+    try:
+        chaos.install("kernel_raise")
+        with pytest.raises(InjectedFault, match="kernel.dispatch"):
+            ops.planned_dense_apply(plan, x, spec, 128)
+    finally:
+        chaos.uninstall()
+    out = ops.planned_dense_apply(plan, x, spec, 128)   # disarmed: fine
+    assert out.shape == (2, 128)

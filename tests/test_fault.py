@@ -36,6 +36,54 @@ def test_no_false_positives_uniform_fleet():
     assert rep.stragglers == [] and rep.dead == []
 
 
+def test_watchdog_ewma_and_deadline():
+    dog = fault.WorkerWatchdog(["fast", "quality"], miss_limit=3,
+                               alpha=0.2)
+    assert dog.ewma("fast") == 0.0
+    assert dog.deadline("fast") == float("inf")   # never beaten: no verdict
+    assert not dog.overdue("fast", now=1e9)
+    dog.beat("fast", now=1.0, duration_s=0.5)
+    assert dog.ewma("fast") == pytest.approx(0.5)  # first beat seeds EWMA
+    dog.beat("fast", now=1.5, duration_s=1.0)
+    assert dog.ewma("fast") == pytest.approx(0.8 * 0.5 + 0.2 * 1.0)
+    assert dog.deadline("fast") == pytest.approx(
+        1.5 + 3 * dog.ewma("fast"))
+
+
+def test_watchdog_overdue_at_exact_deadline():
+    """The simulator jumps its clock exactly to deadline(); the verdict
+    must flip there, not one epsilon later (else it livelocks)."""
+    dog = fault.WorkerWatchdog(["w"], miss_limit=3)
+    dog.beat("w", now=0.0, duration_s=0.1)
+    deadline = dog.deadline("w")
+    assert not dog.overdue("w", now=deadline - 1e-6)
+    assert dog.overdue("w", now=deadline)
+
+
+def test_watchdog_per_worker_clocks():
+    """A slow-by-design tier must not be declared dead on a fast tier's
+    cadence — verdicts are per-worker EWMA, not fleet-relative."""
+    dog = fault.WorkerWatchdog(["fast", "quality"], miss_limit=3)
+    dog.beat("fast", now=0.1, duration_s=0.1)
+    dog.beat("quality", now=1.0, duration_s=1.0)
+    assert dog.overdue("fast", now=0.5)       # 4x its own EWMA late
+    assert not dog.overdue("quality", now=0.5)
+
+
+def test_watchdog_forget_revives():
+    dog = fault.WorkerWatchdog(["w"], miss_limit=3)
+    dog.beat("w", now=0.0, duration_s=0.1)
+    assert dog.overdue("w", now=10.0)
+    dog.forget("w")
+    assert not dog.overdue("w", now=10.0)
+    assert dog.ewma("w") == 0.0 and dog.deadline("w") == float("inf")
+
+
+def test_watchdog_rejects_bad_alpha():
+    with pytest.raises(ValueError, match="alpha"):
+        fault.WorkerWatchdog(["w"], alpha=0.0)
+
+
 def test_elastic_mesh_shapes():
     pol = fault.ElasticPolicy(data_per_pod=16, model=16)
     assert pol.mesh_shape(2) == (2, 16, 16)
