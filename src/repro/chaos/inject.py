@@ -41,6 +41,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import random
+import re
 import threading
 from typing import List, Optional, Sequence
 
@@ -115,6 +116,21 @@ class Fault:
             return True
         return (self.after_steps is not None and step is not None
                 and step >= self.after_steps)
+
+
+# one ;-separated fault of the FaultPlan.parse grammar, anchored:
+#   kind[:target][@when[xFACTOR][+DURATION]]
+# The x/+ suffixes live inside the @ clause so targets may contain
+# either character, and a scientific-notation when ("@1e+3") keeps its
+# '+'; numbers are validated by the pattern, not by a blind float().
+_NUM = r"(?:\d+(?:\.\d*)?|\.\d+)(?:[eE][+-]?\d+)?"
+_SPEC_RE = re.compile(
+    r"^(?P<kind>[A-Za-z_]\w*)"
+    r"(?::(?P<target>[^@]+))?"
+    rf"(?:@(?P<when>s\d+|{_NUM})"
+    rf"(?:x(?P<factor>{_NUM}))?"
+    rf"(?:\+(?P<duration>{_NUM}))?"
+    r")?$")
 
 
 class FaultPlan:
@@ -195,11 +211,14 @@ class FaultPlan:
         """Parse a plan spec string (the ``--chaos`` / ``REPRO_CHAOS``
         grammar): ``;``-separated faults, each
 
-            kind[:target][@when][xFACTOR][+DURATION]
+            kind[:target][@when[xFACTOR][+DURATION]]
 
-        where ``when`` is either seconds (``@0.25``) or a pump count
-        (``@s12`` — fire before the target's 13th pump).  Examples:
-        ``kill:fast@s3``, ``slow:quality@0.1x4``, ``stall:fast@0.2+0.5``,
+        where ``when`` is either seconds (``@0.25``, scientific notation
+        allowed) or a pump count (``@s12`` — fire before the target's
+        13th pump).  The ``x``/``+`` suffixes attach to the ``@`` clause,
+        so a target is free to contain those characters
+        (``kill:xlarge``).  Examples: ``kill:fast@s3``,
+        ``slow:quality@0.1x4``, ``stall:fast@0.2+0.5``,
         ``corrupt_cache``, ``kernel_raise:sparse``.
         """
         plan = cls(seed=seed)
@@ -207,24 +226,23 @@ class FaultPlan:
             part = part.strip()
             if not part:
                 continue
-            duration, factor = 0.0, 1.0
-            if "+" in part:
-                part, dur_s = part.rsplit("+", 1)
-                duration = float(dur_s)
-            if "x" in part.rsplit("@", 1)[-1]:   # only the when carries x
-                part, fac_s = part.rsplit("x", 1)
-                factor = float(fac_s)
+            m = _SPEC_RE.match(part)
+            if m is None:
+                raise ValueError(
+                    f"malformed fault spec {part!r}; expected "
+                    f"kind[:target][@when[xFACTOR][+DURATION]]")
             at = after_steps = None
-            if "@" in part:
-                part, when = part.rsplit("@", 1)
+            when = m.group("when")
+            if when is not None:
                 if when.startswith("s"):
                     after_steps = int(when[1:])
                 else:
                     at = float(when)
-            kind, _, target = part.partition(":")
-            plan.add(kind.strip(), target=target.strip() or None, at=at,
-                     after_steps=after_steps, duration=duration,
-                     factor=factor)
+            plan.add(m.group("kind"),
+                     target=(m.group("target") or "").strip() or None,
+                     at=at, after_steps=after_steps,
+                     duration=float(m.group("duration") or 0.0),
+                     factor=float(m.group("factor") or 1.0))
         return plan
 
     @classmethod

@@ -109,7 +109,13 @@ class TierWorker:
         self.finished.clear()
 
     def submit(self, req: ServeRequest, now: float) -> bool:
+        """Enqueue for admission.  False when the scheduler rejected the
+        request (it is then terminal) or when this worker is no longer
+        alive (the request is untouched; the caller must re-route —
+        a dead worker's queue is never pumped or drained again)."""
         with self.cv:
+            if not self.alive:
+                return False
             ok = self.scheduler.submit(req, now)
             self.cv.notify()
         return ok
@@ -220,14 +226,20 @@ class AsyncServer:
     # -- routing -------------------------------------------------------------
 
     def _route_and_submit(self, req: ServeRequest, now: float) -> bool:
-        with self._lock:
-            live = {n: w for n, w in self.workers.items() if w.alive}
-            if not live:
-                self._reject_lost(req, now, "no live tiers remain")
-                return False
-            loads = {n: w.loads() for n, w in live.items()}
-            tier = self.router.route(req, now, loads)
-        return self.workers[tier.name].submit(req, now)
+        while True:
+            with self._lock:
+                live = {n: w for n, w in self.workers.items() if w.alive}
+                if not live:
+                    self._reject_lost(req, now, "no live tiers remain")
+                    return False
+                loads = {n: w.loads() for n, w in live.items()}
+                tier = self.router.route(req, now, loads)
+            if self.workers[tier.name].submit(req, now):
+                return True
+            if req.terminal:
+                return False    # the scheduler rejected it (too long)
+            # the tier died between route and submit (submit refuses on a
+            # dead worker, whose queue would never drain) — route again
 
     def _sample(self, now: float = 0.0) -> None:
         live = {n: w for n, w in self.workers.items() if w.alive}
@@ -429,7 +441,11 @@ class AsyncServer:
                 if self._plan is not None:
                     times += [f.at for f in self._plan.pending()
                               if f.at is not None and f.at > now + eps]
-                now = min(times)
+                # clamp: a watchdog deadline can already be in the past
+                # (a long-idle worker that just received work and a stall
+                # in the same round) — the clock must never run backwards;
+                # an overdue deadline is simply handled at the current now
+                now = max(min(times), now)
                 for w in busy:
                     if w.alive and w.next_free > now + eps and \
                             self._watchdog.overdue(w.tier.name, now):
@@ -501,12 +517,22 @@ class AsyncServer:
                 for w in live:
                     if w.has_work() and \
                             self._watchdog.overdue(w.tier.name, now):
-                        with w.cv:        # poison; its thread drains
-                            w.alive = False
-                            w.error = WorkerDied(
-                                f"tier {w.tier.name!r} missed its "
-                                f"heartbeat deadline")
-                            w.cv.notify_all()
+                        # _lock serializes with _on_worker_death: either
+                        # the worker's thread already declared the death
+                        # (alive is False -> skip) or it has not, in
+                        # which case clearing death_done arms the drain
+                        # guard so the externally-declared death still
+                        # drains when its thread picks the poison up
+                        with self._lock:
+                            if not w.alive:
+                                continue
+                            with w.cv:    # poison; its thread drains
+                                w.alive = False
+                                w.death_done = False
+                                w.error = WorkerDied(
+                                    f"tier {w.tier.name!r} missed its "
+                                    f"heartbeat deadline")
+                                w.cv.notify_all()
                 self._sample(now)
                 time.sleep(0.01)
         finally:

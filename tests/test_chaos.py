@@ -15,9 +15,10 @@ from repro.chaos import Fault, FaultPlan, InjectedFault
 from repro.configs.registry import get_config
 from repro.engine import QuantSpec
 from repro.obs import metrics as obs_metrics
+from repro.chaos import WorkerKilled
 from repro.serving import (AsyncServer, BrownoutPolicy, DONE, REJECTED,
                            ServeEngine, ServeRequest, Tier, TierRouter,
-                           WorkerDied, default_tiers, loadgen,
+                           TierWorker, WorkerDied, default_tiers, loadgen,
                            validate_summary)
 
 BATCH = 2
@@ -51,6 +52,23 @@ class TestFaultPlan:
     def test_parse_rejects_unknown_kind(self):
         with pytest.raises(ValueError, match="unknown fault kind"):
             FaultPlan.parse("explode:fast@s1")
+
+    def test_parse_target_with_x_and_scientific_when(self):
+        """Regression: 'x' in a target name used to be eaten as a factor
+        separator, and the '+' of a scientific-notation time as a
+        duration separator."""
+        plan = FaultPlan.parse("kill:xlarge; kill:proxy@1e+3; "
+                               "slow:max2@2.5e-1x1.5")
+        xlarge, proxy, slow = plan.faults
+        assert (xlarge.target, xlarge.at, xlarge.after_steps) == \
+            ("xlarge", None, None)
+        assert (proxy.target, proxy.at) == ("proxy", 1000.0)
+        assert (slow.target, slow.at, slow.factor) == ("max2", 0.25, 1.5)
+
+    def test_parse_rejects_malformed_spec(self):
+        for bad in ("kill:fast@abc", "kill@", "@0.5", "stall:fast@0.2+"):
+            with pytest.raises(ValueError, match="malformed fault spec"):
+                FaultPlan.parse(bad)
 
     def test_due_semantics(self):
         assert Fault("kill").due(None, None)            # fire on first poll
@@ -417,6 +435,58 @@ def test_stall_triggers_watchdog_failover(ctx):
     assert "heartbeat" in str(server.workers["fast"].error)
 
 
+def test_stale_watchdog_deadline_does_not_rewind_clock():
+    """Regression: a worker idle long past its heartbeat deadline that
+    receives work and a stall in the same round used to pull the virtual
+    clock backwards through the stale deadline, stamping the death (and
+    the victim's retry) before the events that caused them."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    server = AsyncServer(cfg, tiers=default_tiers(2, batch=BATCH),
+                         max_len=MAX_LEN, seed=0, router="fastest",
+                         step_time_scale=SCALE, retry_budget=2)
+    s = server.workers["fast"].step_time
+    gap = 400 * s                    # idle until far past the deadline
+    reqs = [ServeRequest(0, [1, 2, 3], 2, arrival=0.0),
+            ServeRequest(1, [4, 5, 6], 2, arrival=gap)]
+    server.chaos = FaultPlan().add("stall", target="fast", at=gap,
+                                   duration=50 * s)
+    try:
+        stats = server.run(reqs)
+    finally:
+        server.chaos = None
+    assert all(r.state == DONE for r in reqs)
+    assert stats["failover"]["worker_deaths"] == 1
+    assert reqs[1].tier == "quality" and reqs[1].migrations == 1
+    # monotonic clock: the late request finished after it arrived, and
+    # the simulated span covers the idle gap
+    assert reqs[1].finished_at >= gap
+    assert stats["sim_s"] >= gap
+
+
+def test_route_death_race_resubmits_elsewhere(monkeypatch):
+    """Regression: a request routed to a tier that died between route
+    and submit used to sit in the dead worker's queue forever (never
+    pumped, never drained); submit now refuses on a dead worker and the
+    server routes again."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    server = AsyncServer(cfg, tiers=default_tiers(2, batch=BATCH),
+                         max_len=MAX_LEN, router="fastest")
+    fast = server.workers["fast"]
+    orig = TierWorker.submit
+
+    def dying_submit(self, req, now):
+        if self is fast and self.alive:    # the tier dies post-route
+            server._on_worker_death(self, now, WorkerKilled("race"))
+        return orig(self, req, now)
+
+    monkeypatch.setattr(TierWorker, "submit", dying_submit)
+    req = ServeRequest(0, [1, 2, 3], 2)
+    assert server._route_and_submit(req, 0.0)
+    assert fast.scheduler.queue_depth == 0
+    assert server.workers["quality"].scheduler.queue_depth == 1
+    assert req.tier == "quality" and not req.terminal
+
+
 def test_all_tiers_dead_strands_cleanly(ctx):
     """Killing every tier must terminate the run (no hang) with every
     request terminal — the unservable remainder REJECTED, not dropped."""
@@ -540,6 +610,29 @@ def test_realtime_kill_fails_over():
     assert stats["failover"]["worker_deaths"] == 1
     assert stats["failover"]["lost"] == 0
     assert all(r.state == DONE and r.tier == "quality" for r in reqs)
+
+
+def test_realtime_watchdog_poison_drains_dead_tier():
+    """Regression: a watchdog-poisoned realtime worker used to skip its
+    death drain (_on_worker_death's idempotency guard saw
+    death_done=True), stranding the dead tier's queued and in-flight
+    requests non-terminal forever."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    server = AsyncServer(cfg, tiers=default_tiers(2, batch=BATCH),
+                         max_len=12, router="fastest", retry_budget=4)
+    server.run(_small_load(cfg, n=4))   # warm jit: EWMA stays small
+    server.chaos = FaultPlan().add("stall", target="fast",
+                                   after_steps=1, duration=0.75)
+    try:
+        reqs = _small_load(cfg, n=6)
+        stats = validate_summary(server.run(reqs, realtime=True))
+    finally:
+        server.chaos = None
+    assert stats["completed"] == 6 and stats["failover"]["lost"] == 0
+    assert all(r.state == DONE for r in reqs)
+    assert stats["failover"]["worker_deaths"] >= 1
+    assert isinstance(server.workers["fast"].error, WorkerDied)
+    assert "heartbeat" in str(server.workers["fast"].error)
 
 
 # ---------------------------------------------------------------------------
