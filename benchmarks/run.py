@@ -281,15 +281,48 @@ def serve_degraded():
     the same deterministic virtual-time trace healthy and with the fast
     worker killed before its 5th pump (seeded FaultPlan).  Everything but
     wall clock is discrete-event deterministic, so completions, deaths,
-    migrations, per-tier histograms, deadline outcomes and the sim-clock
-    rates are pinned in the BENCH baseline; the ``timing`` subdict is host
-    wall-clock and stripped by ``write_baseline``."""
+    migrations, checkpoint tallies, per-tier histograms, deadline
+    outcomes and the sim-clock rates are pinned in the BENCH baseline;
+    the ``timing`` subdict is host wall-clock and stripped by
+    ``write_baseline``.
+
+    Three lanes: ``healthy`` / ``degraded`` exercise the cross-spec
+    ladder (fast planes=2 -> quality planes=4: demotion keeps committed
+    tokens but must re-prefill), ``restore`` exercises token-preserving
+    failover on same-spec twins, where drained snapshots restore KV
+    bit-exactly — outputs must equal the uninterrupted twin run with
+    zero re-prefills.
+    """
     import time
     from repro.chaos import FaultPlan
     from repro.configs.registry import get_config
-    from repro.serving import (AsyncServer, default_tiers, loadgen,
+    from repro.engine import QuantSpec
+    from repro.serving import (AsyncServer, Tier, default_tiers, loadgen,
                                validate_summary)
     cfg = get_config("minicpm-2b", smoke=True)
+
+    def _trace():
+        return loadgen.synthesize(cfg.vocab_size, 12, prompt_len=(3, 6),
+                                  max_tokens=(3, 6), pattern="poisson",
+                                  rate=50, deadline_slack=(0.1, 1.5), seed=0)
+
+    def _lane(stats):
+        fo = stats["failover"]
+        return {"completed": stats["completed"],
+                "worker_deaths": fo["worker_deaths"],
+                "migrations": fo["migrations"],
+                "retries": fo["retries"],
+                "lost": fo["lost"],
+                "restored": fo["restored"],
+                "reprefilled": fo["reprefilled"],
+                "tokens_recovered": fo["tokens_recovered"],
+                "tokens_reprefilled": fo["tokens_reprefilled"],
+                "engine_steps": stats["engine_steps"],
+                "tier_requests": stats["tier_requests"],
+                "deadlines_met": stats["deadlines"]["met"],
+                "sim_s": stats["sim_s"],
+                "tok_per_s": stats["tok_per_s"]}
+
     server = AsyncServer(cfg, tiers=default_tiers(2, batch=2), max_len=16,
                          router="slo", step_time_scale=5e4, retry_budget=4)
     out = {"timing": {}}
@@ -298,27 +331,38 @@ def serve_degraded():
             ("degraded", FaultPlan().add("kill", target="fast",
                                          after_steps=4))):
         server.chaos = plan
-        reqs = loadgen.synthesize(cfg.vocab_size, 12, prompt_len=(3, 6),
-                                  max_tokens=(3, 6), pattern="poisson",
-                                  rate=50, deadline_slack=(0.1, 1.5), seed=0)
+        reqs = _trace()
         t0 = time.perf_counter()
         stats = validate_summary(server.run(reqs))
         out["timing"][f"{lane}_wall_s"] = round(time.perf_counter() - t0, 3)
-        out[lane] = {"completed": stats["completed"],
-                     "worker_deaths": stats["failover"]["worker_deaths"],
-                     "migrations": stats["failover"]["migrations"],
-                     "retries": stats["failover"]["retries"],
-                     "lost": stats["failover"]["lost"],
-                     "tier_requests": stats["tier_requests"],
-                     "deadlines_met": stats["deadlines"]["met"],
-                     "sim_s": stats["sim_s"],
-                     "tok_per_s": stats["tok_per_s"]}
+        out[lane] = _lane(stats)
     # the degradation story in two numbers: the kill costs sim-time
     # throughput but loses nothing
     out["slowdown"] = round(out["degraded"]["sim_s"]
                             / max(out["healthy"]["sim_s"], 1e-12), 4)
     out["all_recovered"] = (out["degraded"]["completed"] == 12
                             and out["degraded"]["lost"] == 0)
+    # token-preserving failover: same-spec twins, so every drained
+    # snapshot restores bit-exactly (per-token act quant keeps decode
+    # independent of batch composition)
+    spec = QuantSpec(planes=2, impl="pallas_fused", act_quant="per_token")
+    twin = AsyncServer(cfg, tiers=(Tier("twin_a", spec, 2),
+                                   Tier("twin_b", spec, 2)),
+                       max_len=16, router="slo", step_time_scale=5e4,
+                       retry_budget=4)
+    ref = _trace()
+    twin.run(ref)
+    busy = max(twin.workers, key=lambda n: twin.workers[n].pumps)
+    twin.chaos = FaultPlan().add("kill", target=busy, after_steps=10)
+    reqs = _trace()
+    t0 = time.perf_counter()
+    stats = validate_summary(twin.run(reqs))
+    out["timing"]["restore_wall_s"] = round(time.perf_counter() - t0, 3)
+    twin.chaos = None
+    out["restore"] = _lane(stats)
+    want = {r.rid: r.out for r in ref}
+    out["restore"]["outputs_match_uninterrupted"] = all(
+        r.out == want[r.rid] for r in reqs)
     return out
 
 
@@ -687,7 +731,7 @@ BENCHES = [
 #   PYTHONPATH=src python -m benchmarks.run --write-baseline
 #
 # benchmarks/check_baseline.py does the tolerance diff (CI bench job).
-BASELINE_VERSION = 7
+BASELINE_VERSION = 8
 
 # wall-time-independent lanes: everything except the e2e timing lanes and
 # the slow QAT ablation (whose losses depend on the accelerator backend).

@@ -17,7 +17,9 @@ numpy — no kernel launch, no tracing):
 
 plus :func:`crosscheck_cost` (``analysis.cost``), which re-derives the
 ``GemmEngine.cost()`` counters from a symbolic schedule walk so the cost
-model cannot drift from kernel reality.
+model cannot drift from kernel reality, and :func:`verify_snapshot`
+(``analysis.ckpt``), the host-side audit of serialized decode-state
+snapshots (slot-restore invariants + engine compatibility).
 
 Execution-path wiring: ``ops.plan_for`` / ``ops.planned_dense_apply``
 accept ``verify=`` (default: the ``REPRO_VERIFY`` env toggle; the test
@@ -36,6 +38,7 @@ from .dma import check_dma_hazards
 from .vmem import (DEFAULT_VMEM_BUDGET, check_vmem, clamp_suggestion,
                    filter_vmem_configs, vmem_budget, vmem_footprint)
 from .cost import ENGINE_ROUTES, crosscheck_cost, symbolic_counters
+from .ckpt import verify_snapshot
 
 __all__ = [
     "AnalysisError", "CODES", "Diagnostic", "Report",
@@ -45,6 +48,7 @@ __all__ = [
     "DEFAULT_VMEM_BUDGET", "vmem_budget", "vmem_footprint", "check_vmem",
     "clamp_suggestion", "filter_vmem_configs",
     "ENGINE_ROUTES", "symbolic_counters", "crosscheck_cost",
+    "verify_snapshot",
 ]
 
 _SCHED_COLS_CHECKED = False

@@ -58,6 +58,15 @@ CODES = {
     "SHARD_BAD_PARTITION": "per-shard schedules do not exactly partition "
                            "the global occupancy mask (missing, duplicate "
                            "or phantom plane-block visit)",
+    # decode-snapshot audit (repro.analysis.ckpt)
+    "SNAP_BAD_ARTIFACT": "snapshot bytes/file failed to parse (bad magic, "
+                         "version, truncation, or checksum)",
+    "SNAP_BAD_STATE": "snapshot's token/cursor/position bookkeeping breaks "
+                      "the slot-restore invariants",
+    "SNAP_NO_HEADROOM": "snapshot position leaves no room to generate "
+                        "within max_len",
+    "SNAP_SPEC_MISMATCH": "snapshot incompatible with the target engine "
+                          "(restore falls back to re-prefill)",
     # cost-model cross-check (repro.analysis.cost)
     "COST_MODEL_DRIFT": "GemmEngine.cost() counters diverge from the "
                         "schedule's symbolic walk",

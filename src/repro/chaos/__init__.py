@@ -7,13 +7,14 @@ Off by default and zero-cost when off: every hook site guards on
 ``REPRO_CHAOS`` unset fires zero faults and allocates nothing.
 """
 from .inject import (ENV_CHAOS, FAULT_KINDS, FAULT_SITES,  # noqa: F401
-                     Fault, FaultPlan, InjectedFault, ShardLost,
-                     WorkerKilled, active_plan, corrupt_if_due, enabled,
-                     install, maybe_raise, plan_from_env, uninstall)
+                     Fault, FaultPlan, InjectedFault, ServerCrashed,
+                     ShardLost, WorkerKilled, active_plan, corrupt_if_due,
+                     enabled, install, maybe_raise, plan_from_env,
+                     uninstall)
 
 __all__ = [
     "ENV_CHAOS", "FAULT_KINDS", "FAULT_SITES", "Fault", "FaultPlan",
-    "InjectedFault", "ShardLost", "WorkerKilled", "active_plan",
-    "corrupt_if_due", "enabled", "install", "maybe_raise",
+    "InjectedFault", "ServerCrashed", "ShardLost", "WorkerKilled",
+    "active_plan", "corrupt_if_due", "enabled", "install", "maybe_raise",
     "plan_from_env", "uninstall",
 ]

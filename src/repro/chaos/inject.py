@@ -19,6 +19,10 @@ Fault kinds and the sites that poll them:
                                      then declare it DEAD)
     slow           serve.worker      the worker's step time is multiplied
                                      by ``factor`` from the fire point on
+    crash_server   serve.server      the whole AsyncServer run raises
+                                     ServerCrashed (a ``kill -9``: no
+                                     drain/failover; recovery is the
+                                     request journal's ``--resume``)
     drop_shard     parallel.shard    ``sharded_planned_apply`` raises
                                      ShardLost before dispatching
     kernel_raise   kernel.dispatch   ``ops.planned_dense_apply`` raises
@@ -49,9 +53,9 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 __all__ = ["ENV_CHAOS", "InjectedFault", "WorkerKilled", "ShardLost",
-           "Fault", "FaultPlan", "FAULT_KINDS", "FAULT_SITES", "enabled",
-           "install", "uninstall", "active_plan", "plan_from_env",
-           "maybe_raise", "corrupt_if_due"]
+           "ServerCrashed", "Fault", "FaultPlan", "FAULT_KINDS",
+           "FAULT_SITES", "enabled", "install", "uninstall", "active_plan",
+           "plan_from_env", "maybe_raise", "corrupt_if_due"]
 
 ENV_CHAOS = "REPRO_CHAOS"
 
@@ -70,11 +74,18 @@ class ShardLost(InjectedFault):
     """A ``drop_shard`` fault removed a mesh shard from a sharded apply."""
 
 
+class ServerCrashed(InjectedFault):
+    """A ``crash_server`` fault killed the whole serving process mid-run
+    (the ``kill -9`` analogue): no drain, no failover — recovery happens
+    on restart via the write-ahead request journal (``--resume``)."""
+
+
 #: kind -> the site whose hook polls it
 FAULT_SITES = {
     "kill": "serve.worker",
     "stall": "serve.worker",
     "slow": "serve.worker",
+    "crash_server": "serve.server",
     "drop_shard": "parallel.shard",
     "kernel_raise": "kernel.dispatch",
     "corrupt_cache": "autotune.load",

@@ -12,6 +12,17 @@ cost-model-driven policy, served under a synthetic arrival process:
     PYTHONPATH=src python -m repro.launch.serve --arch minicpm-2b \
         --requests 12 --tiers 2 --arrival poisson --rate 50 --router slo
 
+Crash-recoverable serving: ``--journal`` write-ahead-logs admissions and
+committed tokens; after a crash (e.g. the ``crash_server`` chaos fault)
+the same command plus ``--resume`` replays the journal, skips requests
+it proves complete, and re-enters in-flight ones at their last
+committed token:
+
+    PYTHONPATH=src python -m repro.launch.serve --tiers 2 \
+        --journal serve.wal --chaos crash_server@s40; \
+    PYTHONPATH=src python -m repro.launch.serve --tiers 2 \
+        --journal serve.wal --resume --outputs out.json
+
 ``ServeEngine`` and ``Request`` remain importable from this module for
 backward compatibility; the engine itself now lives in
 ``repro.serving.engine`` (see README "Serving").
@@ -27,9 +38,11 @@ import numpy as np
 
 from repro.configs.registry import ARCHS, get_config
 from repro.engine import QuantSpec, engine_names, spec_from_flags
-from repro.serving import (AsyncServer, BrownoutPolicy, Request,
+from repro.serving import (AsyncServer, BrownoutPolicy, DONE,
+                           FAILOVER_MODES, Request, RequestJournal,
                            ROUTER_POLICIES, ServeEngine, Tier,
-                           default_tiers, loadgen, validate_summary)
+                           default_tiers, loadgen, replay_journal,
+                           resume_split, validate_summary)
 from repro.serving.scheduler import POLICIES
 
 __all__ = ["ServeEngine", "Request", "main"]
@@ -111,6 +124,26 @@ def main(argv=None) -> int:
                     help="arm a fault plan for the run (FaultPlan.parse "
                          "grammar, e.g. 'kill:fast@s3'); equivalent to "
                          "setting REPRO_CHAOS but scoped to this server")
+    ap.add_argument("--failover", choices=FAILOVER_MODES,
+                    default="restore",
+                    help="what a drained request keeps when its tier "
+                         "worker dies: 'restore' snapshots decode state "
+                         "and migrates committed tokens (bit-exact on a "
+                         "same-spec tier), 'restart' regenerates from "
+                         "the prompt (the legacy lossy path)")
+    ap.add_argument("--journal", default=None, metavar="PATH",
+                    help="write-ahead request journal (JSONL): "
+                         "admissions + committed tokens, flushed per "
+                         "record, so a crashed run can restart with "
+                         "--resume without losing generated tokens")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay --journal before serving: requests it "
+                         "proves complete are not re-served, in-flight "
+                         "ones re-enter at their last committed token")
+    ap.add_argument("--outputs", default=None, metavar="PATH",
+                    help="write {rid: generated tokens} JSON of every "
+                         "completed request (including journal-replayed "
+                         "completions under --resume)")
     ap.add_argument("--retry-budget", type=int, default=2,
                     help="restarts granted per request after a tier "
                          "worker dies (0 = lose its in-flight requests)")
@@ -141,6 +174,8 @@ def main(argv=None) -> int:
                     help="write the repro.obs metrics-registry snapshot "
                          "JSON to PATH after the run")
     args = ap.parse_args(argv)
+    if args.resume and not args.journal:
+        ap.error("--resume requires --journal PATH")
 
     from repro import obs
     if args.trace:
@@ -166,6 +201,9 @@ def main(argv=None) -> int:
 
     if tiers is None:
         # -- single-engine mode (the historical surface) -------------------
+        if args.journal or args.outputs:
+            print("--journal/--resume/--outputs ignored in single-engine "
+                  "mode (use --tiers/--tier)", file=sys.stderr)
         rng = np.random.default_rng(args.seed)
         reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                         args.prompt_len).tolist(),
@@ -196,6 +234,26 @@ def main(argv=None) -> int:
             except ValueError as e:
                 ap.error(f"--brownout expects ENTER:EXIT pressures "
                          f"({e})")
+        # -- journal / resume (crash recovery) -----------------------------
+        journal, replayed = None, {}
+        if args.resume:
+            rep = replay_journal(args.journal)
+            if rep.seed != args.seed:
+                ap.error(f"--resume: journal was written with seed "
+                         f"{rep.seed}, this run regenerates the load "
+                         f"with seed {args.seed}")
+            reqs, replayed = resume_split(rep, reqs)
+            journal = RequestJournal(args.journal, resume=True,
+                                     seed=args.seed)
+            journal.seed_from(rep)
+            print(f"[journal] replayed {rep.records} record(s) "
+                  f"({rep.truncated} truncated): "
+                  f"{len(replayed)} complete, "
+                  f"{sum(1 for r in reqs if r.out)} in flight, "
+                  f"{len(reqs)} to serve", file=sys.stderr)
+        elif args.journal:
+            journal = RequestJournal(args.journal, seed=args.seed)
+
         server = AsyncServer(cfg, tiers=tiers, max_len=max_len,
                              seed=args.seed, admission=args.policy,
                              router=args.router,
@@ -203,20 +261,46 @@ def main(argv=None) -> int:
                              chaos=args.chaos,
                              retry_budget=args.retry_budget,
                              retry_backoff=args.retry_backoff,
-                             brownout=brownout)
-        stats = server.run(reqs, realtime=args.realtime)
+                             brownout=brownout,
+                             failover=args.failover, journal=journal)
+        from repro.chaos import ServerCrashed
+        try:
+            stats = server.run(reqs, realtime=args.realtime)
+        except ServerCrashed as e:
+            if journal is not None:
+                journal.close()
+                print(f"serve CRASHED: {e} — journal flushed to "
+                      f"{args.journal}; restart with --resume to keep "
+                      f"committed tokens", file=sys.stderr)
+            else:
+                print(f"serve CRASHED: {e} (no --journal: in-flight "
+                      f"work is lost)", file=sys.stderr)
+            return 1
+        finally:
+            if journal is not None:
+                journal.close()
         validate_summary(stats)
+        if args.outputs:
+            outs = dict(replayed)
+            outs.update({r.rid: list(r.out) for r in reqs
+                         if r.state == DONE})
+            with open(args.outputs, "w") as f:
+                json.dump({str(k): v for k, v in sorted(outs.items())},
+                          f, indent=1)
         # requests lost to an exhausted retry budget (or total tier loss)
         # are a failure even though they are accounted as rejected — the
-        # chaos-smoke CI probe with --retry-budget 0 relies on exit 1
-        ok = (stats["completed"] + stats["rejected"] == stats["requests"]
-              and stats["completed"] > 0
+        # chaos-smoke CI probe with --retry-budget 0 relies on exit 1;
+        # journal-replayed completions count toward the resumed total
+        ok = (stats["completed"] + stats["rejected"] + len(replayed)
+              == args.requests
+              and stats["completed"] + len(replayed) > 0
               and stats["failover"]["lost"] == 0)
         if not ok:
             print(f"serve FAILED: {stats['completed']} completed + "
-                  f"{stats['rejected']} rejected of {stats['requests']} "
-                  f"requests ({stats['failover']['lost']} lost to "
-                  f"failover)", file=sys.stderr)
+                  f"{stats['rejected']} rejected + {len(replayed)} "
+                  f"replayed of {args.requests} requests "
+                  f"({stats['failover']['lost']} lost to failover)",
+                  file=sys.stderr)
 
     print(json.dumps(stats, indent=1, default=str) if args.json else stats)
     if args.out:

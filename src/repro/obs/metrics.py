@@ -349,6 +349,30 @@ GLOSSARY = {
         "type": "counter",
         "help": "Requests REJECTED because their retry budget was "
                 "exhausted or no live tier remained."},
+    "repro_serve_snapshots_total": {
+        "type": "counter",
+        "help": "Decode-state snapshots taken from dying workers' slots "
+                "(restore-mode failover drain)."},
+    "repro_serve_restores_total": {
+        "type": "counter",
+        "help": "Migrated requests re-admitted with their tokens (label "
+                "mode=same_spec for a bit-exact slot restore, "
+                "mode=cross_spec for a token-preserving re-prefill)."},
+    "repro_serve_tokens_recovered_total": {
+        "type": "counter",
+        "help": "Committed tokens preserved across a migration or resume "
+                "instead of being regenerated."},
+    "repro_serve_journal_records_total": {
+        "type": "counter",
+        "help": "Write-ahead request-journal records appended "
+                "(label kind=admit|tok|done|rst|drop|death|hdr)."},
+    "repro_serve_journal_replayed_total": {
+        "type": "counter",
+        "help": "Journal records successfully replayed on --resume."},
+    "repro_serve_journal_truncated_total": {
+        "type": "counter",
+        "help": "Trailing journal lines dropped as torn/corrupt by the "
+                "truncating replay."},
     "repro_serve_brownout_transitions_total": {
         "type": "counter",
         "help": "Brownout level changes (label direction=down|up)."},

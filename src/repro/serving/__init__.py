@@ -16,11 +16,18 @@ Layers (each its own module):
     tiers     -- Tier ladder + TierRouter (service-time estimates from
                  GemmEngine.cost / core.hwmodel)
     engine    -- ServeEngine: the jit'd fixed-batch decode engine with a
-                 stepping surface (admit_from / step) and the legacy
-                 blocking run()
+                 stepping surface (admit_from / step), the snapshot/
+                 restore seam (snapshot_slot / restore_slot), and the
+                 legacy blocking run()
+    ckpt      -- DecodeSnapshot: one slot's decode state (KV rows,
+                 recurrent-state row, tokens, cursor, stamps) with
+                 deterministic checksummed serialization
+    journal   -- RequestJournal: write-ahead admission + committed-token
+                 log with corruption-truncating replay (--resume)
     server    -- AsyncServer: one TierWorker per tier, virtual-time
                  (deterministic discrete-event) and realtime (threaded)
-                 drive modes
+                 drive modes; restore-mode failover migrates committed
+                 tokens (bit-exact on a same-QuantSpec tier)
     metrics   -- per-request TTFT/TPOT, queue depth, occupancy, tier
                  histogram; validate_summary pins the dict shape
     loadgen   -- Poisson / burst / uniform synthetic request loads
@@ -36,7 +43,12 @@ from .tiers import (Tier, default_tiers, TierRouter,           # noqa: F401
                     ROUTER_POLICIES, BrownoutPolicy,
                     estimate_step_time, step_cost, decode_step_gemms)
 from .engine import ServeEngine, RESET_STATE_FAMILIES          # noqa: F401
-from .server import AsyncServer, TierWorker, WorkerDied        # noqa: F401
+from .ckpt import (DecodeSnapshot, SnapshotError,              # noqa: F401
+                   SnapshotMismatch, CKPT_VERSION)
+from .journal import (RequestJournal, JournalReplay,           # noqa: F401
+                      replay as replay_journal, resume_split)
+from .server import (AsyncServer, TierWorker, WorkerDied,      # noqa: F401
+                     FAILOVER_MODES)
 from .metrics import (ServerMetrics, validate_summary,         # noqa: F401
                       SUMMARY_KEYS, dist)
 from . import loadgen                                          # noqa: F401
@@ -50,7 +62,9 @@ __all__ = [
     "BrownoutPolicy",
     "estimate_step_time", "step_cost", "decode_step_gemms",
     "ServeEngine", "RESET_STATE_FAMILIES",
-    "AsyncServer", "TierWorker", "WorkerDied",
+    "DecodeSnapshot", "SnapshotError", "SnapshotMismatch", "CKPT_VERSION",
+    "RequestJournal", "JournalReplay", "replay_journal", "resume_split",
+    "AsyncServer", "TierWorker", "WorkerDied", "FAILOVER_MODES",
     "ServerMetrics", "validate_summary", "SUMMARY_KEYS", "dist",
     "loadgen",
 ]

@@ -1,0 +1,178 @@
+"""repro.ckpt — decode-state snapshots for checkpoint/restore failover.
+
+A ``DecodeSnapshot`` captures everything one request's decode slot owns:
+the per-slot rows of the engine's decode-state tree (KV cache rows up to
+the request's position for attention families, the recurrent-state row
+for rwkv/hybrid), the generated-token ids, the teacher-forcing cursor and
+the token fed next step, and the lifecycle stamps that keep TTFT honest
+across a migration.  ``ServeEngine.snapshot_slot`` produces one and
+``ServeEngine.restore_slot`` writes it back into a *compatible* engine
+(same QuantSpec, family, and state-leaf geometry) — the bit-exact
+same-spec failover path.  An incompatible engine falls back to the
+token-preserving re-prefill path instead (see ``ServeEngine.admit_from``).
+
+Serialization is deterministic and self-validating:
+
+    MAGIC (8 bytes) | u32 header length | JSON header | npz payload
+
+The header carries a format version, every scalar field, the payload's
+CRC32 and byte length, and the row shapes/dtypes, so ``from_bytes``
+rejects truncation, corruption, and version skew before any array is
+touched.  ``save`` writes atomically (tmp + ``os.replace``), the same
+idiom as ``AutotuneCache.save`` / ``train.checkpoint``.
+
+Decode here is greedy (argmax): there is no sampling RNG to capture, and
+the header records ``sampling="greedy"`` so a future stochastic decoder
+cannot silently restore from a snapshot that under-specifies its state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import struct
+import zlib
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["DecodeSnapshot", "SnapshotError", "SnapshotMismatch",
+           "CKPT_MAGIC", "CKPT_VERSION"]
+
+CKPT_MAGIC = b"RPCKPT\x00\n"
+CKPT_VERSION = 1
+
+
+class SnapshotError(ValueError):
+    """A snapshot failed to parse or validate (corruption, version skew,
+    inconsistent header fields)."""
+
+
+class SnapshotMismatch(SnapshotError):
+    """A structurally valid snapshot that is incompatible with the engine
+    asked to restore it (different QuantSpec / family / state geometry).
+    The server falls back to token-preserving re-prefill on this."""
+
+
+@dataclasses.dataclass
+class DecodeSnapshot:
+    """One slot's decode state, detached from any engine.
+
+    ``rows`` holds the axis-1 (batch) slice of every decode-state leaf in
+    the engine's ``jax.tree`` flatten order — shape ``[L, 1, ...]`` for
+    per-slot leaves; leaves with ndim < 2 are shared (not per-slot) and
+    are carried verbatim but ignored on restore.  The slot invariant
+    ``pos == len(prompt) + len(out) - 1`` must hold (``repro.analysis.
+    verify_snapshot`` checks it); ``cur`` is the token fed next step,
+    i.e. ``out[-1]`` for a mid-decode slot.
+    """
+    rid: int
+    spec: Optional[str]          # str(QuantSpec) of the source engine
+    family: str                  # model family (dense/moe/rwkv/...)
+    max_len: int
+    pos: int
+    cursor: int
+    cur: int
+    prompt: List[int]
+    out: List[int]
+    rows: List[np.ndarray]
+    arrival: float = 0.0
+    admitted_at: Optional[float] = None
+    first_token_at: Optional[float] = None
+    sampling: str = "greedy"
+    version: int = CKPT_VERSION
+
+    # -- serialization -------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        buf = io.BytesIO()
+        np.savez(buf, **{f"row{i:03d}": r for i, r in enumerate(self.rows)})
+        payload = buf.getvalue()
+        header = {
+            "version": self.version, "rid": self.rid, "spec": self.spec,
+            "family": self.family, "max_len": self.max_len,
+            "pos": self.pos, "cursor": self.cursor, "cur": self.cur,
+            "prompt": list(self.prompt), "out": list(self.out),
+            "arrival": self.arrival, "admitted_at": self.admitted_at,
+            "first_token_at": self.first_token_at,
+            "sampling": self.sampling,
+            "rows": [{"shape": list(r.shape), "dtype": str(r.dtype)}
+                     for r in self.rows],
+            "payload_len": len(payload),
+            "payload_crc32": zlib.crc32(payload),
+        }
+        hdr = json.dumps(header, sort_keys=True).encode("utf-8")
+        return CKPT_MAGIC + struct.pack(">I", len(hdr)) + hdr + payload
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "DecodeSnapshot":
+        if len(data) < len(CKPT_MAGIC) + 4 or \
+                not data.startswith(CKPT_MAGIC):
+            raise SnapshotError("not a decode snapshot (bad magic)")
+        off = len(CKPT_MAGIC)
+        (hlen,) = struct.unpack(">I", data[off:off + 4])
+        off += 4
+        if len(data) < off + hlen:
+            raise SnapshotError("truncated snapshot header")
+        try:
+            header = json.loads(data[off:off + hlen].decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise SnapshotError(f"corrupt snapshot header: {e}") from None
+        if header.get("version") != CKPT_VERSION:
+            raise SnapshotError(
+                f"snapshot format version {header.get('version')!r} != "
+                f"supported {CKPT_VERSION}")
+        payload = data[off + hlen:]
+        if len(payload) != header["payload_len"]:
+            raise SnapshotError(
+                f"truncated snapshot payload: {len(payload)} bytes, "
+                f"header promises {header['payload_len']}")
+        if zlib.crc32(payload) != header["payload_crc32"]:
+            raise SnapshotError("snapshot payload checksum mismatch")
+        with np.load(io.BytesIO(payload)) as z:
+            rows = [z[f"row{i:03d}"] for i in range(len(header["rows"]))]
+        for r, meta in zip(rows, header["rows"]):
+            if list(r.shape) != meta["shape"] or \
+                    str(r.dtype) != meta["dtype"]:
+                raise SnapshotError(
+                    f"snapshot row {meta} does not match its stored "
+                    f"array {r.shape}/{r.dtype}")
+        return cls(rid=header["rid"], spec=header["spec"],
+                   family=header["family"], max_len=header["max_len"],
+                   pos=header["pos"], cursor=header["cursor"],
+                   cur=header["cur"], prompt=header["prompt"],
+                   out=header["out"], rows=rows,
+                   arrival=header["arrival"],
+                   admitted_at=header["admitted_at"],
+                   first_token_at=header["first_token_at"],
+                   sampling=header["sampling"],
+                   version=header["version"])
+
+    def save(self, path: str) -> str:
+        """Atomic write (tmp + ``os.replace``): a reader never observes a
+        partial snapshot, a crashed writer leaves the old file intact."""
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            f.write(self.to_bytes())
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "DecodeSnapshot":
+        with open(path, "rb") as f:
+            return cls.from_bytes(f.read())
+
+    # -- queries -------------------------------------------------------------
+
+    @property
+    def tokens(self) -> int:
+        return len(self.out)
+
+    def describe(self) -> dict:
+        return {"rid": self.rid, "spec": self.spec, "family": self.family,
+                "pos": self.pos, "prompt_len": len(self.prompt),
+                "tokens": len(self.out), "rows": len(self.rows),
+                "bytes": sum(r.nbytes for r in self.rows)}

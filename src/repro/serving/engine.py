@@ -38,6 +38,7 @@ from repro.obs import trace as obs_trace
 from repro.parallel.sharding import unbox
 from repro.train.steps import make_serve_step
 
+from .ckpt import DecodeSnapshot, SnapshotMismatch
 from .metrics import dist, emit_request_trace
 from .request import ServeRequest
 from .scheduler import Scheduler
@@ -45,8 +46,11 @@ from .slots import SlotAllocator
 
 __all__ = ["ServeEngine", "RESET_STATE_FAMILIES"]
 
-_M_STEPS = obs_metrics.get_registry().counter(
-    "repro_serve_engine_steps_total")
+_REG = obs_metrics.get_registry()
+_M_STEPS = _REG.counter("repro_serve_engine_steps_total")
+_M_SNAPSHOTS = _REG.counter("repro_serve_snapshots_total")
+_M_RESTORES = _REG.counter("repro_serve_restores_total")
+_M_TOK_RECOVERED = _REG.counter("repro_serve_tokens_recovered_total")
 
 # Families whose decode state is a recurrence (no position-masked cache):
 # their per-slot state row must be re-initialized when a slot is reused.
@@ -63,6 +67,30 @@ def _reset_state_row(state, state0, slot):
         upd = jax.lax.dynamic_slice_in_dim(s0, slot, 1, axis=1)
         return jax.lax.dynamic_update_slice_in_dim(s, upd, slot, axis=1)
     return jax.tree.map(leaf, state, state0)
+
+
+@jax.jit
+def _slice_state_row(state, slot):
+    """Extract one batch row (axis 1, kept as extent-1) of every decode-
+    state leaf — the device half of ``snapshot_slot``.  Leaves with
+    ndim < 2 are shared (not per-slot) and pass through unchanged."""
+    def leaf(s):
+        if s.ndim < 2:
+            return s
+        return jax.lax.dynamic_slice_in_dim(s, slot, 1, axis=1)
+    return jax.tree.map(leaf, state)
+
+
+@jax.jit
+def _write_state_row(state, row, slot):
+    """Write a snapshot's [L, 1, ...] rows back into one batch row — the
+    device half of ``restore_slot``.  ndim < 2 leaves are left alone."""
+    def leaf(s, r):
+        if s.ndim < 2:
+            return s
+        return jax.lax.dynamic_update_slice_in_dim(
+            s, r.astype(s.dtype), slot, axis=1)
+    return jax.tree.map(leaf, state, row)
 
 
 class ServeEngine:
@@ -136,6 +164,11 @@ class ServeEngine:
         self.step_fn = jax.jit(make_serve_step(cfg))
         self.slots = SlotAllocator(batch, max_len, audit=audit)
         self.steps = 0
+        # checkpoint/restore tallies (the async server folds the per-run
+        # deltas into its failover stats)
+        self.ckpt_stats = {"snapshots": 0, "restored": 0,
+                           "reprefilled": 0, "tokens_recovered": 0,
+                           "tokens_reprefilled": 0}
 
     # -- stepping surface (driven by the async server) -----------------------
 
@@ -149,20 +182,130 @@ class ServeEngine:
 
     def admit_from(self, scheduler: Scheduler, now: float = 0.0) -> int:
         """Fill free slots from the scheduler (per its admission policy);
-        returns the number of requests admitted."""
+        returns the number of requests admitted.
+
+        A request carrying a decode snapshot (restore-mode failover) is
+        restored bit-exactly when the snapshot is compatible with this
+        engine (same QuantSpec / family / state geometry); otherwise —
+        and for any request with committed tokens but no usable
+        snapshot — it re-prefills prompt + committed output, so the
+        tokens survive either way."""
         admitted = 0
         for slot in self.slots.free_slots():
             req = scheduler.pop(now)
             if req is None:
                 break
+            snap, req.snapshot = req.snapshot, None
+            if snap is not None and self.restorable(snap) is None:
+                self.restore_slot(slot, req, snap, now)
+                admitted += 1
+                continue
             rebind = self.slots.bind(slot, req, now)
             if rebind and self._state0 is not None:
                 # recurrent state: restore this row to its initial value so
                 # the new occupant never sees the previous request's state
                 self.state = _reset_state_row(
                     self.state, self._state0, jnp.int32(slot))
+            if req.out:
+                # token-preserving re-prefill (cross-spec demotion or a
+                # snapshot that failed): committed tokens are replayed by
+                # teacher forcing, never regenerated
+                self.ckpt_stats["reprefilled"] += 1
+                self.ckpt_stats["tokens_recovered"] += len(req.out)
+                self.ckpt_stats["tokens_reprefilled"] += len(req.out)
+                _M_RESTORES.labels(mode="cross_spec").inc()
+                _M_TOK_RECOVERED.inc(len(req.out))
+                if obs_trace.enabled():
+                    obs_trace.instant("serve.restore", cat="serve",
+                                      rid=req.rid, mode="cross_spec",
+                                      tokens=len(req.out))
             admitted += 1
         return admitted
+
+    # -- checkpoint/restore seam (repro.ckpt) --------------------------------
+
+    def snapshot_slot(self, slot: int) -> DecodeSnapshot:
+        """Capture everything ``slot`` owns as a ``DecodeSnapshot``: its
+        decode-state rows (KV rows / recurrent-state row), the occupant's
+        committed tokens, teacher-forcing cursor, next-step token, and
+        lifecycle stamps."""
+        req = self.slots.request_at(slot)
+        if req is None:
+            raise ValueError(f"slot {slot} is not bound; nothing to "
+                             f"snapshot")
+        rows = [np.asarray(x) for x in
+                jax.tree.leaves(_slice_state_row(self.state,
+                                                 jnp.int32(slot)))]
+        snap = DecodeSnapshot(
+            rid=req.rid, spec=str(self.spec) if self.spec else None,
+            family=self.api.family, max_len=self.max_len,
+            pos=int(self.slots.pos[slot]),
+            cursor=int(self.slots.cursor[slot]),
+            cur=int(self.slots.cur[slot, 0]),
+            prompt=list(req.prompt), out=list(req.out),
+            rows=rows, arrival=req.arrival, admitted_at=req.admitted_at,
+            first_token_at=req.first_token_at)
+        self.ckpt_stats["snapshots"] += 1
+        _M_SNAPSHOTS.inc()
+        if obs_trace.enabled():
+            obs_trace.instant("serve.snapshot", cat="serve", rid=req.rid,
+                              pos=snap.pos, tokens=len(snap.out))
+        return snap
+
+    def restorable(self, snap: DecodeSnapshot) -> Optional[str]:
+        """None when ``snap`` can be restored bit-exactly into this
+        engine, else the reason it cannot (the caller then takes the
+        re-prefill path)."""
+        spec = str(self.spec) if self.spec else None
+        if snap.spec != spec:
+            return f"spec mismatch: snapshot {snap.spec!r} vs {spec!r}"
+        if snap.family != self.api.family:
+            return (f"family mismatch: snapshot {snap.family!r} vs "
+                    f"{self.api.family!r}")
+        if snap.max_len != self.max_len:
+            return (f"max_len mismatch: snapshot {snap.max_len} vs "
+                    f"{self.max_len}")
+        if snap.sampling != "greedy":
+            return f"unsupported sampling state {snap.sampling!r}"
+        leaves = jax.tree.leaves(self.state)
+        if len(snap.rows) != len(leaves):
+            return (f"state tree mismatch: snapshot has {len(snap.rows)} "
+                    f"rows, engine has {len(leaves)} leaves")
+        for i, (row, leaf) in enumerate(zip(snap.rows, leaves)):
+            want = (leaf.shape if leaf.ndim < 2
+                    else leaf.shape[:1] + (1,) + leaf.shape[2:])
+            if row.shape != want or str(row.dtype) != str(leaf.dtype):
+                return (f"state leaf {i} mismatch: snapshot row "
+                        f"{row.shape}/{row.dtype}, engine expects "
+                        f"{want}/{leaf.dtype}")
+        return None
+
+    def restore_slot(self, slot: int, req: ServeRequest,
+                     snap: DecodeSnapshot, now: float = 0.0) -> None:
+        """Write ``snap`` back into ``slot`` bit-exactly and resume
+        ``req`` mid-decode (no re-prefill steps).  Raises
+        ``SnapshotMismatch`` when the snapshot is incompatible."""
+        why = self.restorable(snap)
+        if why is not None:
+            raise SnapshotMismatch(f"request {req.rid}: {why}")
+        if req.rid != snap.rid:
+            raise SnapshotMismatch(f"snapshot belongs to request "
+                                   f"{snap.rid}, not {req.rid}")
+        self.slots.bind_restored(slot, req, pos=snap.pos,
+                                 cursor=snap.cursor, cur=snap.cur,
+                                 now=now)
+        treedef = jax.tree.structure(self.state)
+        row = jax.tree.unflatten(
+            treedef, [jnp.asarray(r) for r in snap.rows])
+        self.state = _write_state_row(self.state, row, jnp.int32(slot))
+        self.ckpt_stats["restored"] += 1
+        self.ckpt_stats["tokens_recovered"] += len(req.out)
+        _M_RESTORES.labels(mode="same_spec").inc()
+        _M_TOK_RECOVERED.inc(len(req.out))
+        if obs_trace.enabled():
+            obs_trace.instant("serve.restore", cat="serve", rid=req.rid,
+                              mode="same_spec", pos=snap.pos,
+                              tokens=len(req.out))
 
     def step(self, now: float = 0.0) -> List[ServeRequest]:
         """One batched decode step; returns requests finished this step."""

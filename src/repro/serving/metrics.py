@@ -170,7 +170,10 @@ class ServerMetrics:
             # brownout tallies; the defaults keep the summary shape
             # stable for collectors that never see a fault
             "failover": {"worker_deaths": 0, "retries": 0,
-                         "migrations": 0, "lost": 0},
+                         "migrations": 0, "lost": 0, "snapshots": 0,
+                         "restored": 0, "reprefilled": 0,
+                         "tokens_recovered": 0, "tokens_reprefilled": 0,
+                         "mode": "restore"},
             "brownout": {"transitions": 0, "max_level": 0},
         }
 
@@ -206,7 +209,9 @@ def validate_summary(stats: dict) -> dict:
                             "completed")
     fo = stats.get("failover")
     if isinstance(fo, dict):
-        for key in ("worker_deaths", "retries", "migrations", "lost"):
+        for key in ("worker_deaths", "retries", "migrations", "lost",
+                    "snapshots", "restored", "reprefilled",
+                    "tokens_recovered", "tokens_reprefilled"):
             if not isinstance(fo.get(key), int):
                 problems.append(f"failover[{key!r}] must be an int")
     if problems:

@@ -62,6 +62,10 @@ class ServeRequest:
     error: Optional[str] = None
     retries: int = 0       # restart attempts after a worker death
     migrations: int = 0    # times re-routed away from a dead tier
+    # decode-state snapshot attached by a dying worker's drain (restore-
+    # mode failover); consumed — and cleared — at the next admission
+    snapshot: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     def to(self, state: str, now: Optional[float] = None) -> "ServeRequest":
         """Transition to ``state``, stamping the matching timestamp."""
@@ -72,27 +76,43 @@ class ServeRequest:
         if state == PREFILL:
             self.admitted_at = now
         elif state == DECODE:
-            self.first_token_at = now
+            # only the *first* token ever emitted stamps TTFT: a request
+            # migrated after a worker death re-enters DECODE on its new
+            # tier, and re-stamping would report a fake (too-late) TTFT
+            if self.first_token_at is None:
+                self.first_token_at = now
         elif state == DONE:
             self.finished_at = now
             self.done = True
         return self
 
-    def requeue(self, now: Optional[float] = None) -> "ServeRequest":
-        """Return to QUEUED after a worker death: partial output and the
-        admission/first-token stamps are discarded (slot/KV state on the
-        dead worker is gone), so the request restarts from its prompt on
-        whatever tier the router picks next.  ``arrival`` is kept — TTFT
-        and latency keep pricing the lost work.  Terminal requests cannot
+    def requeue(self, now: Optional[float] = None,
+                keep_tokens: bool = False) -> "ServeRequest":
+        """Return to QUEUED after a worker death.
+
+        ``keep_tokens=False`` (the PR 9 restart path): partial output is
+        discarded and the request restarts from its prompt on whatever
+        tier the router picks next.  ``keep_tokens=True`` (checkpoint/
+        restore failover): committed tokens — and any attached decode
+        snapshot — survive; the next engine either restores the slot
+        bit-exactly (same QuantSpec) or teacher-forces prompt + output.
+
+        Either way, ``first_token_at`` is preserved whenever a first
+        token *was* emitted — the TTFT already happened and must not be
+        re-reported against the second tier — and ``arrival`` is kept so
+        latency keeps pricing the lost work.  Terminal requests cannot
         be requeued (finish-exactly-once)."""
         if self.terminal:
             raise ValueError(f"request {self.rid}: cannot requeue in "
                              f"terminal state {self.state}")
+        first = self.first_token_at if self.out else None
         self.state = QUEUED
-        self.out = []
+        if not keep_tokens:
+            self.out = []
+            self.snapshot = None
         self.done = False
         self.admitted_at = None
-        self.first_token_at = None
+        self.first_token_at = first
         self.tier = None
         return self
 

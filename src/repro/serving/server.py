@@ -47,13 +47,15 @@ import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
-from repro.chaos import FaultPlan, InjectedFault, WorkerKilled, active_plan
+from repro.chaos import (FaultPlan, InjectedFault, ServerCrashed,
+                         WorkerKilled, active_plan)
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.obs.calibrate import get_calibrator
 from repro.train.fault import WorkerWatchdog
 
 from .engine import ServeEngine
+from .journal import RequestJournal
 from .metrics import ServerMetrics, emit_request_trace
 from .request import REJECTED, ServeRequest
 from .scheduler import Scheduler
@@ -61,7 +63,15 @@ from .slots import SlotAllocator  # noqa: F401  (re-exported surface
 from .tiers import (BrownoutPolicy, Tier, TierRouter, default_tiers,
                     estimate_step_time)
 
-__all__ = ["TierWorker", "AsyncServer", "WorkerDied"]
+__all__ = ["TierWorker", "AsyncServer", "WorkerDied", "FAILOVER_MODES"]
+
+#: how a dying worker's in-flight requests migrate:
+#:   restore -- drain with decode snapshots; a same-QuantSpec tier
+#:              restores the slot bit-exactly, any other tier keeps the
+#:              committed tokens and re-prefills prompt + output
+#:   restart -- the PR 9 lossy path: partial output is discarded and the
+#:              request regenerates from its prompt
+FAILOVER_MODES = ("restore", "restart")
 
 _REG = obs_metrics.get_registry()
 _M_WORKER_DEATHS = _REG.counter("repro_serve_worker_deaths_total")
@@ -97,6 +107,7 @@ class TierWorker:
         self.pumps = 0              # completed steps this run (chaos @sN)
         self.slow_factor = 1.0      # chaos "slow" fault multiplier
         self.death_done = True      # death drain completed (realtime sync)
+        self.measured = False       # a clean realtime step was timed
 
     def revive(self) -> None:
         """Reset liveness for a fresh ``run`` (engine/jit cache reused)."""
@@ -106,6 +117,7 @@ class TierWorker:
         self.slow_factor = 1.0
         self.next_free = 0.0
         self.death_done = True
+        self.measured = False
         self.finished.clear()
 
     def submit(self, req: ServeRequest, now: float) -> bool:
@@ -142,11 +154,28 @@ class TierWorker:
                 self.finished.extend(finished)
         return finished
 
-    def drain(self) -> List[ServeRequest]:
+    def drain(self, snapshots: bool = False) -> List[ServeRequest]:
         """Evict in-flight requests and drain the queue (death path).
         Order is deterministic: slot order, then submission order —
-        which is also the order they re-enter the router."""
+        which is also the order they re-enter the router.
+
+        ``snapshots=True`` (restore-mode failover): every in-flight
+        request with at least one committed token gets a decode snapshot
+        attached before eviction, so a surviving same-spec tier can
+        restore it bit-exactly.  A request still in PREFILL (zero
+        committed tokens) takes the plain restart path — there is
+        nothing worth snapshotting and an empty snapshot artifact would
+        only be dead weight."""
         with self.cv:
+            if snapshots:
+                for slot, req in self.engine.slots.bound():
+                    if req.out and not req.terminal:
+                        try:
+                            req.snapshot = self.engine.snapshot_slot(slot)
+                        except Exception:   # noqa: BLE001 — re-prefill
+                            # still preserves the tokens; a failed
+                            # snapshot must not escalate the death
+                            req.snapshot = None
             return (self.engine.slots.evict_all()
                     + self.scheduler.drain())
 
@@ -162,8 +191,17 @@ class AsyncServer:
                  retry_backoff: float = 0.0,
                  chaos: Optional[object] = None,
                  brownout: Optional[BrownoutPolicy] = None,
-                 watchdog_miss_limit: int = 3):
+                 watchdog_miss_limit: int = 3,
+                 failover: str = "restore",
+                 journal: Optional[object] = None):
         self.cfg = cfg
+        if failover not in FAILOVER_MODES:
+            raise ValueError(f"failover must be one of {FAILOVER_MODES}, "
+                             f"got {failover!r}")
+        self.failover = failover
+        if isinstance(journal, str):
+            journal = RequestJournal(journal)
+        self._journal: Optional[RequestJournal] = journal
         self.tiers = tuple(tiers if tiers is not None else default_tiers(2))
         names = [t.name for t in self.tiers]
         if len(set(names)) != len(names):
@@ -223,6 +261,17 @@ class AsyncServer:
             plan = FaultPlan.parse(plan)
         self._chaos = plan
 
+    @property
+    def journal(self) -> Optional[RequestJournal]:
+        """The write-ahead request journal (None = not journaling)."""
+        return self._journal
+
+    @journal.setter
+    def journal(self, j) -> None:
+        if isinstance(j, str):
+            j = RequestJournal(j)
+        self._journal = j
+
     # -- routing -------------------------------------------------------------
 
     def _route_and_submit(self, req: ServeRequest, now: float) -> bool:
@@ -235,6 +284,8 @@ class AsyncServer:
                 loads = {n: w.loads() for n, w in live.items()}
                 tier = self.router.route(req, now, loads)
             if self.workers[tier.name].submit(req, now):
+                if self._journal is not None:
+                    self._journal.admit(req, now)
                 return True
             if req.terminal:
                 return False    # the scheduler rejected it (too long)
@@ -261,16 +312,20 @@ class AsyncServer:
     def _reject_lost(self, req: ServeRequest, now: float, why: str) -> None:
         if req.terminal:
             return
-        req.requeue(now)
+        req.requeue(now)     # lost means lost: tokens + snapshot discarded
         req.error = why
         req.to(REJECTED, now)
         self._fail["lost"] += 1
         _M_LOST.inc()
+        if self._journal is not None:
+            self._journal.drop(req, why, now)
 
     def _requeue_or_reject(self, req: ServeRequest, now: float,
                            dead_tier: str) -> None:
-        """One drained victim of a worker death: restart from the prompt
-        on a surviving tier, or reject when the retry budget is spent."""
+        """One drained victim of a worker death: migrate to a surviving
+        tier (keeping committed tokens + snapshot in restore mode,
+        restarting from the prompt in restart mode), or reject when the
+        retry budget is spent."""
         if req.terminal:
             return
         if req.retries >= self.retry_budget:
@@ -278,7 +333,9 @@ class AsyncServer:
                 req, now, f"retry budget ({self.retry_budget}) exhausted "
                           f"after tier {dead_tier!r} died")
             return
-        req.requeue(now)
+        req.requeue(now, keep_tokens=self.failover == "restore")
+        if self._journal is not None and self.failover != "restore":
+            self._journal.retract(req, now)
         req.retries += 1
         req.migrations += 1
         self._fail["retries"] += 1
@@ -307,7 +364,9 @@ class AsyncServer:
                                   tier=worker.tier.name,
                                   error=str(worker.error))
             self.router.mark_dead(worker.tier.name)
-            for req in worker.drain():
+            if self._journal is not None:
+                self._journal.death(worker.tier.name, now)
+            for req in worker.drain(snapshots=self.failover == "restore"):
                 self._requeue_or_reject(req, now, worker.tier.name)
             worker.death_done = True
 
@@ -335,6 +394,62 @@ class AsyncServer:
                 worker.slow_factor = max(float(f.factor), 1.0)
         return False
 
+    def _maybe_crash(self, now: float) -> None:
+        """Poll the whole-process crash fault (site ``serve.server``).
+        ``crash_server`` is the ``kill -9`` analogue: the run raises
+        immediately — no drain, no failover — and recovery happens on
+        the next process via the request journal (``--resume``)."""
+        step = sum(w.pumps for w in self.workers.values())
+        for f in self._plan.poll("serve.server", now=now, step=step):
+            if f.kind == "crash_server":
+                raise ServerCrashed(
+                    f"injected server crash at t={now:.6g} (step {step})"
+                    f"; restart with --resume to replay the journal")
+
+    def _journal_sync(self, worker: TierWorker,
+                      finished: Sequence[ServeRequest],
+                      now: float) -> None:
+        """Write-ahead commit after one pump: append every token the
+        step committed (and completion records) before the clock moves
+        on — a crash after this point can always be replayed up to and
+        including this step's tokens."""
+        with worker.cv:
+            reqs = [r for _, r in worker.engine.slots.bound()]
+        for req in reqs:
+            self._journal.commit(req, now)
+        for req in finished:
+            self._journal.commit(req, now)
+
+    def revive_tier(self, name: str, now: float = 0.0) -> None:
+        """Bring a dead tier back mid-run (or between runs).
+
+        A returning tier must *re-measure*, not trust pre-death state:
+        the watchdog's stale EWMA is forgotten (else the first slow step
+        after a long gap reads as an instant heartbeat miss), and the
+        worker's step-time estimate and the router's cost entry are reset
+        to the init-time cost-model prediction, with ``measured`` cleared
+        so the first clean realtime step re-feeds ``obs.CostCalibrator``
+        exactly like a fresh start."""
+        if name not in self.workers:
+            raise ValueError(f"unknown tier {name!r}")
+        w = self.workers[name]
+        with self._lock:
+            if w.alive:
+                return
+            w.alive = True
+            w.error = None
+            w.slow_factor = 1.0
+            w.next_free = now
+            w.death_done = True
+            w.measured = False
+            w.step_time = self._initial_per_step[name]
+            self._watchdog.forget(name)
+            self.router.per_step[name] = self._initial_per_step[name]
+            self.router.revive(name)
+        if obs_trace.enabled():
+            obs_trace.instant("serve.worker_revive", cat="serve",
+                              tier=name)
+
     # -- drive modes ---------------------------------------------------------
 
     def run(self, requests: Sequence[ServeRequest], realtime: bool = False,
@@ -348,7 +463,15 @@ class AsyncServer:
         """
         reqs = sorted(requests, key=lambda r: (r.arrival, r.rid))
         steps_before = {n: w.engine.steps for n, w in self.workers.items()}
+        ckpt_before = {n: dict(w.engine.ckpt_stats)
+                       for n, w in self.workers.items()}
         for n, w in self.workers.items():
+            if not w.alive:
+                # a tier that died last run must re-measure: reset its
+                # cost state to the init-time prediction (a pre-death
+                # EWMA would mis-route until a clean step lands)
+                w.step_time = self._initial_per_step[n]
+                self.router.per_step[n] = self._initial_per_step[n]
             w.revive()
             self._watchdog.forget(n)
         self.router.revive_all()
@@ -386,7 +509,12 @@ class AsyncServer:
                           for t in self.tiers}
         stats["per_step_s"] = {n: round(v, 9)
                                for n, v in self.router.per_step.items()}
-        stats["failover"] = dict(self._fail)
+        for key in ("snapshots", "restored", "reprefilled",
+                    "tokens_recovered", "tokens_reprefilled"):
+            self._fail[key] = sum(
+                w.engine.ckpt_stats[key] - ckpt_before[n][key]
+                for n, w in self.workers.items())
+        stats["failover"] = dict(self._fail, mode=self.failover)
         stats["brownout"] = dict(self._brown)
         stats["chaos"] = (self._plan.summary() if self._plan is not None
                           else None)
@@ -407,6 +535,7 @@ class AsyncServer:
                 self._strand(reqs[i:], now)
                 return now
             if self._plan is not None:
+                self._maybe_crash(now)
                 for w in live:
                     if w.alive:
                         self._apply_worker_faults(w, now)
@@ -459,12 +588,14 @@ class AsyncServer:
                 step_t = w.step_time * w.slow_factor
                 t_end = now + step_t
                 try:
-                    w.pump(now, t_end=t_end)
+                    fin = w.pump(now, t_end=t_end)
                 except Exception as e:    # noqa: BLE001 — failover seam
                     self._on_worker_death(w, now, e)
                     continue
                 w.pumps += 1
                 w.next_free = t_end
+                if self._journal is not None:
+                    self._journal_sync(w, fin, t_end)
                 self._watchdog.beat(w.tier.name, t_end, step_t)
             self._sample(now)
 
@@ -497,6 +628,8 @@ class AsyncServer:
                 self._route_and_submit(req, clock())
             while True:
                 now = clock()
+                if self._plan is not None:
+                    self._maybe_crash(now)
                 self._release_due_retries(now)
                 live = [w for w in self.workers.values() if w.alive]
                 # a dying worker drains on its own thread; wait for it
@@ -554,7 +687,6 @@ class AsyncServer:
 
     def _worker_main(self, worker: TierWorker, clock, stop,
                      time_scale: float = 1.0) -> None:
-        measured = False
         while True:
             with worker.cv:
                 while worker.alive and \
@@ -588,25 +720,29 @@ class AsyncServer:
                     return
             t_step = clock()
             try:
-                worker.pump(t_step)
+                fin = worker.pump(t_step)
             except Exception as e:        # noqa: BLE001 — never die silent
                 self._on_worker_death(worker, clock(), e)
                 return
             worker.pumps += 1
+            if self._journal is not None:
+                self._journal_sync(worker, fin, clock())
             dt = max(clock() - t_step, 1e-9)
             if worker.slow_factor > 1.0:  # emulate a slowed device
                 time.sleep(dt * (worker.slow_factor - 1.0) * time_scale)
                 dt *= worker.slow_factor
             # EWMA of measured step time feeds the router's SLO estimates
-            worker.step_time = dt if not measured else \
+            worker.step_time = dt if not worker.measured else \
                 0.8 * worker.step_time + 0.2 * dt
-            if not measured and worker.tier.spec is not None:
+            if not worker.measured and worker.tier.spec is not None:
                 # first clean measurement vs the cost-model estimate the
-                # router started from -> calibration drift sample
+                # router started from -> calibration drift sample (a
+                # revived tier re-enters here: revive_tier cleared
+                # ``measured`` so it re-feeds the calibrator too)
                 get_calibrator().record(
                     worker.tier.spec.impl,
                     self._initial_per_step[worker.tier.name], dt,
                     shape=None, source="realtime")
-            measured = True
+            worker.measured = True
             self.router.per_step[worker.tier.name] = worker.step_time
             self._watchdog.beat(worker.tier.name, clock(), dt)

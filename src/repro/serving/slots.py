@@ -46,6 +46,11 @@ class SlotAllocator:
         self.n_slots = n_slots
         self.max_len = max_len
         self._reqs: List[Optional[ServeRequest]] = [None] * n_slots
+        # teacher-forced prefix per binding: the prompt, plus any tokens a
+        # migrated request already committed on a previous tier (the
+        # token-preserving re-prefill path feeds prompt + out and only
+        # appends *new* tokens — no token is ever generated twice)
+        self._forced: List[Optional[List[int]]] = [None] * n_slots
         self.pos = np.zeros(n_slots, np.int32)
         self.cursor = np.zeros(n_slots, np.int32)   # teacher-forcing cursor
         self.cur = np.zeros((n_slots, 1), np.int32)  # token fed this step
@@ -69,13 +74,20 @@ class SlotAllocator:
     def request_at(self, slot: int) -> Optional[ServeRequest]:
         return self._reqs[slot]
 
+    def bound(self) -> List[tuple]:
+        """(slot, request) for every occupied slot, in slot order."""
+        return [(i, r) for i, r in enumerate(self._reqs) if r is not None]
+
     def backlog_tokens(self) -> int:
-        """Tokens still owed by bound requests (prompt remainder + decode)."""
+        """Tokens still owed by bound requests (forced-prefix remainder +
+        decode).  The forced prefix is prompt + committed output, so a
+        re-prefilling migrant's replay steps are priced as real work."""
         total = 0
         for i, r in enumerate(self._reqs):
             if r is None:
                 continue
-            total += max(len(r.prompt) - 1 - int(self.cursor[i]), 0)
+            forced = self._forced[i] or r.prompt
+            total += max(len(forced) - 1 - int(self.cursor[i]), 0)
             total += max(r.max_tokens - len(r.out), 0)
         return total
 
@@ -99,6 +111,9 @@ class SlotAllocator:
         req.to(PREFILL, now)
         rebind = bool(self._ever_bound[slot])
         self._reqs[slot] = req
+        # a fresh request forces just its prompt (out is empty); a
+        # token-preserving migrant re-prefills prompt + committed output
+        self._forced[slot] = list(req.prompt) + list(req.out)
         self.pos[slot] = 0
         self.cursor[slot] = 0
         self.cur[slot, 0] = req.prompt[0]
@@ -106,12 +121,46 @@ class SlotAllocator:
         self._ever_bound[slot] = True
         return rebind
 
+    def bind_restored(self, slot: int, req: ServeRequest, pos: int,
+                      cursor: int, cur: int,
+                      now: Optional[float] = None) -> None:
+        """Bind a snapshot-restored request mid-decode: its KV/state row
+        is being written back bit-exactly by the engine, so the slot
+        resumes at ``pos`` with ``cur`` (the last committed token) fed
+        next step — no re-prefill steps at all.  The caller overwrites
+        the whole state row, so no recurrent-state reset is needed."""
+        if self._reqs[slot] is not None:
+            raise ValueError(f"slot {slot} is occupied by request "
+                             f"{self._reqs[slot].rid}")
+        if not req.out:
+            raise ValueError(f"request {req.rid}: nothing to restore "
+                             f"(no committed tokens — use bind())")
+        if pos != len(req.prompt) + len(req.out) - 1:
+            raise ValueError(
+                f"request {req.rid}: snapshot position {pos} breaks the "
+                f"slot invariant pos == len(prompt) + len(out) - 1 = "
+                f"{len(req.prompt) + len(req.out) - 1}")
+        if pos >= self.max_len - 1:
+            raise ValueError(f"request {req.rid}: snapshot position {pos} "
+                             f"leaves no room in max_len {self.max_len}")
+        req.to(PREFILL, now)
+        self._reqs[slot] = req
+        # forcing is already complete (out is non-empty): the cursor parks
+        # at the end of the prompt and every subsequent token is appended
+        self._forced[slot] = list(req.prompt)
+        self.pos[slot] = pos
+        self.cursor[slot] = cursor
+        self.cur[slot, 0] = cur
+        self.generation[slot] += 1
+        self._ever_bound[slot] = True
+
     def evict(self, slot: int) -> Optional[ServeRequest]:
         """Unbind ``slot`` without finishing its request (worker-death
         drain).  The occupant (if any) is returned still mid-lifecycle;
         its KV/state rows are simply abandoned — positions restart at 0
         on the next bind, so a stale row is never read."""
         req, self._reqs[slot] = self._reqs[slot], None
+        self._forced[slot] = None
         return req
 
     def evict_all(self) -> List[ServeRequest]:
@@ -132,10 +181,12 @@ class SlotAllocator:
                                             req.rid, int(self.pos[i])))
             self.pos[i] += 1
             c = int(self.cursor[i]) + 1
-            if c < len(req.prompt):
-                # still teacher-forcing the prompt
+            forced = self._forced[i]
+            if c < len(forced):
+                # still teacher-forcing (prompt, plus committed output
+                # when re-prefilling a migrated request)
                 self.cursor[i] = c
-                self.cur[i, 0] = req.prompt[c]
+                self.cur[i, 0] = forced[c]
                 continue
             tok = int(next_tokens[i, 0])
             if req.state == PREFILL:
@@ -147,4 +198,5 @@ class SlotAllocator:
                 req.to(DONE, now)
                 finished.append(req)
                 self._reqs[i] = None
+                self._forced[i] = None
         return finished

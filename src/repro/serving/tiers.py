@@ -274,6 +274,15 @@ class TierRouter:
         self._dead.add(name)
         self._recompute()
 
+    def revive(self, name: str) -> None:
+        """Restore one tier to routing (its worker came back — the
+        server resets the cost estimate; see ``AsyncServer.revive_tier``
+        for the re-measurement contract)."""
+        if name not in {t.name for t in self.tiers}:
+            raise ValueError(f"unknown tier {name!r}")
+        self._dead.discard(name)
+        self._recompute()
+
     def revive_all(self) -> None:
         """Restore every tier (fresh run) and reset the brownout level."""
         self._dead.clear()

@@ -1,0 +1,601 @@
+"""repro.ckpt: decode-state checkpoint/restore, token-preserving
+failover, and crash-recoverable serving.
+
+The headline property drives two *identical-QuantSpec* tiers so every
+snapshot taken from a dying worker is same-spec restorable on the
+survivor: for every kill index the healthy trace reaches, final outputs
+must equal the uninterrupted run token-for-token, no token may be
+emitted twice, and the audit trace must show zero re-prefill steps for
+restored requests (their KV rows were reused bit-exactly, not rebuilt).
+Crash recovery is the same property one level up: a ``crash_server``
+fault plus the write-ahead journal must reproduce the uninterrupted
+outputs across a process "restart" (a second server + ``--resume``
+replay in-process).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import verify_snapshot
+from repro.chaos import FaultPlan, ServerCrashed
+from repro.configs.registry import get_config
+from repro.engine import QuantSpec
+from repro.obs import metrics as obs_metrics
+from repro.serving import (AsyncServer, DONE, DecodeSnapshot,
+                           RequestJournal, ServeEngine, ServeRequest,
+                           SnapshotError, SnapshotMismatch, Tier,
+                           loadgen, replay_journal, resume_split,
+                           validate_summary)
+from repro.serving.journal import _pack
+from repro.serving.scheduler import Scheduler
+
+BATCH = 2
+MAX_LEN = 16
+SCALE = 5e4
+# one spec, two tiers: every failover migration is same-spec restorable
+SPEC = QuantSpec(planes=2, impl="pallas_fused", act_quant="per_token")
+
+
+def _load(cfg, n=12, seed=0):
+    return loadgen.synthesize(cfg.vocab_size, n, prompt_len=(3, 6),
+                              max_tokens=(3, 6), pattern="poisson",
+                              rate=50, deadline_slack=(0.1, 1.5),
+                              seed=seed)
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    """One reused twin-tier server (audit on: the property tests replay
+    the slot traces) + a standalone baseline engine on the same spec."""
+    cfg = get_config("minicpm-2b", smoke=True)
+    tiers = (Tier("twin_a", SPEC, BATCH), Tier("twin_b", SPEC, BATCH))
+    server = AsyncServer(cfg, tiers=tiers, max_len=MAX_LEN, seed=0,
+                         router="slo", step_time_scale=SCALE,
+                         retry_budget=4, audit=True)
+    baseline = ServeEngine(cfg, BATCH, MAX_LEN, seed=0, quant=SPEC)
+    return {"cfg": cfg, "server": server, "baseline": baseline}
+
+
+def _baseline_outs(ctx):
+    fresh = _load(ctx["cfg"])
+    ctx["baseline"].run(fresh)
+    return {r.rid: list(r.out) for r in fresh}
+
+
+def _trace_marks(server):
+    return {n: len(w.engine.slots.trace)
+            for n, w in server.workers.items()}
+
+
+def _events_by_rid(server, marks):
+    """This run's audit events, merged across workers: rid -> [pos]."""
+    by_rid = {}
+    for n, w in server.workers.items():
+        for ev in w.engine.slots.trace[marks[n]:]:
+            by_rid.setdefault(ev.rid, []).append(ev.pos)
+    return by_rid
+
+
+# ---------------------------------------------------------------------------
+# snapshot serialization
+# ---------------------------------------------------------------------------
+
+def _mini_snap(**over):
+    base = dict(rid=7, spec=str(SPEC), family="dense", max_len=16,
+                pos=5, cursor=3, cur=42, prompt=[3, 1, 4, 1], out=[9, 42],
+                rows=[np.arange(12, dtype=np.float32).reshape(2, 1, 6),
+                      np.int32(11)])
+    base.update(over)
+    return DecodeSnapshot(**base)
+
+
+class TestSnapshotSerialization:
+    def test_round_trip(self):
+        snap = _mini_snap()
+        back = DecodeSnapshot.from_bytes(snap.to_bytes())
+        assert back.rid == snap.rid and back.spec == snap.spec
+        assert back.prompt == snap.prompt and back.out == snap.out
+        assert (back.pos, back.cursor, back.cur) == (5, 3, 42)
+        assert back.sampling == "greedy"
+        assert len(back.rows) == 2
+        np.testing.assert_array_equal(back.rows[0], snap.rows[0])
+
+    def test_serialization_is_deterministic(self):
+        assert _mini_snap().to_bytes() == _mini_snap().to_bytes()
+
+    def test_save_load_atomic(self, tmp_path):
+        path = str(tmp_path / "slot.ckpt")
+        _mini_snap().save(path)
+        assert DecodeSnapshot.load(path).out == [9, 42]
+        assert not list(tmp_path.glob("*.tmp.*"))   # no tmp leftovers
+
+    def test_bad_magic_rejected(self):
+        with pytest.raises(SnapshotError, match="magic"):
+            DecodeSnapshot.from_bytes(b"NOTACKPT" + b"\x00" * 64)
+
+    def test_truncation_rejected(self):
+        data = _mini_snap().to_bytes()
+        with pytest.raises(SnapshotError, match="truncated"):
+            DecodeSnapshot.from_bytes(data[:-10])
+
+    def test_payload_corruption_rejected(self):
+        data = bytearray(_mini_snap().to_bytes())
+        data[-1] ^= 0xFF
+        with pytest.raises(SnapshotError, match="checksum"):
+            DecodeSnapshot.from_bytes(bytes(data))
+
+    def test_version_skew_rejected(self):
+        snap = _mini_snap(version=999)
+        with pytest.raises(SnapshotError, match="version"):
+            DecodeSnapshot.from_bytes(snap.to_bytes())
+
+
+# ---------------------------------------------------------------------------
+# snapshot audit (repro.analysis.verify_snapshot)
+# ---------------------------------------------------------------------------
+
+class TestVerifySnapshot:
+    def test_clean_snapshot(self):
+        assert verify_snapshot(_mini_snap()).ok
+
+    def test_bytes_and_corruption(self):
+        assert verify_snapshot(_mini_snap().to_bytes()).ok
+        rep = verify_snapshot(_mini_snap().to_bytes()[:-4])
+        assert rep.codes() == {"SNAP_BAD_ARTIFACT"}
+
+    def test_invariant_violations(self):
+        assert "SNAP_BAD_STATE" in \
+            verify_snapshot(_mini_snap(pos=9)).codes()          # pos wrong
+        assert "SNAP_BAD_STATE" in \
+            verify_snapshot(_mini_snap(cur=1)).codes()         # cur != last
+        assert "SNAP_BAD_STATE" in \
+            verify_snapshot(_mini_snap(cursor=0)).codes()       # mid-forcing
+        assert "SNAP_BAD_STATE" in \
+            verify_snapshot(_mini_snap(out=[])).codes()         # nothing there
+        assert "SNAP_BAD_STATE" in \
+            verify_snapshot(_mini_snap(sampling="top_p")).codes()
+
+    def test_no_headroom(self):
+        snap = _mini_snap(max_len=6)
+        assert "SNAP_NO_HEADROOM" in verify_snapshot(snap).codes()
+
+    def test_non_finite_rows(self):
+        rows = [np.full((2, 1, 6), np.nan, np.float32), np.int32(1)]
+        assert "SNAP_BAD_STATE" in \
+            verify_snapshot(_mini_snap(rows=rows)).codes()
+
+
+# ---------------------------------------------------------------------------
+# engine-level snapshot / restore
+# ---------------------------------------------------------------------------
+
+def _step_until(eng, sched, pred, limit=64):
+    done = []
+    while not pred() and limit:
+        eng.admit_from(sched, 0.0)
+        done.extend(eng.step())
+        limit -= 1
+    assert limit, "engine never reached the target state"
+    return done
+
+
+class TestEngineRestore:
+    def test_one_token_snapshot_restores_to_position_one(self, ctx):
+        """Satellite: the tightest restore — a request with exactly one
+        committed token snapshots at pos == len(prompt) and restores to
+        exactly that position on a fresh same-spec engine."""
+        cfg = ctx["cfg"]
+        prompt = [5, 3, 8]
+        eng1 = ServeEngine(cfg, BATCH, MAX_LEN, seed=0, quant=SPEC)
+        sched = Scheduler("fcfs", max_len=MAX_LEN)
+        req = ServeRequest(0, list(prompt), 4)
+        sched.submit(req, 0.0)
+        _step_until(eng1, sched, lambda: len(req.out) == 1)
+        assert len(req.out) == 1
+        snap = eng1.snapshot_slot(0)
+        assert snap.pos == len(prompt)          # P + 1 - 1
+        assert snap.cursor == len(prompt) - 1   # forcing parked
+        assert snap.cur == req.out[-1]
+        assert verify_snapshot(snap, engine=eng1).ok
+
+        # uninterrupted reference
+        ref = ServeRequest(0, list(prompt), 4)
+        eng_ref = ServeEngine(cfg, BATCH, MAX_LEN, seed=0, quant=SPEC)
+        eng_ref.run([ref])
+
+        eng2 = ServeEngine(cfg, BATCH, MAX_LEN, seed=0, quant=SPEC)
+        req2 = ServeRequest(0, list(prompt), 4, out=list(req.out))
+        req2.retries = 1
+        eng2.restore_slot(0, req2, snap)
+        assert int(eng2.slots.pos[0]) == len(prompt)
+        steps_before = eng2.steps
+        while not req2.done:
+            eng2.step()
+        assert req2.out == ref.out
+        # restore is step-exact: only the remaining tokens cost steps
+        assert eng2.steps - steps_before == len(ref.out) - 1
+        assert eng2.ckpt_stats["restored"] == 1
+        assert eng2.ckpt_stats["reprefilled"] == 0
+
+    def test_restore_rejects_mismatched_engine(self, ctx):
+        cfg = ctx["cfg"]
+        eng1 = ServeEngine(cfg, BATCH, MAX_LEN, seed=0, quant=SPEC)
+        sched = Scheduler("fcfs", max_len=MAX_LEN)
+        req = ServeRequest(0, [2, 7, 1], 4)
+        sched.submit(req, 0.0)
+        _step_until(eng1, sched, lambda: len(req.out) >= 1)
+        snap = eng1.snapshot_slot(0)
+        other = ServeEngine(cfg, BATCH, MAX_LEN, seed=0,
+                            quant=QuantSpec(planes=4, impl="pallas_fused",
+                                            act_quant="per_token"))
+        assert other.restorable(snap) is not None
+        with pytest.raises(SnapshotMismatch):
+            other.restore_slot(0, ServeRequest(0, [2, 7, 1], 4,
+                                               out=list(req.out)), snap)
+        rep = verify_snapshot(snap, engine=other)
+        assert rep.ok    # mismatch is a warning: re-prefill still works
+        assert "SNAP_SPEC_MISMATCH" in rep.codes("warning")
+
+    def test_snapshot_of_unbound_slot_raises(self, ctx):
+        eng = ServeEngine(ctx["cfg"], BATCH, MAX_LEN, seed=0, quant=SPEC)
+        with pytest.raises(ValueError, match="not bound"):
+            eng.snapshot_slot(0)
+
+
+# ---------------------------------------------------------------------------
+# token-preserving failover (the tentpole property)
+# ---------------------------------------------------------------------------
+
+class TestRestoreFailover:
+    def test_kill_at_every_step_index_restores_token_exactly(self, ctx):
+        """Kill the busy twin before its Nth pump for every N the healthy
+        trace reaches: outputs must match the uninterrupted run exactly,
+        with zero re-prefill steps (same-spec restore reuses the KV rows
+        bit-exactly — the audit trace proves no generated-token position
+        is ever stepped twice)."""
+        server, cfg = ctx["server"], ctx["cfg"]
+        server.chaos = None
+        healthy = _load(cfg)
+        server.run(healthy)
+        busy = max(server.workers, key=lambda n: server.workers[n].pumps)
+        total_pumps = server.workers[busy].pumps
+        assert total_pumps >= 3
+        expect = _baseline_outs(ctx)
+        assert {r.rid: r.out for r in healthy} == expect
+        saw_restore = False
+        for step in range(total_pumps):
+            server.chaos = FaultPlan().add("kill", target=busy,
+                                           after_steps=step)
+            reqs = _load(cfg)
+            marks = _trace_marks(server)
+            stats = validate_summary(server.run(reqs))
+            assert stats["completed"] == 12, f"kill@s{step}: lost one"
+            assert stats["failover"]["lost"] == 0
+            assert stats["failover"]["worker_deaths"] == 1
+            fo = stats["failover"]
+            # twin tiers: every snapshot must restore same-spec — the
+            # re-prefill fallback would be a silent perf regression
+            assert fo["restored"] == fo["snapshots"], f"kill@s{step}"
+            assert fo["reprefilled"] == 0 and \
+                fo["tokens_reprefilled"] == 0, f"kill@s{step}"
+            saw_restore = saw_restore or fo["restored"] > 0
+            for r in reqs:
+                assert r.out == expect[r.rid], \
+                    f"kill@s{step}: rid {r.rid} diverged"
+                # no token emitted twice / no re-prefill of committed
+                # tokens: each generating position stepped exactly once
+                gen = [p for p in _events_by_rid(server, marks)[r.rid]
+                       if p >= len(r.prompt) - 1]
+                want = list(range(len(r.prompt) - 1,
+                                  len(r.prompt) + len(r.out) - 1))
+                assert sorted(gen) == want, \
+                    f"kill@s{step}: rid {r.rid} re-stepped a token"
+                if r.migrations and r.out:
+                    assert r.first_token_at is not None   # TTFT survives
+        assert saw_restore, "sweep never exercised a same-spec restore"
+        server.chaos = None
+
+    def test_kill_during_prefill_takes_restart_path(self, ctx):
+        """Kill before the busy tier's first pump: every victim is still
+        in PREFILL with zero committed tokens — nothing to snapshot, no
+        empty snapshot artifacts, and outputs still match."""
+        server, cfg = ctx["server"], ctx["cfg"]
+        healthy = _load(cfg)
+        server.chaos = None
+        server.run(healthy)
+        busy = max(server.workers, key=lambda n: server.workers[n].pumps)
+        server.chaos = FaultPlan().add("kill", target=busy, after_steps=0)
+        reqs = _load(cfg)
+        try:
+            stats = validate_summary(server.run(reqs))
+        finally:
+            server.chaos = None
+        fo = stats["failover"]
+        assert stats["completed"] == 12 and fo["lost"] == 0
+        assert fo["worker_deaths"] == 1 and fo["migrations"] >= 1
+        assert fo["snapshots"] == 0 and fo["restored"] == 0
+        assert fo["tokens_recovered"] == 0
+        assert all(r.snapshot is None for r in reqs)
+        expect = _baseline_outs(ctx)
+        for r in reqs:
+            assert r.out == expect[r.rid]
+
+    def test_migrated_ttft_preserved_in_summary(self, ctx):
+        """Satellite: a migrated request's TTFT is its *original* first
+        token, not a re-stamp on the new tier — the summary must price
+        migration as decode disruption, not as a second prefill.
+
+        Clock subtlety: in virtual mode the dying tier's final pump
+        commits tokens stamped at its t_end, while the drain happens at
+        the loop's earlier `now` — so a *preserved* stamp can be
+        numerically later than the new admitted_at.  The airtight check
+        is therefore equality against the stamp captured at drain time,
+        not an inequality against admission.
+        """
+        server, cfg = ctx["server"], ctx["cfg"]
+        healthy = _load(cfg)
+        server.chaos = None
+        server.run(healthy)
+        busy = max(server.workers, key=lambda n: server.workers[n].pumps)
+        pumps = server.workers[busy].pumps
+        drained = {}                    # rid -> first_token_at at drain
+        orig = server._requeue_or_reject
+
+        def spy(req, now, dead):
+            if req.out and req.first_token_at is not None:
+                drained[req.rid] = req.first_token_at
+            return orig(req, now, dead)
+
+        stats, reqs = None, []
+        try:
+            server._requeue_or_reject = spy
+            for step in range(max(pumps // 2, 1), pumps):
+                server.chaos = FaultPlan().add("kill", target=busy,
+                                               after_steps=step)
+                drained.clear()
+                reqs = _load(cfg)
+                stats = validate_summary(server.run(reqs))
+                if stats["failover"]["restored"] > 0:
+                    break
+        finally:
+            server.chaos = None
+            server._requeue_or_reject = orig
+        assert stats is not None and stats["failover"]["restored"] > 0, \
+            "no kill index migrated a mid-decode request"
+        assert drained, "no mid-decode request was drained with tokens"
+        by_rid = {r.rid: r for r in reqs}
+        for rid, stamp in drained.items():
+            r = by_rid[rid]
+            assert r.state == DONE and r.migrations > 0
+            # the drain-time stamp survived requeue + restore verbatim
+            assert r.first_token_at == stamp
+            assert r.ttft is not None and r.ttft == stamp - r.arrival
+        assert stats["ttft"]["max"] <= stats["latency"]["max"]
+
+
+# ---------------------------------------------------------------------------
+# request journal + crash recovery
+# ---------------------------------------------------------------------------
+
+def _mk_req(rid, out=(), done=False):
+    r = ServeRequest(rid, [1, 2, 3], 6, out=list(out))
+    r.done = done
+    return r
+
+
+class TestJournal:
+    def test_admit_is_idempotent(self, tmp_path):
+        path = str(tmp_path / "j.jsonl")
+        with RequestJournal(path, seed=3) as j:
+            r = _mk_req(0)
+            j.admit(r, 0.1)
+            j.admit(r, 0.2)
+        rep = replay_journal(path)
+        assert rep.seed == 3 and rep.records == 2   # hdr + one admit
+        assert set(rep.admitted) == {0}
+
+    def test_commit_appends_deltas_and_done(self, tmp_path):
+        path = str(tmp_path / "j.jsonl")
+        with RequestJournal(path) as j:
+            r = _mk_req(1, out=[10])
+            j.admit(r, 0.0)
+            j.commit(r, 0.1)
+            r.out += [11, 12]
+            j.commit(r, 0.2)
+            r.done = True
+            j.commit(r, 0.3)
+        rep = replay_journal(path)
+        assert rep.completed == {1: [10, 11, 12]}
+        assert rep.committed == {} and rep.truncated == 0
+        assert rep.first_token_t[1] == 0.1
+
+    def test_retract_voids_tokens(self, tmp_path):
+        path = str(tmp_path / "j.jsonl")
+        with RequestJournal(path) as j:
+            r = _mk_req(2, out=[5, 6])
+            j.admit(r, 0.0)
+            j.commit(r, 0.1)
+            j.retract(r, 0.2)    # restart-mode requeue
+        rep = replay_journal(path)
+        assert rep.committed == {} and 2 in rep.admitted
+
+    def test_replay_truncates_at_corruption(self, tmp_path):
+        path = str(tmp_path / "j.jsonl")
+        with RequestJournal(path) as j:
+            r = _mk_req(3, out=[7])
+            j.admit(r, 0.0)
+            j.commit(r, 0.1)
+        with open(path, "a") as f:
+            f.write('{"c": 1, "r": {"k": "tok", "rid": 3, ')  # torn write
+            f.write("\n")
+            # a checksum-valid record *after* the tear is untrusted too
+            f.write(_pack({"k": "tok", "rid": 3, "toks": [999],
+                           "t": 0.2}) + "\n")
+        rep = replay_journal(path)
+        assert rep.committed == {3: [7]}    # 999 never replayed
+        assert rep.truncated == 2
+
+    def test_version_mismatch_raises(self, tmp_path):
+        path = str(tmp_path / "j.jsonl")
+        with open(path, "w") as f:
+            f.write(_pack({"k": "hdr", "version": 99, "seed": 0}) + "\n")
+        with pytest.raises(ValueError, match="version"):
+            replay_journal(path)
+
+    def test_resume_split(self, tmp_path):
+        path = str(tmp_path / "j.jsonl")
+        with RequestJournal(path) as j:
+            done = _mk_req(0, out=[4, 5], done=True)
+            j.admit(done, 0.0)
+            j.commit(done, 0.1)
+            mid = _mk_req(1, out=[8])
+            j.admit(mid, 0.0)
+            j.commit(mid, 0.15)
+        rep = replay_journal(path)
+        fresh = [_mk_req(0), _mk_req(1), _mk_req(2)]
+        to_serve, outputs = resume_split(rep, fresh)
+        assert outputs == {0: [4, 5]}
+        assert [r.rid for r in to_serve] == [1, 2]
+        assert to_serve[0].out == [8]                  # primed mid-flight
+        assert to_serve[0].first_token_at == 0.15      # TTFT survives
+        assert to_serve[1].out == []
+
+
+class TestCrashRecovery:
+    def test_crash_then_resume_matches_uninterrupted(self, ctx, tmp_path):
+        """The crash_server fault aborts the run mid-generation; a second
+        server resuming from the journal must produce, combined with the
+        journal's completed outputs, exactly the uninterrupted result."""
+        cfg = ctx["cfg"]
+        path = str(tmp_path / "serve.wal")
+        tiers = (Tier("twin_a", SPEC, BATCH), Tier("twin_b", SPEC, BATCH))
+        expect = _baseline_outs(ctx)
+
+        crash = AsyncServer(cfg, tiers=tiers, max_len=MAX_LEN, seed=0,
+                            router="slo", step_time_scale=SCALE,
+                            retry_budget=4, journal=path,
+                            chaos="crash_server@s9")
+        with pytest.raises(ServerCrashed):
+            crash.run(_load(cfg))
+        crash.journal.close()
+
+        rep = replay_journal(path)
+        assert rep.truncated == 0 and rep.records > 1
+        to_serve, outputs = resume_split(rep, _load(cfg))
+        assert len(outputs) + len(to_serve) == 12
+        resume_j = RequestJournal(path, resume=True, seed=0)
+        resume_j.seed_from(rep)
+        resumed = AsyncServer(cfg, tiers=tiers, max_len=MAX_LEN, seed=0,
+                              router="slo", step_time_scale=SCALE,
+                              retry_budget=4, journal=resume_j)
+        stats = validate_summary(resumed.run(to_serve))
+        resume_j.close()
+        assert stats["failover"]["lost"] == 0
+        got = dict(outputs)
+        got.update({r.rid: list(r.out) for r in to_serve
+                    if r.state == DONE})
+        assert got == expect
+        # in-flight requests resumed their committed prefix, not
+        # regenerated it — the journal proves which tokens pre-existed
+        primed = [r for r in to_serve if rep.committed.get(r.rid)]
+        for r in primed:
+            assert r.out[:len(rep.committed[r.rid])] == \
+                rep.committed[r.rid]
+        # the resumed journal replays to the full final picture
+        rep2 = replay_journal(path)
+        assert {k: v for k, v in rep2.completed.items()} == expect
+
+    def test_crash_without_journal_is_clean_failure(self, ctx):
+        cfg = ctx["cfg"]
+        server = AsyncServer(cfg, tiers=(Tier("twin_a", SPEC, BATCH),
+                                         Tier("twin_b", SPEC, BATCH)),
+                             max_len=MAX_LEN, seed=0,
+                             step_time_scale=SCALE,
+                             chaos="crash_server@s5")
+        with pytest.raises(ServerCrashed, match="resume"):
+            server.run(_load(cfg))
+
+
+# ---------------------------------------------------------------------------
+# tier revival (satellite: stale-estimate hygiene)
+# ---------------------------------------------------------------------------
+
+class TestReviveTier:
+    def test_revive_clears_stale_estimates(self, ctx):
+        server, cfg = ctx["server"], ctx["cfg"]
+        healthy = _load(cfg)
+        server.chaos = None
+        server.run(healthy)
+        busy = max(server.workers, key=lambda n: server.workers[n].pumps)
+        server.chaos = FaultPlan().add("kill", target=busy, after_steps=2)
+        try:
+            server.run(_load(cfg))
+        finally:
+            server.chaos = None
+        w = server.workers[busy]
+        assert not w.alive
+        server.revive_tier(busy)
+        assert w.alive and w.error is None
+        assert not w.measured        # first clean step re-feeds the
+        #                              calibrator like a fresh start
+        assert server._watchdog.ewma(busy) == 0.0   # stale EWMA forgotten
+        assert server.router.per_step[busy] == \
+            server._initial_per_step[busy]
+        assert w.step_time == server._initial_per_step[busy]
+        server.revive_tier(busy)     # idempotent on a live tier
+        stats = server.run(_load(cfg))
+        assert stats["completed"] == 12
+        assert stats["failover"]["worker_deaths"] == 0
+
+    def test_revive_unknown_tier_raises(self, ctx):
+        with pytest.raises(ValueError, match="unknown tier"):
+            ctx["server"].revive_tier("nope")
+
+
+# ---------------------------------------------------------------------------
+# summary / requeue units
+# ---------------------------------------------------------------------------
+
+class TestUnits:
+    def test_requeue_keep_tokens_preserves_output_and_ttft(self):
+        r = ServeRequest(0, [1, 2], 4, arrival=0.0)
+        r.to("PREFILL", 0.1).to("DECODE", 0.2)
+        r.out = [9]
+        r.requeue(0.3, keep_tokens=True)
+        assert r.out == [9] and r.first_token_at == 0.2
+        assert r.admitted_at is None and r.tier is None
+        assert r.ttft == pytest.approx(0.2)
+
+    def test_requeue_restart_discards_tokens(self):
+        r = ServeRequest(0, [1, 2], 4)
+        r.to("PREFILL", 0.1).to("DECODE", 0.2)
+        r.out = [9]
+        r.snapshot = object()
+        r.requeue(0.3)
+        assert r.out == [] and r.snapshot is None
+
+    def test_requeue_without_tokens_clears_first_token(self):
+        r = ServeRequest(0, [1, 2], 4)
+        r.to("PREFILL", 0.1)
+        r.requeue(0.3, keep_tokens=True)
+        assert r.first_token_at is None
+
+    def test_validate_summary_requires_ckpt_counters(self, ctx):
+        server, cfg = ctx["server"], ctx["cfg"]
+        server.chaos = None
+        stats = validate_summary(server.run(_load(cfg)))
+        bad = json.loads(json.dumps(stats))
+        del bad["failover"]["tokens_recovered"]
+        with pytest.raises(ValueError, match="tokens_recovered"):
+            validate_summary(bad)
+
+    def test_journal_metrics_registered(self):
+        g = obs_metrics.GLOSSARY
+        for name in ("repro_serve_snapshots_total",
+                     "repro_serve_restores_total",
+                     "repro_serve_tokens_recovered_total",
+                     "repro_serve_journal_records_total",
+                     "repro_serve_journal_replayed_total",
+                     "repro_serve_journal_truncated_total"):
+            assert name in g and g[name]["type"] == "counter"
