@@ -252,7 +252,10 @@ def main(argv=None) -> int:
                   f"{sum(1 for r in reqs if r.out)} in flight, "
                   f"{len(reqs)} to serve", file=sys.stderr)
         elif args.journal:
-            journal = RequestJournal(args.journal, seed=args.seed)
+            try:
+                journal = RequestJournal(args.journal, seed=args.seed)
+            except FileExistsError as e:
+                ap.error(str(e))
 
         server = AsyncServer(cfg, tiers=tiers, max_len=max_len,
                              seed=args.seed, admission=args.policy,

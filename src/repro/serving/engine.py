@@ -40,7 +40,7 @@ from repro.train.steps import make_serve_step
 
 from .ckpt import DecodeSnapshot, SnapshotMismatch
 from .metrics import dist, emit_request_trace
-from .request import ServeRequest
+from .request import QUEUED, ServeRequest
 from .scheduler import Scheduler
 from .slots import SlotAllocator
 
@@ -197,9 +197,24 @@ class ServeEngine:
                 break
             snap, req.snapshot = req.snapshot, None
             if snap is not None and self.restorable(snap) is None:
-                self.restore_slot(slot, req, snap, now)
-                admitted += 1
-                continue
+                try:
+                    self.restore_slot(slot, req, snap, now)
+                    admitted += 1
+                    continue
+                except (SnapshotMismatch, ValueError):
+                    # containment: a snapshot that fails mid-restore must
+                    # read as "re-prefill", never escalate — the request
+                    # is already off the scheduler, and an exception
+                    # escaping here would be mistaken for a death of the
+                    # healthy destination tier, losing the request
+                    # without it ever being counted
+                    if self.slots.request_at(slot) is req:
+                        self.slots.evict(slot)
+                    if req.state != QUEUED:
+                        req.requeue(now, keep_tokens=True)
+                    if obs_trace.enabled():
+                        obs_trace.instant("serve.restore_failed",
+                                          cat="serve", rid=req.rid)
             rebind = self.slots.bind(slot, req, now)
             if rebind and self._state0 is not None:
                 # recurrent state: restore this row to its initial value so
@@ -233,6 +248,13 @@ class ServeEngine:
         if req is None:
             raise ValueError(f"slot {slot} is not bound; nothing to "
                              f"snapshot")
+        if not self.slots.decode_ready(slot):
+            raise ValueError(
+                f"slot {slot} (request {req.rid}) is still "
+                f"teacher-forcing its prefix: pos "
+                f"{int(self.slots.pos[slot])} violates the snapshot "
+                f"invariant pos == len(prompt) + len(out) - 1; migrate "
+                f"it via the token-preserving re-prefill path instead")
         rows = [np.asarray(x) for x in
                 jax.tree.leaves(_slice_state_row(self.state,
                                                  jnp.int32(slot)))]
@@ -256,6 +278,15 @@ class ServeEngine:
         """None when ``snap`` can be restored bit-exactly into this
         engine, else the reason it cannot (the caller then takes the
         re-prefill path)."""
+        if not snap.out:
+            return "no committed tokens to restore"
+        if snap.pos != len(snap.prompt) + len(snap.out) - 1:
+            # e.g. a snapshot taken mid-teacher-forcing: its pos/cursor
+            # are partway through the forced prefix and bind_restored
+            # would (rightly) refuse it — re-prefill keeps the tokens
+            return (f"position invariant violated: pos {snap.pos} != "
+                    f"len(prompt) + len(out) - 1 = "
+                    f"{len(snap.prompt) + len(snap.out) - 1}")
         spec = str(self.spec) if self.spec else None
         if snap.spec != spec:
             return f"spec mismatch: snapshot {snap.spec!r} vs {spec!r}"

@@ -74,16 +74,28 @@ class RequestJournal:
     concurrently).  ``resume=True`` appends to an existing journal after
     a replay instead of truncating it — the committed-token counts are
     seeded from the replay so re-served requests do not re-journal the
-    tokens the previous process already committed."""
+    tokens the previous process already committed.
+
+    A fresh (non-resume) journal refuses to truncate an existing
+    non-empty file: after a crash the WAL is the *only* recovery
+    artifact, and silently clobbering it on a rerun without ``--resume``
+    would destroy it before it could be replayed.  Pass
+    ``overwrite=True`` to discard it deliberately."""
 
     def __init__(self, path: str, resume: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, overwrite: bool = False):
         self.path = path
         self._lock = threading.Lock()
         self._counts: Dict[int, int] = {}
         self._admitted: set = set()
         self._done: set = set()
         mode = "a" if resume and os.path.exists(path) else "w"
+        if mode == "w" and not overwrite and \
+                os.path.exists(path) and os.path.getsize(path) > 0:
+            raise FileExistsError(
+                f"journal {path!r} already exists; pass --resume to "
+                f"replay it (keeping committed tokens), or delete it / "
+                f"use overwrite=True to start over")
         self._f = open(path, mode)
         if mode == "w":
             self._append({"k": "hdr", "version": JOURNAL_VERSION,

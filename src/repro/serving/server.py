@@ -165,11 +165,16 @@ class TierWorker:
         restore it bit-exactly.  A request still in PREFILL (zero
         committed tokens) takes the plain restart path — there is
         nothing worth snapshotting and an empty snapshot artifact would
-        only be dead weight."""
+        only be dead weight.  A migrated request still teacher-forcing
+        its re-prefill (committed tokens but cursor mid-prefix) is *not*
+        snapshotted either: its pos/cursor violate the restore
+        invariant, so it keeps its tokens via re-prefill on the next
+        tier instead."""
         with self.cv:
             if snapshots:
                 for slot, req in self.engine.slots.bound():
-                    if req.out and not req.terminal:
+                    if req.out and not req.terminal and \
+                            self.engine.slots.decode_ready(slot):
                         try:
                             req.snapshot = self.engine.snapshot_slot(slot)
                         except Exception:   # noqa: BLE001 — re-prefill

@@ -78,6 +78,19 @@ class SlotAllocator:
         """(slot, request) for every occupied slot, in slot order."""
         return [(i, r) for i, r in enumerate(self._reqs) if r is not None]
 
+    def decode_ready(self, slot: int) -> bool:
+        """True when ``slot``'s occupant has finished teacher-forcing:
+        the cursor is parked at the end of the forced prefix, so the slot
+        satisfies the snapshot invariant
+        ``pos == len(prompt) + len(out) - 1``.  A migrated request still
+        re-prefilling prompt + committed output is *not* decode-ready —
+        its pos/cursor/cur are mid-forcing, and a snapshot taken now
+        could never be restored."""
+        req = self._reqs[slot]
+        if req is None:
+            return False
+        return int(self.cursor[slot]) >= len(self._forced[slot]) - 1
+
     def backlog_tokens(self) -> int:
         """Tokens still owed by bound requests (forced-prefix remainder +
         decode).  The forced prefix is prompt + committed output, so a

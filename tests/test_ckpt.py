@@ -25,8 +25,8 @@ from repro.obs import metrics as obs_metrics
 from repro.serving import (AsyncServer, DONE, DecodeSnapshot,
                            RequestJournal, ServeEngine, ServeRequest,
                            SnapshotError, SnapshotMismatch, Tier,
-                           loadgen, replay_journal, resume_split,
-                           validate_summary)
+                           TierWorker, loadgen, replay_journal,
+                           resume_split, validate_summary)
 from repro.serving.journal import _pack
 from repro.serving.scheduler import Scheduler
 
@@ -242,6 +242,64 @@ class TestEngineRestore:
         with pytest.raises(ValueError, match="not bound"):
             eng.snapshot_slot(0)
 
+    def test_mid_reprefill_slot_is_never_snapshotted(self, ctx):
+        """REVIEW regression: a migrated request re-prefilling by
+        teacher forcing has committed tokens but mid-forcing
+        pos/cursor — snapshotting it would produce an artifact that
+        passes ``restorable`` on a same-spec tier yet trips
+        ``bind_restored``'s pos invariant.  The slot must read as not
+        decode-ready, ``snapshot_slot`` must refuse it, and a
+        restore-mode drain must migrate it snapshot-free (its tokens
+        survive via re-prefill)."""
+        w = TierWorker(Tier("t", SPEC, BATCH), ctx["cfg"], MAX_LEN)
+        req = ServeRequest(0, [5, 3, 8], 6, out=[2, 4])
+        w.engine.slots.bind(0, req, 0.0)     # forced = prompt + out
+        w.engine.step()                       # one forcing step: pos=1
+        assert not w.engine.slots.decode_ready(0)
+        with pytest.raises(ValueError, match="teacher-forcing"):
+            w.engine.snapshot_slot(0)
+        assert w.engine.ckpt_stats["snapshots"] == 0
+        drained = w.drain(snapshots=True)
+        assert [r.rid for r in drained] == [0]
+        assert req.snapshot is None           # no invalid artifact
+        assert req.out == [2, 4]              # tokens still migrate
+
+    def test_restorable_rejects_invariant_violations(self, ctx):
+        eng = ctx["baseline"]
+        assert "invariant" in eng.restorable(_mini_snap(pos=3))
+        assert "no committed tokens" in eng.restorable(_mini_snap(out=[]))
+
+    def test_admit_from_contains_failed_restore(self, ctx):
+        """REVIEW regression: an error escaping the restore path inside
+        ``admit_from`` would read as a death of the healthy destination
+        tier, and the request — already popped from the scheduler,
+        bound to no slot — would vanish uncounted.  A snapshot that
+        passes ``restorable`` but fails ``restore_slot`` (here: a rid
+        mismatch) must fall back to the token-preserving re-prefill
+        bind instead."""
+        cfg = ctx["cfg"]
+        eng = ServeEngine(cfg, BATCH, MAX_LEN, seed=0, quant=SPEC)
+        sched = Scheduler("fcfs", max_len=MAX_LEN)
+        req = ServeRequest(0, [2, 7, 1], 4)
+        sched.submit(req, 0.0)
+        _step_until(eng, sched, lambda: len(req.out) == 1)
+        snap = eng.snapshot_slot(0)
+        while not req.done:
+            eng.step()
+        req2 = ServeRequest(5, [2, 7, 1], 4, out=list(snap.out))
+        req2.snapshot = snap              # snap.rid == 0 != 5
+        assert eng.restorable(snap) is None
+        sched2 = Scheduler("fcfs", max_len=MAX_LEN)
+        sched2.submit(req2, 0.0)
+        before = dict(eng.ckpt_stats)
+        assert eng.admit_from(sched2, 0.0) == 1   # must not raise
+        assert req2.snapshot is None
+        assert eng.ckpt_stats["restored"] == before["restored"]
+        assert eng.ckpt_stats["reprefilled"] == before["reprefilled"] + 1
+        while not req2.done:
+            eng.step()
+        assert req2.out == req.out        # prefix forced, tail greedy
+
 
 # ---------------------------------------------------------------------------
 # token-preserving failover (the tentpole property)
@@ -320,6 +378,91 @@ class TestRestoreFailover:
         expect = _baseline_outs(ctx)
         for r in reqs:
             assert r.out == expect[r.rid]
+
+    def test_second_death_during_cross_spec_reprefill(self, ctx,
+                                                      monkeypatch):
+        """REVIEW regression: kill the fast tier so its victims
+        re-prefill cross-spec on a quality tier, then kill that tier
+        while the migrants are still teacher-forcing.  The drain must
+        not snapshot the mid-forcing slots — such a snapshot passes
+        ``restorable`` on the same-spec survivor but violates the
+        ``bind_restored`` pos invariant, and the escaped ValueError
+        used to be booked as a death of the healthy tier, stranding
+        the request."""
+        cfg = ctx["cfg"]
+        q = QuantSpec(planes=4, impl="pallas_fused",
+                      act_quant="per_token")
+        tiers = (Tier("fast", SPEC, BATCH), Tier("qa", q, BATCH),
+                 Tier("qb", q, BATCH))
+        server = AsyncServer(cfg, tiers=tiers, max_len=MAX_LEN, seed=0,
+                             router="slo", step_time_scale=SCALE,
+                             retry_budget=6)
+        # probe 1: a fast-tier kill index whose victims carry tokens
+        # into a cross-spec re-prefill on a quality tier
+        k1 = None
+        for k in range(1, 8):
+            server.chaos = FaultPlan().add("kill", target="fast",
+                                           after_steps=k)
+            if server.run(_load(cfg))["failover"]["reprefilled"] > 0:
+                k1 = k
+                break
+        assert k1 is not None, "no fast kill produced a re-prefill"
+
+        # probe 2: find the pump window during which the migrant is
+        # still teacher-forcing on its new tier (pumps is the index of
+        # the pump that just completed; the kill poll runs *before* the
+        # next pump, so after_steps = index + 1 lands mid-window)
+        window = {}                     # tier -> pump indices mid-force
+        orig_pump = TierWorker.pump
+
+        def pump_spy(self, now, t_end=None):
+            fin = orig_pump(self, now, t_end)
+            for slot, r in self.engine.slots.bound():
+                if r.out and not r.terminal and \
+                        not self.engine.slots.decode_ready(slot):
+                    window.setdefault(self.tier.name, []).append(
+                        self.pumps)
+            return fin
+
+        monkeypatch.setattr(TierWorker, "pump", pump_spy)
+        server.chaos = FaultPlan().add("kill", target="fast",
+                                       after_steps=k1)
+        server.run(_load(cfg))
+        assert window, "no tier ever held a mid-forcing migrant"
+        target, idxs = sorted(window.items())[0]
+        k2 = min(idxs) + 1
+
+        # the regression run: second kill lands while the migrant is
+        # mid-re-prefill; the drained prefix must survive to the third
+        # tier and the survivor must never be declared dead
+        prefixes = {}                   # rid -> committed out at drain
+        orig_drain = TierWorker.drain
+
+        def drain_spy(self, snapshots=False):
+            if snapshots and self.tier.name == target:
+                for slot, r in self.engine.slots.bound():
+                    if r.out and not r.terminal and \
+                            not self.engine.slots.decode_ready(slot):
+                        prefixes[r.rid] = list(r.out)
+            return orig_drain(self, snapshots)
+
+        monkeypatch.setattr(TierWorker, "drain", drain_spy)
+        server.chaos = (FaultPlan()
+                        .add("kill", target="fast", after_steps=k1)
+                        .add("kill", target=target, after_steps=k2))
+        reqs = _load(cfg)
+        stats = validate_summary(server.run(reqs))
+        server.chaos = None
+        assert prefixes, ("second kill missed the re-prefill window — "
+                          "the probe's pump indexing drifted")
+        fo = stats["failover"]
+        assert fo["worker_deaths"] == 2     # survivor never declared dead
+        assert fo["lost"] == 0 and stats["completed"] == 12
+        assert all(r.state == DONE for r in reqs)
+        by_rid = {r.rid: r for r in reqs}
+        for rid, prefix in prefixes.items():
+            # no snapshot artifact, tokens preserved across both deaths
+            assert by_rid[rid].out[:len(prefix)] == prefix
 
     def test_migrated_ttft_preserved_in_summary(self, ctx):
         """Satellite: a migrated request's TTFT is its *original* first
@@ -442,6 +585,21 @@ class TestJournal:
             f.write(_pack({"k": "hdr", "version": 99, "seed": 0}) + "\n")
         with pytest.raises(ValueError, match="version"):
             replay_journal(path)
+
+    def test_fresh_journal_refuses_to_clobber(self, tmp_path):
+        """REVIEW regression: rerunning a crashed serve command without
+        --resume used to truncate the WAL — the only recovery artifact
+        — before it could be replayed."""
+        path = str(tmp_path / "j.jsonl")
+        with RequestJournal(path, seed=1) as j:
+            j.admit(_mk_req(0), 0.0)
+        with pytest.raises(FileExistsError, match="resume"):
+            RequestJournal(path)
+        RequestJournal(path, resume=True).close()      # resume appends
+        assert 0 in replay_journal(path).admitted
+        RequestJournal(path, overwrite=True).close()   # explicit discard
+        rep = replay_journal(path)
+        assert rep.admitted == {} and rep.records == 1   # fresh hdr
 
     def test_resume_split(self, tmp_path):
         path = str(tmp_path / "j.jsonl")
